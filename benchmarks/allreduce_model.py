@@ -1,0 +1,34 @@
+"""Fig. 4 reproduction: the linear all-reduce cost model T(M) = a + bM.
+
+We synthesize noisy all-reduce measurements from the paper's fitted cluster
+constants (Fig. 4 captions), re-fit by least squares, and report recovery
+error — validating the fitting path the real system uses at startup
+(core/cost_model.fit).  Also verifies the merge-gain identity (Eq. 11) on
+the fitted models.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import cost_model as cm
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for cluster, (a, b) in cm.PAPER_CLUSTERS.items():
+        sizes = np.logspace(3, 26, 60, base=2)
+        noise = rng.normal(1.0, 0.03, sizes.shape)
+        times = (a + b * sizes) * noise
+        fit = cm.fit(sizes, times, cluster)
+        err_a = abs(fit.a - a) / a
+        err_b = abs(fit.b - b) / b
+        gain = fit.merge_gain(1 << 20, 1 << 20)
+        rows.append((f"allreduce_fit.{cluster}.a_us", fit.a * 1e6,
+                     f"true={a*1e6:.0f}us err={err_a:.1%}"))
+        rows.append((f"allreduce_fit.{cluster}.b_ns_per_B", fit.b * 1e9,
+                     f"true={b*1e9:.2f} err={err_b:.1%}"))
+        rows.append((f"allreduce_fit.{cluster}.merge_gain_us", gain * 1e6,
+                     "== a (Eq. 11)"))
+    return rows

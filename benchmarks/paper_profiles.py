@@ -1,0 +1,59 @@
+"""Per-model tensor profiles for the paper's evaluated DNNs (Table 4).
+
+The paper evaluates CNNs (GoogleNet, ResNet-50/152, DenseNet-161/201,
+Inception-v4).  We reconstruct per-tensor (bytes, t_b) profiles from the
+published tensor counts / parameter totals / MACs (Table 4) and the
+qualitative size distribution of Fig. 5 (a large fraction of tiny BN/bias
+tensors, e.g. "ResNet-152 has 150 tensors of 1024 bytes"), with backward
+time distributed proportional to parameter count.  These drive the
+reproduction of Figs. 6-11 in the simulator.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.planner import TensorSpec
+
+# name: (num_tensors, params, macs_per_sample, batch)      (paper Table 4)
+PAPER_MODELS = {
+    "googlenet": (59, 13e6, 1.43e9, 64),
+    "resnet50": (161, 25.5e6, 3.9e9, 32),
+    "resnet152": (467, 60.1e6, 11.61e9, 128),
+    "densenet161": (484, 28.6e6, 7.85e9, 64),
+    "densenet201": (604, 20e6, 4.39e9, 64),
+    "inceptionv4": (449, 42.6e6, 6.16e9, 128),
+}
+
+# K80 single-GPU effective throughput for backward+forward, tuned so the
+# simulated iteration times land in the paper's Fig. 6-7 range.
+K80_FLOPS = 2.0e12
+V100_FLOPS = 1.2e13
+
+
+def tensor_profile(model: str, device_flops: float = K80_FLOPS,
+                   dtype_bytes: int = 4, seed: int = 0):
+    """Backward-ordered TensorSpecs for one paper model."""
+    n_tensors, n_params, macs, batch = PAPER_MODELS[model]
+    rng = np.random.default_rng(seed)
+    # Fig. 5 structure: ~60% tiny tensors (256..4096 params), ~35% medium
+    # conv kernels, ~5% big (fc / final convs).
+    n_tiny = int(n_tensors * 0.62)
+    n_med = int(n_tensors * 0.33)
+    n_big = n_tensors - n_tiny - n_med
+    tiny = rng.integers(64, 2048, n_tiny)
+    med = rng.integers(1 << 14, 1 << 19, n_med)
+    big = rng.integers(1 << 20, 1 << 22, n_big)
+    sizes = np.concatenate([tiny, med, big]).astype(float)
+    rng.shuffle(sizes)
+    sizes *= n_params / sizes.sum()                 # normalize to Table 4
+    sizes = np.maximum(sizes.astype(int), 1)
+
+    # forward+backward compute time: 3x MACs (fwd 1x, bwd 2x), 2 flops/MAC
+    t_total = 3.0 * 2.0 * macs * batch / device_flops
+    t_b_total = t_total * 2.0 / 3.0
+    t_f = t_total / 3.0
+    t_b = sizes / sizes.sum() * t_b_total
+    specs = [TensorSpec(f"{model}.t{i}", int(s) * dtype_bytes, float(t))
+             for i, (s, t) in enumerate(zip(sizes, t_b))]
+    return specs, t_f

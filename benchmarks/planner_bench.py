@@ -1,0 +1,37 @@
+"""Algorithm 1 complexity check: O(L^2), one-time cost (paper §4.2).
+
+Measures wall time of the faithful Algorithm 1 and the DP-optimal planner
+for L up to 2048 tensors — both must stay far below one training step, so
+the 'no side-effect to training performance' claim holds even for the
+largest assigned model (deepseek-67b: ~600 tensors unrolled)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import TensorSpec, plan_dp_optimal, plan_mgwfbp
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    rng = np.random.default_rng(0)
+    model = AllReduceModel(9.72e-4, 1.97e-9)
+    prev = None
+    for L in (64, 256, 1024, 2048):
+        specs = [TensorSpec(f"t{i}", int(rng.integers(256, 1 << 22)),
+                            float(rng.uniform(1e-5, 1e-3)))
+                 for i in range(L)]
+        t0 = time.perf_counter()
+        plan_mgwfbp(specs, model)
+        t1 = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        plan_dp_optimal(specs, model)
+        t2 = time.perf_counter() - t0
+        growth = "" if prev is None else f"alg1 growth x{t1/prev:.1f}"
+        prev = t1
+        rows.append((f"planner.alg1.L{L}_us", t1 * 1e6,
+                     f"dp_optimal={t2*1e6:.0f}us {growth}"))
+    return rows

@@ -1,0 +1,192 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) artifact:
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HBM_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / (links × link_bw)
+
+HLO FLOPs and collective bytes come from the trip-count-corrected parser
+(utils/hlo.py) and are *per-device* (the compiled module is one SPMD
+partition).  Gradient reductions carry an fp32-wire CPU workaround
+(comm.py), so all-reduce / reduce-scatter bytes are divided by 2 to reflect
+the bf16 wire used on the TPU target.
+
+The MEMORY term is ANALYTIC, not HLO-parsed: the CPU backend's fusion
+boundaries bear no relation to the TPU pipeline's, so HLO operand-byte sums
+overcount HBM traffic by ~2 orders of magnitude (kept in the artifact as a
+diagnostic only).  The analytic model counts, per device per step:
+
+  train   — 3 passes over local param bytes (read fwd, read bwd, optimizer
+            rw incl. moments) + activation traffic c·tokens·d_model·layers
+            (c = 12 fwd+bwd with block remat) + logits tokens·vocab·2·2B;
+  prefill — 1 param pass + activations + KV-cache write;
+  decode  — 1 param pass + full KV-cache read (+tiny writes): the classic
+            decode bandwidth bound.
+
+Hardware: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (v5e brief).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.cost_model import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                            "dryrun")
+ICI_LINKS = 2          # links usable per collective step on a 2D-torus axis
+ACT_FACTOR_TRAIN = 12.0  # activation HBM touches per token-dim, fwd+bwd
+ACT_FACTOR_FWD = 4.0
+
+
+def _analytic_memory_bytes(rec: dict) -> float:
+    """Per-device HBM bytes per step (see module docstring)."""
+    from repro.configs.base import SHAPES
+    from repro.models import registry
+
+    bundle = registry.get_arch(rec["arch"])
+    cfg = bundle.cfg
+    shape = SHAPES[rec["shape"]]
+    devices = rec.get("devices", 256)
+    mf = rec.get("model_flops", {})
+    total_params = mf.get("total_params", 0)
+    kind = rec["kind"]
+
+    # local parameter bytes: TP/EP shard the params across the model axis
+    # (and data for experts); ZeRO-3 additionally shards over data;
+    # DP-replicated leaves live whole per chip.
+    tp = 16 if bundle.parallel.tp_enabled else 1
+    ep = 16 if bundle.parallel.ep_axis else 1
+    param_local = total_params * 2.0 / (tp * ep if cfg.moe else tp)
+    if kind == "train" and bundle.parallel.zero == 3:
+        param_local /= 16  # FSDP over the data axis (gathered transiently)
+
+    dp = devices / (16 if bundle.parallel.tp_enabled else 1)
+    if kind == "train":
+        tokens_local = shape.global_batch * shape.seq_len / dp
+        opt_bytes = param_local * (6.0 if "bf" in
+                                   bundle.optimizer_state_dtype else 10.0)
+        act = ACT_FACTOR_TRAIN * tokens_local * cfg.d_model * 2.0 * \
+            max(cfg.num_layers, 1)
+        logits = tokens_local * cfg.vocab_size * 2.0 * 2.0 / tp
+        return 3.0 * param_local + opt_bytes + act + logits
+
+    # serving: batch shards over data only (model axis idle for tp_enabled
+    # small models; see EXPERIMENTS.md notes)
+    batch_local = max(shape.global_batch / min(dp, shape.global_batch), 1)
+    kv_heads = cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    attn_layers = sum(1 for i in range(cfg.num_layers)
+                      if cfg.block_kind(i)["mixer"] == "attn")
+    win_layers = sum(1 for i in range(cfg.num_layers)
+                     if cfg.block_kind(i)["window"])
+    full_layers = attn_layers - win_layers
+    win = cfg.sliding_window or shape.seq_len
+    kv_bytes = batch_local * 2 * kv_heads * (hd / tp if tp > 1 else hd) * \
+        2.0 * (full_layers * shape.seq_len + win_layers *
+               min(win, shape.seq_len))
+    if cfg.enc_dec:
+        kv_bytes *= 2  # cross-attention cache
+    if kind == "prefill":
+        tokens_local = shape.global_batch * shape.seq_len / min(
+            dp, shape.global_batch)
+        act = ACT_FACTOR_FWD * tokens_local * cfg.d_model * 2.0 * \
+            max(cfg.num_layers, 1)
+        return param_local + act + kv_bytes
+    return param_local + kv_bytes  # decode: read weights + read cache
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if not rec.get("ok"):
+        return None
+    h = rec["hlo"]
+    flops = h["flops"]
+    bytes_ = _analytic_memory_bytes(rec)
+    # bf16-wire correction: XLA:CPU promotes bf16 reductions AND MoE
+    # all-to-alls to f32 (verified against the pre-optimization StableHLO,
+    # which carries bf16 — see DESIGN.md §7.5); halve those classes.
+    promoted = (h["collective_by_type"].get("all-reduce", 0.0)
+                + h["collective_by_type"].get("reduce-scatter", 0.0)
+                + h["collective_by_type"].get("all-to-all", 0.0))
+    coll = h["collective_bytes"] - promoted / 2.0
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / (ICI_LINKS * ICI_BW_PER_LINK)
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = rec.get("model_flops", {})
+    devices = rec.get("devices", 256)
+    model_per_dev = mf.get("model_flops", 0.0) / devices
+    useful = model_per_dev / flops if flops else 0.0
+    bound = max(t_compute, t_memory, t_coll)
+    # roofline fraction: useful model compute time / achieved bound time
+    frac = (model_per_dev / PEAK_FLOPS_BF16) / bound if bound else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "strategy": rec.get("strategy", "mgwfbp"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_dev": model_per_dev, "hlo_flops_per_dev": flops,
+        "useful_ratio": useful, "roofline_fraction": frac,
+        "collective_counts": h.get("collective_count", {}),
+    }
+
+
+def load_all(art_dir: str = ARTIFACT_DIR, mesh: str | None = None,
+             strategy_suffix: bool = False) -> list[dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        base = os.path.basename(f)
+        if not strategy_suffix and base.count("__") > 2:
+            continue  # strategy-override artifacts are perf-loop only
+        rec = json.load(open(f))
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def improvement_note(row: dict) -> str:
+    d = row["dominant"]
+    if d == "collective":
+        return ("merge/overlap more of the gradient traffic or reshard to "
+                "cut resharding collectives")
+    if d == "memory":
+        return ("reduce remat recompute traffic / fuse norms-attention to "
+                "cut HBM round trips")
+    return ("cut redundant recompute (remat policy) so HLO FLOPs approach "
+            "6ND")
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+            f"| {r['t_collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.2f} |\n")
+    return "".join(out)
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = load_all(mesh="single")
+    out = []
+    for r in rows:
+        out.append((
+            f"roofline.{r['arch']}.{r['shape']}.bound_ms",
+            max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]) * 1e3,
+            f"dom={r['dominant']} frac={r['roofline_fraction']:.2f} "
+            f"useful={r['useful_ratio']:.2f}"))
+    if not out:
+        out.append(("roofline.no_artifacts", 0.0,
+                    "run launch/dryrun.py first"))
+    return out

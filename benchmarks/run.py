@@ -1,0 +1,48 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
+
+  allreduce_model  — Fig. 4   (linear all-reduce model fit)
+  tensor_dist      — Fig. 5   (tensor-size distributions)
+  nonoverlap       — Figs 6-9 (t_c^no per strategy per cluster)
+  scaling_sim      — Figs 10-11 (4..2048-worker trace simulation)
+  planner_bench    — §4.2     (O(L^2) one-time planning cost)
+  kernels_bench    — kernels  (structural tile/bandwidth notes)
+  roofline         — EXPERIMENTS.md §Roofline terms from dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (allreduce_model, kernels_bench, nonoverlap,
+                            planner_bench, roofline, scaling_sim,
+                            tensor_dist)
+    suites = [
+        ("allreduce_model", allreduce_model.run),
+        ("tensor_dist", tensor_dist.run),
+        ("nonoverlap", nonoverlap.run),
+        ("scaling_sim", scaling_sim.run),
+        ("planner_bench", planner_bench.run),
+        ("kernels_bench", kernels_bench.run),
+        ("roofline", roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn in suites:
+        try:
+            for row_name, value, derived in fn():
+                print(f"{row_name},{value:.3f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+            print(f"{name}.ERROR,0,{type(e).__name__}: {e}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

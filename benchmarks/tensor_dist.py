@@ -1,0 +1,40 @@
+"""Fig. 5 reproduction: tensor-size distributions vs the startup threshold.
+
+For each paper CNN and each assigned LM architecture, report how many
+gradient tensors are individually *latency-dominated* (transmission time <
+startup time a, i.e. bytes < a/b) on the paper's K80/10GbE cluster and on
+the TPU pod model — the structural fact that makes merging profitable.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks.paper_profiles import PAPER_MODELS, tensor_profile
+from repro.core import cost_model as cm
+from repro.core.bucketer import leaf_metadata
+from repro.models import registry
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    a, b = cm.PAPER_CLUSTERS["cluster1_k80_10gbe"]
+    thresh = a / b
+    for model in PAPER_MODELS:
+        specs, _ = tensor_profile(model)
+        small = sum(1 for s in specs if s.nbytes < thresh)
+        rows.append((f"tensor_dist.{model}.n_tensors", len(specs),
+                     f"{small} latency-dominated (<{thresh/1e6:.1f}MB) "
+                     f"= {small/len(specs):.0%}"))
+    tpu = cm.production_comm_model((16, 16), ("data", "model"))
+    tpu_thresh = tpu.a / tpu.b if tpu.b else 0
+    for arch in registry.list_archs():
+        bundle = registry.get_arch(arch)
+        shapes = jax.eval_shape(
+            lambda bb=bundle: bb.model().init(jax.random.PRNGKey(0)))
+        metas = leaf_metadata(shapes)
+        small = sum(1 for m in metas if m.nbytes < tpu_thresh)
+        rows.append((f"tensor_dist.{arch}.n_tensors", len(metas),
+                     f"{small} latency-dominated on TPU pod "
+                     f"(<{tpu_thresh/1e3:.0f}KB)"))
+    return rows

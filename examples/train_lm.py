@@ -1,0 +1,80 @@
+"""End-to-end training driver: a small LM trained for a few hundred steps
+on CPU through the full production substrate — MG-WFBP-planned gradient
+buckets, AdamW, deterministic data pipeline, async checkpointing, and
+fault-tolerant step loop.
+
+    PYTHONPATH=src python examples/train_lm.py                 # ~25M params
+    PYTHONPATH=src python examples/train_lm.py --arch xlstm-125m --full
+
+The loss should fall from ~ln(V) to well below it within ~200 steps (the
+synthetic stream has learnable n-gram structure).
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataPipeline
+from repro.models import registry
+from repro.train import checkpoint, fault
+from repro.train.step import build_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (slow on CPU)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_example_ckpt")
+    args = ap.parse_args()
+
+    bundle = (registry.get_arch(args.arch) if args.full else
+              registry.reduced_arch(args.arch,
+                                    num_layers=4, d_model=256, num_heads=4,
+                                    d_ff=512, vocab_size=2048))
+    par = dataclasses.replace(bundle.parallel, dp_axes=(), ep_axis="",
+                              attn_chunk=64)
+    shape = ShapeConfig("example", "train", args.seq, args.batch)
+    run = dataclasses.replace(bundle.run_config("train_4k", par),
+                              shape=shape, microbatch=0,
+                              learning_rate=args.lr)
+    model = bundle.model(par)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    step_fn, init_fn, art = build_train_step(model, run, mesh)
+    state = init_fn(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"{bundle.cfg.name}: {n/1e6:.1f}M params, plan="
+          f"{art.plan.strategy} ({art.plan.num_buckets} buckets / "
+          f"{art.plan.num_tensors} tensors)")
+
+    pipe = DataPipeline(bundle.cfg, shape, seed=0)
+    ck = checkpoint.AsyncCheckpointer(args.ckpt_dir)
+    jstep = jax.jit(step_fn, donate_argnums=0)
+    hist = []
+
+    def on_metrics(step, metrics, dt):
+        hist.append(float(metrics["loss"]))
+        if step % 20 == 0:
+            print(f"step {step:4d} loss={hist[-1]:7.4f} "
+                  f"gnorm={float(metrics['grad_norm']):6.2f} "
+                  f"{dt*1e3:6.0f} ms/step", flush=True)
+
+    t0 = time.time()
+    state, final = fault.run_with_recovery(
+        jstep, state, pipe, ck, 0, args.steps, ckpt_every=100,
+        on_metrics=on_metrics)
+    print(f"\n{final} steps in {time.time()-t0:.0f}s; "
+          f"loss {hist[0]:.3f} -> {min(hist):.3f} "
+          f"({'LEARNED' if min(hist) < hist[0] - 0.5 else 'check lr'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Per-architecture configuration modules + shared schema."""
+from repro.configs.base import (ModelConfig, MoEConfig, MambaConfig,
+                                ParallelConfig, RunConfig, ShapeConfig,
+                                SHAPES, reduced)

@@ -1,0 +1,33 @@
+"""arctic-480b — 128-expert top-2 MoE with a dense FFN residual.
+[hf:Snowflake/snowflake-arctic-base; hf]
+
+35L, d_model 7168, 56 heads (GQA kv=8, head_dim 128), d_ff 4864 (both the
+dense residual and each expert), vocab 32000.  ~470B total params: experts
+are 2-D sharded (expert dim over the data axis × hidden over the model
+axis) and optimizer moments are kept in bf16 so the full training state
+fits 16 GB/chip on the 256-chip pod (see EXPERIMENTS.md §Dry-run).
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b",
+    family="moe",
+    num_layers=35,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=4864,
+    vocab_size=32000,
+    act="swiglu",
+    rope_theta=1e4,
+    moe=MoEConfig(num_experts=128, top_k=2, d_expert=4864),
+    dense_residual=True,
+)
+
+PARALLEL = ParallelConfig(zero=1, ep_axis="data")
+MICROBATCH = {"train_4k": 1}
+OPTIMIZER_STATE_DTYPE = "bfloat16"
+SKIP_SHAPES = {"long_500k": "pure full-attention arch: 524k decode is not "
+                            "sub-quadratic-servable (DESIGN.md §5)"}

@@ -1,0 +1,28 @@
+"""deepseek-67b — llama-architecture dense GQA. [arXiv:2401.02954; hf]
+
+95L, d_model 8192, 64 heads (GQA kv=8, head_dim 128), d_ff 22016,
+vocab 102400.  67B params do not fit DP-replicated on 16 GB v5e chips:
+trains with FSDP (zero=3) — per-layer merged parameter all-gathers whose
+schedule reuses the MG-WFBP plan machinery.
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b",
+    family="dense",
+    num_layers=95,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=22016,
+    vocab_size=102400,
+    act="swiglu",
+    rope_theta=1e4,
+)
+
+PARALLEL = ParallelConfig(zero=3)
+MICROBATCH = {"train_4k": 1}
+SKIP_SHAPES = {"long_500k": "pure full-attention arch: 524k decode is not "
+                            "sub-quadratic-servable (DESIGN.md §5)"}

@@ -1,0 +1,33 @@
+"""deepseek-moe-16b — fine-grained MoE: 64 routed top-6 + 2 shared experts.
+[arXiv:2401.06066; hf]
+
+28L, d_model 2048, 16 heads (kv=16, head_dim 128), expert d_ff 1408,
+vocab 102400.  Layer 0 is a dense FFN (d_ff 10944, faithful to the release);
+layers 1..27 route over 64 experts (top-6) with 2 always-on shared experts.
+Experts are expert-parallel over the data axis (owned, no DP all-reduce);
+the MG-WFBP plan covers the replicated attention/shared tensors.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=10944,              # layer-0 dense FFN
+    vocab_size=102400,
+    act="swiglu",
+    rope_theta=1e4,
+    moe=MoEConfig(num_experts=64, top_k=6, d_expert=1408,
+                  num_shared_experts=2, shared_d_expert=1408),
+    moe_skip_first=1,
+)
+
+PARALLEL = ParallelConfig(zero=1, ep_axis="data")
+MICROBATCH = {"train_4k": 8}
+SKIP_SHAPES = {"long_500k": "pure full-attention arch: 524k decode is not "
+                            "sub-quadratic-servable (DESIGN.md §5)"}

@@ -1,0 +1,31 @@
+"""gemma3-12b — dense GQA, 5:1 local:global attention, 128k context.
+[hf:google/gemma-3-1b-pt; unverified]
+
+48L, d_model 3840, 16 heads (GQA kv=8, head_dim 256), d_ff 15360,
+vocab 262144.  Local layers use a 1024-token sliding window (ring-buffer KV
+cache); every 6th layer is global.  long_500k RUNS for this arch: local
+layers are windowed, only the 8 global layers carry full-length KV.
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-12b",
+    family="dense",
+    num_layers=48,
+    d_model=3840,
+    num_heads=16,
+    num_kv_heads=8,
+    head_dim=256,
+    d_ff=15360,
+    vocab_size=262144,
+    tie_embeddings=True,
+    act="swiglu",
+    rope_theta=1e6,
+    sliding_window=1024,
+    global_interval=6,
+)
+
+PARALLEL = ParallelConfig(zero=1, seq_shard_decode=True)
+MICROBATCH = {"train_4k": 4}
+SKIP_SHAPES = {}

@@ -1,0 +1,34 @@
+"""jamba-v0.1-52b — Mamba + attention 1:7 hybrid with 16-expert MoE.
+[arXiv:2403.19887; hf]
+
+32L, d_model 4096, 32 heads (GQA kv=8, head_dim 128), d_ff 14336,
+vocab 65536.  One attention layer per 8 (position 4 of each period), MoE
+(16 routed experts, top-2) on every other layer.  Heterogeneous per-layer
+backward times make its MG-WFBP plan the most structured of the pool.
+long_500k RUNS (hybrid: only 4 layers carry full-length KV).
+"""
+
+from repro.configs.base import (MambaConfig, ModelConfig, MoEConfig,
+                                ParallelConfig)
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=65536,
+    act="swiglu",
+    rope_theta=1e4,
+    moe=MoEConfig(num_experts=16, top_k=2, d_expert=14336),
+    moe_interval=2,
+    attn_interval=8,
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+)
+
+PARALLEL = ParallelConfig(zero=1, ep_axis="data")
+MICROBATCH = {"train_4k": 2}
+SKIP_SHAPES = {}

@@ -1,0 +1,31 @@
+"""phi-3-vision-4.2b — phi3-mini backbone + CLIP frontend (stub).
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+
+32L, d_model 3072, 32 heads (kv=32, head_dim 96), d_ff 8192, vocab 32064.
+The vision tower is a STUB per the assignment: ``input_specs`` provides 576
+precomputed patch embeddings ([B, 576, d_model]) prepended to the text
+stream; loss is masked over the image prefix.
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    num_layers=32,
+    d_model=3072,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    act="swiglu",
+    rope_theta=1e4,
+    frontend="vision",
+    frontend_prefix_len=576,
+)
+
+PARALLEL = ParallelConfig(zero=1)
+MICROBATCH = {"train_4k": 4}
+SKIP_SHAPES = {"long_500k": "pure full-attention arch: 524k decode is not "
+                            "sub-quadratic-servable (DESIGN.md §5)"}

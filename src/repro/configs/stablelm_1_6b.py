@@ -1,0 +1,26 @@
+"""stablelm-1.6b — dense MHA (kv == heads).
+[hf:stabilityai/stablelm-2-1_6b; unverified]
+
+24L, d_model 2048, 32 heads (kv=32, head_dim 64), d_ff 5632, vocab 100352.
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family="dense",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=5632,
+    vocab_size=100352,
+    act="swiglu",
+    rope_theta=1e4,
+)
+
+PARALLEL = ParallelConfig(zero=1, tp_enabled=False)
+MICROBATCH = {"train_4k": 8}
+SKIP_SHAPES = {"long_500k": "pure full-attention arch: 524k decode is not "
+                            "sub-quadratic-servable (DESIGN.md §5)"}

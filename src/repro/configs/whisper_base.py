@@ -1,0 +1,34 @@
+"""whisper-base — encoder-decoder with conv audio frontend (STUB).
+[arXiv:2212.04356; unverified]
+
+6 enc + 6 dec layers, d_model 512, 8 heads (kv=8, head_dim 64), d_ff 2048,
+vocab 51865.  The conv frontend is a stub per the assignment:
+``input_specs`` provides precomputed frame embeddings [B, S_enc, d_model].
+Assigned shapes treat seq_len as both the encoder frame count and the
+decoder KV length — a structural stress test; the real model caps at
+1500 frames / 448 decoder positions (DESIGN.md §5).
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="audio",
+    num_layers=6,              # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    head_dim=64,
+    d_ff=2048,
+    vocab_size=51865,
+    act="gelu",
+    rope_theta=1e4,
+    enc_dec=True,
+    enc_layers=6,
+    frontend="audio",
+)
+
+PARALLEL = ParallelConfig(zero=0, tp_enabled=False)
+MICROBATCH = {}
+SKIP_SHAPES = {"long_500k": "enc-dec audio arch: 524k decode inapplicable "
+                            "(30 s context; DESIGN.md §5)"}

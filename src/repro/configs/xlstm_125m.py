@@ -1,0 +1,26 @@
+"""xlstm-125m — sLSTM + mLSTM recurrent blocks. [arXiv:2405.04517; unverified]
+
+12L, d_model 768, 4 heads, vocab 50304, d_ff=0 (blocks carry their own
+projections).  Every 6th block is sLSTM (sequential scalar memory), the
+rest mLSTM (chunkwise-parallel matrix memory).  Many tiny tensors — the
+paper's Fig. 5 regime where gradient merging wins most.  long_500k RUNS
+(O(1) recurrent state, no KV cache).
+"""
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-125m",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    xlstm_slstm_interval=6,
+)
+
+PARALLEL = ParallelConfig(zero=0, tp_enabled=False)
+MICROBATCH = {}
+SKIP_SHAPES = {}

@@ -1,0 +1,34 @@
+"""MG-WFBP core: cost models, merge planners, pipeline simulator, bucketed
+collectives.  This package is the paper's contribution."""
+
+from repro.core.cost_model import (
+    AllReduceModel,
+    HierarchicalModel,
+    make_model,
+    fit,
+    production_comm_model,
+    PAPER_CLUSTERS,
+)
+from repro.core.planner import (
+    TensorSpec,
+    MergePlan,
+    make_plan,
+    plan_wfbp,
+    plan_single,
+    plan_fixed_size,
+    plan_mgwfbp,
+    plan_dp_optimal,
+    plan_brute_force,
+    replan,
+)
+from repro.core.simulator import simulate, speedup, compare_strategies, SimResult
+from repro.core import bucketer, comm, profiler
+
+__all__ = [
+    "AllReduceModel", "HierarchicalModel", "make_model", "fit",
+    "production_comm_model", "PAPER_CLUSTERS",
+    "TensorSpec", "MergePlan", "make_plan", "plan_wfbp", "plan_single",
+    "plan_fixed_size", "plan_mgwfbp", "plan_dp_optimal", "plan_brute_force",
+    "replan", "simulate", "speedup", "compare_strategies", "SimResult",
+    "bucketer", "comm", "profiler",
+]

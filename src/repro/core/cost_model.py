@@ -1,0 +1,252 @@
+"""All-reduce cost models (paper Table 2) and TPU interconnect models.
+
+The paper models a single all-reduce of M bytes as
+
+    T_ar(M) = a + b * M                                           (Eq. 10)
+
+where ``a`` (startup / latency term) and ``b`` (per-byte term) derive from
+the collective algorithm and the point-to-point link parameters:
+
+    alpha : point-to-point latency (s)
+    beta  : point-to-point transfer time per byte (s/B)
+    gamma : reduction (summation) time per byte on one node (s/B)
+
+Table 2 of the paper gives (a, b) for five classic algorithms.  We implement
+all five, a least-squares fitter that recovers (a, b) from measured
+(size, time) samples (paper Fig. 4), and a two-level hierarchical model for
+TPU pods where the intra-pod ICI and the inter-pod DCN links have very
+different (alpha, beta).
+
+The key property exploited by MG-WFBP (paper Eq. 11) is super-additivity of
+the startup term:
+
+    T_ar(M1) + T_ar(M2) = 2a + b(M1+M2) > a + b(M1+M2) = T_ar(M1+M2)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Hardware constants for the TPU v5e target (per the roofline brief).
+# ---------------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12      # per chip, FLOP/s
+HBM_BW = 819e9                # per chip, B/s
+ICI_BW_PER_LINK = 50e9        # B/s per ICI link
+ICI_ALPHA = 1e-6              # ~1 us per-hop startup on ICI
+DCN_BW = 25e9                 # B/s effective per host across pods
+DCN_ALPHA = 2.5e-4            # ~250 us startup for a cross-pod collective
+
+# Paper-measured cluster constants (Fig. 4), used by the reproduction
+# benchmarks.  (a in seconds, b in seconds/byte.)
+PAPER_CLUSTERS = {
+    # 8-node K80, 10GbE
+    "cluster1_k80_10gbe": (9.72e-4, 1.97e-9),
+    # 4-node V100, 10GbE
+    "cluster2_v100_10gbe": (9.08e-4, 7.40e-10),
+    # 4-node V100, 56Gb InfiniBand
+    "cluster3_v100_ib": (2.36e-4, 4.06e-10),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AllReduceModel:
+    """Linear all-reduce cost model ``T(M) = a + b * M`` (Eq. 10)."""
+
+    a: float            # startup time, seconds
+    b: float            # per-byte time, seconds/byte
+    name: str = "linear"
+
+    def __post_init__(self):
+        if self.a < 0 or self.b < 0:
+            raise ValueError(f"negative cost model parameters: a={self.a} b={self.b}")
+
+    def time(self, nbytes: float) -> float:
+        """Cost of all-reducing a message of ``nbytes`` bytes."""
+        if nbytes <= 0:
+            return 0.0
+        return self.a + self.b * float(nbytes)
+
+    def merge_gain(self, nbytes_1: float, nbytes_2: float) -> float:
+        """Time saved by merging two messages into one (== a; Eq. 11/21)."""
+        if nbytes_1 <= 0 or nbytes_2 <= 0:
+            return 0.0
+        return self.time(nbytes_1) + self.time(nbytes_2) - self.time(
+            nbytes_1 + nbytes_2)
+
+    def scaled(self, factor: float) -> "AllReduceModel":
+        return AllReduceModel(self.a * factor, self.b * factor, self.name)
+
+
+# ---------------------------------------------------------------------------
+# Table 2: (a, b) per collective algorithm.
+# ---------------------------------------------------------------------------
+
+def _log2(n: int) -> float:
+    if n < 1:
+        raise ValueError(f"need >= 1 workers, got {n}")
+    return math.log2(n)
+
+
+def binary_tree(n: int, alpha: float, beta: float, gamma: float) -> AllReduceModel:
+    """Binary tree all-reduce [Rabenseifner'04]."""
+    lg = _log2(n)
+    return AllReduceModel(2 * alpha * lg, (2 * beta + gamma) * lg, "binary_tree")
+
+
+def recursive_doubling(n: int, alpha: float, beta: float, gamma: float) -> AllReduceModel:
+    lg = _log2(n)
+    return AllReduceModel(alpha * lg, (beta + gamma) * lg, "recursive_doubling")
+
+
+def recursive_halving_doubling(n: int, alpha: float, beta: float,
+                               gamma: float) -> AllReduceModel:
+    lg = _log2(n)
+    b = 2 * beta - (2 * beta + gamma) / n + gamma
+    return AllReduceModel(2 * alpha * lg, b, "recursive_halving_doubling")
+
+
+def double_binary_trees(n: int, alpha: float, beta: float,
+                        gamma: float) -> AllReduceModel:
+    """Double binary trees [Sanders'09] — NCCL >= 2.4 default at scale."""
+    lg = _log2(n)
+    return AllReduceModel(2 * alpha * lg, beta + gamma, "double_binary_trees")
+
+
+def ring(n: int, alpha: float, beta: float, gamma: float) -> AllReduceModel:
+    """Ring all-reduce — bandwidth optimal, latency linear in N."""
+    if n == 1:
+        return AllReduceModel(0.0, 0.0, "ring")
+    b = 2 * (n - 1) / n * beta + (n - 1) / n * gamma
+    return AllReduceModel(2 * (n - 1) * alpha, b, "ring")
+
+
+ALGORITHMS = {
+    "binary_tree": binary_tree,
+    "recursive_doubling": recursive_doubling,
+    "recursive_halving_doubling": recursive_halving_doubling,
+    "double_binary_trees": double_binary_trees,
+    "ring": ring,
+}
+
+
+def make_model(algorithm: str, n: int, alpha: float, beta: float,
+               gamma: float = 0.0) -> AllReduceModel:
+    try:
+        fn = ALGORITHMS[algorithm]
+    except KeyError:
+        raise ValueError(
+            f"unknown all-reduce algorithm {algorithm!r}; "
+            f"choose from {sorted(ALGORITHMS)}") from None
+    return fn(n, alpha, beta, gamma)
+
+
+# ---------------------------------------------------------------------------
+# Model fitting (paper Fig. 4: measure all-reduce time vs message size, fit
+# the linear model by least squares).
+# ---------------------------------------------------------------------------
+
+def fit(sizes_bytes: Sequence[float], times_s: Sequence[float],
+        name: str = "fitted") -> AllReduceModel:
+    """Least-squares fit of T(M) = a + b*M from measurements.
+
+    Negative intercepts (possible with noisy small-size samples) are clamped
+    to zero since a < 0 is non-physical and breaks the merge logic.
+    """
+    sizes = np.asarray(sizes_bytes, dtype=np.float64)
+    times = np.asarray(times_s, dtype=np.float64)
+    if sizes.shape != times.shape or sizes.ndim != 1 or sizes.size < 2:
+        raise ValueError("need >= 2 paired (size, time) samples")
+    A = np.stack([np.ones_like(sizes), sizes], axis=1)
+    (a, b), *_ = np.linalg.lstsq(A, times, rcond=None)
+    return AllReduceModel(max(float(a), 0.0), max(float(b), 0.0), name)
+
+
+# ---------------------------------------------------------------------------
+# TPU-specific models.
+# ---------------------------------------------------------------------------
+
+def tpu_ici_ring(axis_size: int, *, bw_per_link: float = ICI_BW_PER_LINK,
+                 alpha: float = ICI_ALPHA, bidirectional: bool = True,
+                 gamma: float = 0.0) -> AllReduceModel:
+    """Ring all-reduce over one ICI mesh axis.
+
+    A TPU torus axis provides one link per direction; the bidirectional ring
+    all-reduce streams both directions, doubling effective bandwidth.
+    """
+    eff_bw = bw_per_link * (2.0 if bidirectional else 1.0)
+    m = ring(axis_size, alpha, 1.0 / eff_bw, gamma)
+    return AllReduceModel(m.a, m.b, "tpu_ici_ring")
+
+
+def tpu_dcn(pods: int, *, bw: float = DCN_BW, alpha: float = DCN_ALPHA,
+            gamma: float = 0.0) -> AllReduceModel:
+    """Cross-pod (DCN) all-reduce: high-latency, lower-bandwidth level."""
+    m = ring(pods, alpha, 1.0 / bw, gamma)
+    return AllReduceModel(m.a, m.b, "tpu_dcn")
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchicalModel:
+    """Two-level all-reduce: reduce-scatter intra-pod, all-reduce across
+    pods on the 1/intra_size shard, all-gather intra-pod.
+
+    Still linear in M, so it exposes the same (a, b) interface — this is what
+    lets the *unmodified* MG-WFBP planner consume multi-pod topologies, which
+    is our beyond-paper extension (the paper assumes a flat single-level
+    model).
+    """
+
+    intra: AllReduceModel       # ICI level (cost of full all-reduce intra)
+    inter: AllReduceModel       # DCN level
+    intra_size: int             # chips per pod participating in level 1
+
+    @property
+    def a(self) -> float:
+        # RS + AG each cost ~half of a full all-reduce's bandwidth term but
+        # pay the full startup; inter level pays its own startup.
+        return self.intra.a + self.inter.a
+
+    @property
+    def b(self) -> float:
+        return self.intra.b + self.inter.b / max(self.intra_size, 1)
+
+    @property
+    def name(self) -> str:  # pragma: no cover - trivial
+        return "hierarchical"
+
+    def time(self, nbytes: float) -> float:
+        if nbytes <= 0:
+            return 0.0
+        return self.a + self.b * float(nbytes)
+
+    def flat(self) -> AllReduceModel:
+        """Collapse to a flat linear model for the planner."""
+        return AllReduceModel(self.a, self.b, "hierarchical")
+
+
+def production_comm_model(mesh_shape: Sequence[int],
+                          mesh_axis_names: Sequence[str],
+                          dp_axes: Sequence[str] = ("pod", "data"),
+                          algorithm: str = "ring") -> AllReduceModel:
+    """Build the gradient all-reduce cost model for a production mesh.
+
+    Single-pod meshes use the ICI model over the data axis; multi-pod meshes
+    compose ICI (data axis) with DCN (pod axis) hierarchically.
+    """
+    dims = dict(zip(mesh_axis_names, mesh_shape))
+    data = dims.get("data", 1)
+    pods = dims.get("pod", 1)
+    if "data" not in dp_axes:
+        data = 1
+    if "pod" not in dp_axes:
+        pods = 1
+    intra = tpu_ici_ring(data) if data > 1 else AllReduceModel(0.0, 0.0, "noop")
+    if pods <= 1:
+        return AllReduceModel(intra.a, intra.b, "tpu_ici_ring")
+    inter = tpu_dcn(pods)
+    return HierarchicalModel(intra=intra, inter=inter, intra_size=data).flat()

@@ -1,0 +1,305 @@
+"""Gradient-merge planners: the paper's Algorithm 1 plus baselines.
+
+Terminology bridge
+------------------
+The paper indexes layers ``L .. 1`` with backward propagation running from
+layer L down to layer 1; a *merged-gradient layer* ``l`` postpones its
+communication and merges into ``l-1`` (the tensor produced *after* it during
+backward).  We index tensors in **backward production order**: index 0 is the
+first gradient produced (the paper's layer L), index ``L-1`` the last (the
+paper's layer 1).  A plan is then a partition of ``0..L-1`` into contiguous
+*buckets*; every tensor of a bucket except the last is a merged-gradient
+layer, and the bucket's all-reduce may start when
+
+  (1) the last tensor's gradient has been produced, and
+  (2) the previous bucket's all-reduce has finished           (paper Eq. 7)
+
+Planners
+--------
+* ``plan_wfbp``        — one bucket per tensor (WFBP baseline, Fig. 1b).
+* ``plan_single``      — one bucket for everything (SyncEASGD, Fig. 1c).
+* ``plan_fixed_size``  — PyTorch-DDP style byte-capped buckets (beyond-paper
+                         baseline).
+* ``plan_mgwfbp``      — the paper's Algorithm 1, faithful O(L^2).
+* ``plan_dp_optimal``  — beyond-paper O(L^2) dynamic program that provably
+                         minimizes the final communication finish time.
+* ``plan_brute_force`` — exhaustive 2^(L-1) search (testing only).
+
+All planners consume a list of :class:`TensorSpec` (backward order) and a
+cost model exposing ``a``, ``b`` and ``time(nbytes)`` (see
+``cost_model.AllReduceModel``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Sequence
+
+from repro.core.cost_model import AllReduceModel
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """One gradient tensor as seen by the communication scheduler."""
+
+    name: str
+    nbytes: int        # bytes to all-reduce for this tensor
+    t_b: float         # backward compute time that produces this gradient (s)
+
+    def __post_init__(self):
+        if self.nbytes < 0 or self.t_b < 0:
+            raise ValueError(f"negative spec: {self}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MergePlan:
+    """A partition of backward-ordered tensors into contiguous buckets."""
+
+    buckets: tuple[tuple[int, ...], ...]
+    strategy: str = "custom"
+
+    def __post_init__(self):
+        flat = [i for b in self.buckets for i in b]
+        if flat != list(range(len(flat))):
+            raise ValueError(
+                f"buckets must be a contiguous partition of 0..L-1, got {self.buckets}")
+        if any(len(b) == 0 for b in self.buckets):
+            raise ValueError("empty bucket")
+
+    @property
+    def num_tensors(self) -> int:
+        return sum(len(b) for b in self.buckets)
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.buckets)
+
+    def bucket_of(self) -> list[int]:
+        """tensor index -> bucket index."""
+        out = [0] * self.num_tensors
+        for k, b in enumerate(self.buckets):
+            for i in b:
+                out[i] = k
+        return out
+
+    def merged_flags(self) -> list[bool]:
+        """Per-tensor flag: True iff the tensor is a merged-gradient layer
+        (i.e. NOT the last element of its bucket).  Matches the paper's
+        ``m[l] == l_m`` with the index order reversed."""
+        flags = []
+        for b in self.buckets:
+            flags.extend([True] * (len(b) - 1) + [False])
+        return flags
+
+    def bucket_bytes(self, specs: Sequence[TensorSpec]) -> list[int]:
+        return [sum(specs[i].nbytes for i in b) for b in self.buckets]
+
+    @staticmethod
+    def from_boundaries(num_tensors: int, last_indices: Sequence[int],
+                        strategy: str = "custom") -> "MergePlan":
+        """Build from the sorted list of bucket-final tensor indices."""
+        last = sorted(set(last_indices))
+        if not last or last[-1] != num_tensors - 1:
+            raise ValueError("final tensor must close a bucket")
+        buckets, start = [], 0
+        for e in last:
+            buckets.append(tuple(range(start, e + 1)))
+            start = e + 1
+        return MergePlan(tuple(buckets), strategy)
+
+    @staticmethod
+    def from_merged_flags(flags: Sequence[bool], strategy: str = "custom") -> "MergePlan":
+        last = [i for i, f in enumerate(flags) if not f]
+        if flags and flags[-1]:
+            # last tensor can never be merged "forward"; force it to close.
+            last.append(len(flags) - 1)
+        return MergePlan.from_boundaries(len(flags), last, strategy)
+
+
+# ---------------------------------------------------------------------------
+# Baselines.
+# ---------------------------------------------------------------------------
+
+def plan_wfbp(specs: Sequence[TensorSpec]) -> MergePlan:
+    """Per-tensor communication (WFBP)."""
+    return MergePlan(tuple((i,) for i in range(len(specs))), "wfbp")
+
+
+def plan_single(specs: Sequence[TensorSpec]) -> MergePlan:
+    """Single merged communication (SyncEASGD)."""
+    return MergePlan((tuple(range(len(specs))),), "single")
+
+
+def plan_fixed_size(specs: Sequence[TensorSpec], cap_bytes: int) -> MergePlan:
+    """PyTorch-DDP-style bucketing: close a bucket once it reaches cap."""
+    if cap_bytes <= 0:
+        raise ValueError("cap_bytes must be positive")
+    last, acc = [], 0
+    for i, s in enumerate(specs):
+        acc += s.nbytes
+        if acc >= cap_bytes:
+            last.append(i)
+            acc = 0
+    if not last or last[-1] != len(specs) - 1:
+        last.append(len(specs) - 1)
+    return MergePlan.from_boundaries(len(specs), last, f"fixed:{cap_bytes}")
+
+
+# ---------------------------------------------------------------------------
+# Paper Algorithm 1 (faithful).
+# ---------------------------------------------------------------------------
+
+def _comm_starts(t_c: list[float], t_b_end: list[float]) -> list[float]:
+    """Paper's CALCULATECOMMSTART in backward-order indexing (Eq. 7).
+
+    ``t_b_end[i]`` is the timestamp when tensor i's gradient is ready;
+    communication i starts at max(previous comm end, ready time).
+    """
+    L = len(t_c)
+    tau_c = [0.0] * L
+    tau_c[0] = t_b_end[0]
+    for i in range(1, L):
+        tau_c[i] = max(tau_c[i - 1] + t_c[i - 1], t_b_end[i])
+    return tau_c
+
+
+def plan_mgwfbp(specs: Sequence[TensorSpec], model: AllReduceModel) -> MergePlan:
+    """The paper's Algorithm 1: optimal merged-gradient assignment.
+
+    Faithful O(L^2) implementation.  Iterates tensors in backward order
+    (paper: ``for l = L -> 2``); tensor i becomes a merged-gradient layer iff
+
+        t_b_end[i+1] - tau_c[i] < a                         (paper Eq. 38)
+
+    where ``t_b_end[i+1]`` is when the *next* tensor's gradient is ready and
+    ``tau_c[i]`` is when tensor i's communication could start.  After each
+    merge the communication start times are recomputed (paper line 13).
+    """
+    L = len(specs)
+    if L == 0:
+        return MergePlan((), "mgwfbp")
+    a = model.a
+    p = [float(s.nbytes) for s in specs]
+    t_c = [model.time(x) for x in p]
+    # Gradient-ready timestamps (backward start == 0):
+    t_b_end, acc = [], 0.0
+    for s in specs:
+        acc += s.t_b
+        t_b_end.append(acc)
+
+    merged = [False] * L
+    tau_c = _comm_starts(t_c, t_b_end)
+    for i in range(L - 1):              # paper: l = L..2 (tensor i merges into i+1)
+        if t_b_end[i + 1] - tau_c[i] < a:
+            merged[i] = True
+            # paper MERGE(): zero out this comm, grow the next one.
+            p[i + 1] += p[i]
+            p[i] = 0.0
+            t_c[i] = 0.0
+            t_c[i + 1] = model.time(p[i + 1])
+            tau_c = _comm_starts(t_c, t_b_end)
+    return MergePlan.from_merged_flags(merged, "mgwfbp")
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: provably optimal DP and exhaustive search.
+# ---------------------------------------------------------------------------
+
+def plan_dp_optimal(specs: Sequence[TensorSpec], model: AllReduceModel) -> MergePlan:
+    """O(L^2) dynamic program minimizing the final all-reduce finish time.
+
+    Let ``f[i]`` be the minimum finish time of all communications covering
+    tensors ``0..i`` given tensor i closes a bucket.  Buckets are contiguous,
+    and a bucket (j+1..i) may start at max(f[j], ready[i]):
+
+        f[i] = min_{j<i} max(f[j], ready[i]) + T(bytes[j+1..i])
+
+    Because every plan's iteration time is ``t_f + max(f[L-1], ready[L-1])``
+    and ``f[L-1] >= ready[L-1]`` always, minimizing f[L-1] minimizes the
+    iteration time — this gives a certified-optimal reference for Algorithm 1
+    (see tests/test_planner.py) and is the planner we ship as default.
+    """
+    L = len(specs)
+    if L == 0:
+        return MergePlan((), "dp_optimal")
+    ready, acc = [], 0.0
+    for s in specs:
+        acc += s.t_b
+        ready.append(acc)
+    pre = [0] * (L + 1)   # prefix bytes
+    for i, s in enumerate(specs):
+        pre[i + 1] = pre[i] + s.nbytes
+
+    NEG = -1
+    f = [float("inf")] * L
+    parent = [NEG] * L
+    for i in range(L):
+        # bucket = (0..i)
+        f[i] = ready[i] + model.time(pre[i + 1])
+        parent[i] = NEG
+        for j in range(i):
+            cand = max(f[j], ready[i]) + model.time(pre[i + 1] - pre[j + 1])
+            if cand < f[i] - 1e-15:
+                f[i] = cand
+                parent[i] = j
+    last, i = [], L - 1
+    while i != NEG:
+        last.append(i)
+        i = parent[i]
+    return MergePlan.from_boundaries(L, sorted(last), "dp_optimal")
+
+
+def plan_brute_force(specs: Sequence[TensorSpec], model: AllReduceModel) -> MergePlan:
+    """Exhaustive search over all 2^(L-1) contiguous partitions (tests only)."""
+    from repro.core.simulator import simulate  # local import to avoid cycle
+
+    L = len(specs)
+    if L == 0:
+        return MergePlan((), "brute_force")
+    if L > 18:
+        raise ValueError(f"brute force infeasible for L={L}")
+    best, best_t = None, float("inf")
+    for mask in itertools.product([False, True], repeat=L - 1):
+        last = [i for i in range(L - 1) if not mask[i]] + [L - 1]
+        plan = MergePlan.from_boundaries(L, last, "brute_force")
+        t = simulate(specs, plan, model).t_iter
+        if t < best_t - 1e-15:
+            best, best_t = plan, t
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + elastic re-planning.
+# ---------------------------------------------------------------------------
+
+def make_plan(strategy: str, specs: Sequence[TensorSpec],
+              model: AllReduceModel | None = None) -> MergePlan:
+    """Build a plan from a strategy string.
+
+    ``wfbp`` | ``single`` | ``mgwfbp`` | ``dp_optimal`` | ``fixed:<bytes>``.
+    """
+    if strategy == "wfbp":
+        return plan_wfbp(specs)
+    if strategy == "single":
+        return plan_single(specs)
+    if strategy.startswith("fixed:"):
+        return plan_fixed_size(specs, int(strategy.split(":", 1)[1]))
+    if model is None:
+        raise ValueError(f"strategy {strategy!r} needs a cost model")
+    if strategy == "mgwfbp":
+        return plan_mgwfbp(specs, model)
+    if strategy == "dp_optimal":
+        return plan_dp_optimal(specs, model)
+    raise ValueError(f"unknown merge strategy {strategy!r}")
+
+
+def replan(strategy: str, specs: Sequence[TensorSpec],
+           model: AllReduceModel) -> MergePlan:
+    """Elastic-scaling hook: membership changed -> (a, b) changed -> replan.
+
+    The paper computes the plan once before training (O(L^2), negligible);
+    on an elastic resize we simply recompute it for the new cost model and
+    keep training from the latest checkpoint.
+    """
+    return make_plan(strategy, specs, model)

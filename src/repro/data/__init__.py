@@ -1,0 +1,2 @@
+from repro.data.synthetic import synthetic_batch, SyntheticConfig
+from repro.data.pipeline import DataPipeline

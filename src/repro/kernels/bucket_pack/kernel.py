@@ -1,0 +1,92 @@
+"""Merged-gradient pack/unpack Pallas kernels (paper §5.3).
+
+The paper pre-allocates one contiguous buffer per merged-gradient group and
+copies member tensors in before a single all-reduce.  On TPU this is a
+bandwidth-bound tiled HBM→VMEM→HBM copy; the MXU plays no role — exactly
+the kind of op where BlockSpec tiling *is* the whole kernel.
+
+Layout: each member tensor occupies a TILE-aligned slot in the packed
+buffer (slot offsets are compile-time constants from the merge plan), so
+every grid step copies one aligned [TILE] block.  ``pack`` is a single
+pallas_call over all destination tiles; the source for tile *i* is chosen
+with static offset comparisons against ``program_id`` (the member count per
+bucket is bounded; larger buckets are chunked by ops.py).  ``unpack`` is
+one tiled-copy call per member (reads are independent).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 512
+
+
+def _make_pack_kernel(ranges):
+    """Kernel factory: each grid step writes one destination tile; every
+    source's index_map pre-loads its (clamped) candidate block and the
+    owner is selected by comparing ``program_id`` against the static slot
+    ranges — fully resolved to vector selects, no gather."""
+    def kern(*refs):
+        o_ref = refs[-1]
+        srcs = refs[:-1]
+        i = pl.program_id(0)
+        acc = jnp.zeros((TILE,), o_ref.dtype)
+        for s_idx, s_ref in enumerate(srcs):
+            lo, hi = ranges[s_idx]
+            inside = (i >= lo) & (i < hi)
+            acc = jnp.where(inside, s_ref[...].astype(o_ref.dtype), acc)
+        o_ref[...] = acc
+    return kern
+
+
+def pack_kernel(srcs: list[jax.Array], dtype, interpret: bool = False
+                ) -> jax.Array:
+    """srcs: flat arrays, each padded to TILE multiple.  Returns the packed
+    [sum(sizes)] buffer with TILE-aligned slots."""
+    sizes = [s.shape[0] for s in srcs]
+    assert all(sz % TILE == 0 for sz in sizes)
+    offs, acc = [], 0
+    for sz in sizes:
+        offs.append(acc)
+        acc += sz
+    total = acc
+    ranges = [(o // TILE, (o + sz) // TILE) for o, sz in zip(offs, sizes)]
+
+    in_specs = []
+    for (lo, hi), sz in zip(ranges, sizes):
+        n_tiles = sz // TILE
+        in_specs.append(pl.BlockSpec(
+            (TILE,),
+            functools.partial(
+                lambda i, lo=lo, n=n_tiles: (jnp.clip(i - lo, 0, n - 1),))))
+    return pl.pallas_call(
+        _make_pack_kernel(ranges),
+        grid=(total // TILE,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((total,), dtype),
+        interpret=interpret,
+    )(*srcs)
+
+
+def _copy_kernel(s_ref, o_ref):
+    o_ref[...] = s_ref[...].astype(o_ref.dtype)
+
+
+def unpack_one_kernel(buf: jax.Array, offset: int, size: int, dtype,
+                      interpret: bool = False) -> jax.Array:
+    """Copy buf[offset : offset+size] out as its own array (TILE-aligned)."""
+    assert offset % TILE == 0 and size % TILE == 0
+    lo = offset // TILE
+    return pl.pallas_call(
+        _copy_kernel,
+        grid=(size // TILE,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i, lo=lo: (i + lo,))],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((size,), dtype),
+        interpret=interpret,
+    )(buf)

@@ -1,0 +1,37 @@
+"""jit'd wrappers for merged-gradient pack/unpack."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_pack import kernel as K
+from repro.kernels.bucket_pack.ref import pad_flat
+
+MAX_SRCS_PER_CALL = 32   # chunk very large buckets to bound kernel fan-in
+
+
+def pack(leaves, dtype=None, interpret: bool = False) -> jax.Array:
+    """Pack arbitrary-shaped leaves into one TILE-aligned flat buffer."""
+    dtype = jnp.dtype(dtype or leaves[0].dtype)
+    flats = [pad_flat(l) for l in leaves]
+    pieces = []
+    for i in range(0, len(flats), MAX_SRCS_PER_CALL):
+        group = flats[i:i + MAX_SRCS_PER_CALL]
+        pieces.append(K.pack_kernel(group, dtype, interpret=interpret))
+    return pieces[0] if len(pieces) == 1 else jnp.concatenate(pieces)
+
+
+def unpack(buf: jax.Array, shapes, dtypes, interpret: bool = False):
+    """Inverse of :func:`pack` (slot offsets recomputed from shapes)."""
+    out, off = [], 0
+    for shape, dt in zip(shapes, dtypes):
+        size = 1
+        for d in shape:
+            size *= d
+        padded = size + ((-size) % K.TILE)
+        piece = K.unpack_one_kernel(buf, off, padded, buf.dtype,
+                                    interpret=interpret)
+        out.append(piece[:size].reshape(shape).astype(dt))
+        off += padded
+    return out

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for bucket pack/unpack (TILE-aligned concatenate)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_pack.kernel import TILE
+
+
+def pad_flat(x: jax.Array) -> jax.Array:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % TILE
+    return jnp.pad(flat, (0, pad)) if pad else flat
+
+
+def pack_ref(leaves, dtype=None) -> jax.Array:
+    dtype = dtype or leaves[0].dtype
+    return jnp.concatenate([pad_flat(l).astype(dtype) for l in leaves])
+
+
+def unpack_ref(buf: jax.Array, shapes, dtypes):
+    out, off = [], 0
+    for shape, dt in zip(shapes, dtypes):
+        size = 1
+        for d in shape:
+            size *= d
+        padded = size + ((-size) % TILE)
+        out.append(buf[off:off + size].reshape(shape).astype(dt))
+        off += padded
+    return out

@@ -1,0 +1,52 @@
+"""jit'd wrapper for the flash-attention kernel: layout, padding, GQA."""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _pad_to(x, axis, mult):
+    pad = (-x.shape[axis]) % mult
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] -> [B, Sq, Hq, D].
+
+    GQA via head-major flattening; sequences padded to block multiples and
+    masked inside the kernel.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if hq % hkv:
+        raise ValueError(f"Hq={hq} not a multiple of Hkv={hkv}")
+    scale = 1.0 / math.sqrt(d)
+
+    # [B,S,H,D] -> [B*H, S, D]
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    qf = _pad_to(qf, 1, block_q)
+    kf = _pad_to(kf, 1, block_k)
+    vf = _pad_to(vf, 1, block_k)
+
+    o = flash_attention_kernel(qf, kf, vf, scale=scale, causal=causal,
+                               window=window, block_q=block_q,
+                               block_k=block_k, seq_q=sq, seq_kv=skv,
+                               interpret=interpret)
+    o = o[:, :sq].reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
+    return o

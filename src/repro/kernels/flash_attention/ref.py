@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the flash-attention kernel (full materialization)."""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import jax
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  scale: float | None = None) -> jnp.ndarray:
+    """q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] (GQA by head grouping)."""
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    qg = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) * scale
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    q_pos = jnp.arange(sq)
+    k_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    m = logits.max(axis=-1, keepdims=True)
+    p = jnp.exp(logits - m) * mask[None, None, None]
+    w = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, d).astype(q.dtype)

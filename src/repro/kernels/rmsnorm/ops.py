@@ -1,0 +1,28 @@
+"""jit'd wrapper for fused RMSNorm: arbitrary leading dims + row padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.kernel import rmsnorm_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6,
+            block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    xf = x.reshape(rows, d)
+    pad = (-rows) % block_rows
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    o = rmsnorm_kernel(xf, scale, eps=eps, block_rows=block_rows,
+                       interpret=interpret)
+    return o[:rows].reshape(shape)

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+Never touches jax device state at import time — everything is a function.
+Mesh shapes: single-pod (16, 16) = 256 chips ("data", "model"); multi-pod
+(2, 16, 16) = 512 chips ("pod", "data", "model").  ``pod`` is the DCN-level
+data-parallel axis (high startup cost — where gradient merging pays most).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_for(devices: int, model_parallel: int = 0):
+    """Best-effort mesh for an arbitrary device count (tests / CPU runs)."""
+    if model_parallel <= 0:
+        model_parallel = 1
+        for cand in (16, 8, 4, 2):
+            if devices % cand == 0 and devices // cand >= 1:
+                model_parallel = cand
+                break
+    data = devices // model_parallel
+    return jax.make_mesh(
+        (data, model_parallel), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

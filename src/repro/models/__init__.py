@@ -1,0 +1,4 @@
+"""Model zoo: all assigned architectures as one unified LM class."""
+from repro.models.transformer import LM
+from repro.models.registry import (ARCHS, ArchBundle, get_arch, list_archs,
+                                   reduced_arch, cells)

@@ -1,0 +1,167 @@
+"""Mamba selective-SSM block (Jamba's sequence mixer).
+
+TPU adaptation: the CUDA selective-scan kernel of the original paper is a
+fused recurrent kernel; on TPU we use a *chunked associative scan* —
+``lax.associative_scan`` of the affine recurrence within fixed-size chunks
+(SIMD/MXU friendly, bounded VMEM working set) and a sequential ``lax.scan``
+carrying the [B, d_inner, d_state] hidden across chunks.  Decode is the O(1)
+single-step recurrence against a cached (h, conv window) state.
+
+Recurrence (discretized selective SSM):
+
+    h_t = exp(dt_t * A) ⊙ h_{t-1} + (dt_t ⊙ x_t) ⊗ B_t
+    y_t = (h_t · C_t) + D ⊙ x_t
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    mc = cfg.mamba
+    d = cfg.d_model
+    d_inner = mc.expand * d
+    dt_rank = mc.dt_rank or -(-d // 16)
+    ks = jax.random.split(key, 8)
+    # S4D-real initialization for A.
+    a = jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32)[None, :],
+                 (d_inner, 1))
+    p = {
+        "in_proj": layers.dense_init(ks[0], d, 2 * d_inner, dtype),
+        "conv_w": (jax.random.normal(ks[1], (mc.d_conv, d_inner), jnp.float32)
+                   / math.sqrt(mc.d_conv)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "w_bc": layers.dense_init(ks[2], d_inner, 2 * mc.d_state, dtype),
+        "w_dt_down": layers.dense_init(ks[3], d_inner, dt_rank, dtype),
+        "w_dt_up": layers.dense_init(ks[4], dt_rank, d_inner, dtype),
+        "dt_bias": jnp.full((d_inner,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": layers.dense_init(ks[5], d_inner, d, dtype),
+    }
+    return p
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 carry: jax.Array | None = None):
+    """Depthwise causal conv1d. x: [B,S,C]; w: [K,C].  Returns (y, new_carry)
+    where carry is the last K-1 inputs (decode state)."""
+    k = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    new_carry = xp[:, -(k - 1):, :] if k > 1 else carry
+    return y + b[None, None, :], new_carry
+
+
+def _ssm_params(params, xc):
+    """Common projections. xc: [B,S,d_inner] (post-conv, post-silu)."""
+    d_state = params["A_log"].shape[1]
+    bc = xc @ params["w_bc"]
+    B, C = bc[..., :d_state], bc[..., d_state:]
+    dt = jax.nn.softplus(
+        (xc @ params["w_dt_down"]) @ params["w_dt_up"]
+        + params["dt_bias"]).astype(jnp.float32)              # [B,S,d_inner]
+    A = -jnp.exp(params["A_log"])                              # [d_inner,N]
+    return B.astype(jnp.float32), C.astype(jnp.float32), dt, A
+
+
+def mamba_apply(params: dict, x: jax.Array, chunk: int = 64,
+                return_state: bool = False):
+    """Train/prefill path. x: [B,S,d_model] -> [B,S,d_model].
+
+    With ``return_state`` also returns the decode cache ({h, conv}) after
+    consuming the sequence (prefill priming)."""
+    b, s, _ = x.shape
+    xz = x @ params["in_proj"]
+    d_inner = xz.shape[-1] // 2
+    xpart, z = xz[..., :d_inner], xz[..., d_inner:]
+    xc, _ = _causal_conv(xpart, params["conv_w"], params["conv_b"])
+    xc = jax.nn.silu(xc)
+    Bm, Cm, dt, A = _ssm_params(params, xc)
+
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        xc_p = jnp.pad(xc, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xc_p = xc
+
+    def chunk_fn(h0, inp):
+        xcb, Bb, Cb, dtb = inp          # [B,ck,*]
+        # decay exponents and inputs for the affine scan
+        dA = dtb[..., None] * A[None, None]                   # [B,ck,di,N]
+        a = jnp.exp(dA)
+        u = (dtb * xcb.astype(jnp.float32))[..., None] * Bb[:, :, None, :]
+
+        def op(l, r):
+            (al, bl), (ar, br) = l, r
+            return al * ar, bl * ar + br
+
+        a_c, u_c = jax.lax.associative_scan(op, (a, u), axis=1)
+        h = a_c * h0[:, None] + u_c                            # [B,ck,di,N]
+        y = jnp.einsum("bcdn,bcn->bcd", h, Cb)
+        return h[:, -1], y
+
+    def scan_body(h, inp):
+        h, y = jax.checkpoint(chunk_fn)(h, inp)
+        return h, y
+
+    h0 = jnp.zeros((b, d_inner, A.shape[1]), jnp.float32)
+    to_chunks = lambda t: t.reshape(b, n_chunks, chunk, t.shape[-1]
+                                    ).transpose(1, 0, 2, 3)
+    h_last, ys = jax.lax.scan(scan_body, h0, (to_chunks(xc_p), to_chunks(Bm),
+                                              to_chunks(Cm), to_chunks(dt)))
+    y = ys.transpose(1, 0, 2, 3).reshape(b, n_chunks * chunk, d_inner)[:, :s]
+    y = y + params["D"][None, None] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    if not return_state:
+        return out
+    # Pad steps are exact no-ops on the state: dt is padded with zeros
+    # *after* softplus, so decay = exp(0) = 1 and input term = 0.
+    k = params["conv_w"].shape[0]
+    xpad = jnp.concatenate(
+        [jnp.zeros((b, k - 1, d_inner), x.dtype), xpart], axis=1)
+    conv_carry = xpad[:, xpad.shape[1] - (k - 1):, :]
+    return out, {"h": h_last, "conv": conv_carry}
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype) -> dict:
+    mc = cfg.mamba
+    d_inner = mc.expand * cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d_inner, mc.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, d_inner), dtype),
+    }
+
+
+def mamba_decode_step(params: dict, cache: dict, x: jax.Array
+                      ) -> tuple[jax.Array, dict]:
+    """O(1) decode. x: [B,1,d_model] -> (y [B,1,d_model], new cache)."""
+    xz = x @ params["in_proj"]
+    d_inner = xz.shape[-1] // 2
+    xpart, z = xz[..., :d_inner], xz[..., d_inner:]
+    xc, conv_carry = _causal_conv(xpart, params["conv_w"], params["conv_b"],
+                                  cache["conv"])
+    xc = jax.nn.silu(xc)
+    Bm, Cm, dt, A = _ssm_params(params, xc)
+    a = jnp.exp(dt[:, 0, :, None] * A[None])                   # [B,di,N]
+    u = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] * Bm[:, 0, None, :]
+    h = a * cache["h"] + u
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0])[:, None]
+    y = y + params["D"][None, None] * xc.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    return y @ params["out_proj"], {"h": h, "conv": conv_carry}

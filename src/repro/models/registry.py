@@ -1,0 +1,132 @@
+"""Architecture registry: ``--arch <id>`` -> config + model + input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input of the given (architecture × input-shape) cell — weak-type
+correct, shardable, no device allocation — exactly what the multi-pod
+dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ModelConfig, ParallelConfig, RunConfig,
+                                ShapeConfig, SHAPES, reduced)
+from repro.models.transformer import LM
+
+ARCHS = {
+    "qwen2-1.5b": "qwen2_1_5b",
+    "deepseek-67b": "deepseek_67b",
+    "gemma3-12b": "gemma3_12b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "phi-3-vision-4.2b": "phi3_vision_4_2b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "arctic-480b": "arctic_480b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "whisper-base": "whisper_base",
+    "xlstm-125m": "xlstm_125m",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchBundle:
+    name: str
+    cfg: ModelConfig
+    parallel: ParallelConfig
+    microbatch: dict
+    skip_shapes: dict
+    optimizer_state_dtype: str = "float32"
+
+    def model(self, parallel: ParallelConfig | None = None) -> LM:
+        return LM(self.cfg, parallel or self.parallel)
+
+    def run_config(self, shape_name: str,
+                   parallel: ParallelConfig | None = None) -> RunConfig:
+        return RunConfig(
+            model=self.cfg,
+            shape=SHAPES[shape_name],
+            parallel=parallel or self.parallel,
+            microbatch=self.microbatch.get(shape_name, 0),
+            optimizer_state_dtype=self.optimizer_state_dtype,
+        )
+
+
+def get_arch(name: str) -> ArchBundle:
+    if name not in ARCHS:
+        raise ValueError(f"unknown arch {name!r}; choose from {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[name]}")
+    return ArchBundle(
+        name=name,
+        cfg=mod.CONFIG,
+        parallel=mod.PARALLEL,
+        microbatch=mod.MICROBATCH,
+        skip_shapes=mod.SKIP_SHAPES,
+        optimizer_state_dtype=getattr(mod, "OPTIMIZER_STATE_DTYPE",
+                                      "float32"),
+    )
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)
+
+
+def reduced_arch(name: str, **kw) -> ArchBundle:
+    """Same-family reduced config for CPU smoke tests."""
+    b = get_arch(name)
+    small = reduced(b.cfg, **kw)
+    par = dataclasses.replace(b.parallel, ep_axis="", attn_chunk=64)
+    return dataclasses.replace(b, cfg=small, parallel=par)
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins).
+# ---------------------------------------------------------------------------
+
+def cells(arch: str) -> list[str]:
+    """Applicable shape names for an arch (assigned minus skips)."""
+    b = get_arch(arch)
+    out = []
+    for s in SHAPES:
+        if s in b.skip_shapes:
+            continue
+        out.append(s)
+    return out
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      batch_override: int = 0) -> dict:
+    """Global-shape ShapeDtypeStructs for one train step's batch."""
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.enc_dec:
+        specs["enc_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    if cfg.frontend == "vision":
+        specs["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_prefix_len, cfg.d_model), dt)
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    return train_input_specs(cfg, shape) | {}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                       model: LM) -> dict:
+    """Token + KV-cache ShapeDtypeStructs for one decode step."""
+    b, s = shape.global_batch, shape.seq_len
+    enc_len = s if cfg.enc_dec else 0
+    cache = jax.eval_shape(lambda: model.init_cache(b, s, enc_len))
+    return {
+        "tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        "cache": cache,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

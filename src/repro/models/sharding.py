@@ -1,0 +1,124 @@
+"""Parameter partitioning rules (t5x-style regex table).
+
+Specs are *right-aligned*: a rule gives the PartitionSpec for a leaf's
+trailing dims; leading dims (e.g. the stacked repeat axis of scanned
+stages, or the expert axis position) are padded with ``None``.  The
+``model`` axis is the GSPMD-auto tensor-parallel axis; ``EP`` is replaced
+by the configured expert-parallel axis (a *manual* data axis) or dropped.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+EP = "__EP__"
+
+# (regex on the leaf's path, right-aligned partition entries).
+# Order matters: expert (``*_e``) rules shadow the dense ones.
+RULES: list[tuple[str, tuple]] = [
+    (r"(w_gate_e|w_up_e)", (EP, None, "model")),
+    (r"w_down_e", (EP, "model", None)),
+    (r"(router|b_gates|gn_scale|norm|dec_pos|b_if|w_if)", ()),
+    (r"(w_q|w_k|w_v|w_gate|w_up|up_x|up_z|in_proj|w_dt_up|w_gates|r_gates)",
+     (None, "model")),
+    (r"(w_o|w_down|\['down'\]|out_proj)", ("model", None)),
+    (r"embed", ("model", None)),
+    (r"lm_head", (None, "model")),
+    (r"(A_log|w_bc|w_dt_down)", ("model", None)),
+    (r"conv_w", (None, "model")),
+    (r"(conv_b|dt_bias|\['D'\]|b_q|b_k|b_v|norm_scale|skip_scale|b_up|b_down)",
+     ("model",)),
+]
+
+
+def spec_for_path(path: str, ndim: int, ep_axis: str = "",
+                  tp_axis: str = "model",
+                  moe_token_shard: bool = False) -> P:
+    if moe_token_shard and re.search(r"w_(gate|up|down)_e", path):
+        # token-sharded expert compute: weights replicated across TP
+        out = [ep_axis if ep_axis else None, None, None]
+        out = [None] * (ndim - 3) + out
+        return P(*out[:ndim]) if ndim else P()
+    for pat, entries in RULES:
+        if re.search(pat, path):
+            out = []
+            for e in entries:
+                if e == EP:
+                    out.append(ep_axis if ep_axis else None)
+                elif e == "model":
+                    out.append(tp_axis if tp_axis else None)
+                else:
+                    out.append(e)
+            out = [None] * (ndim - len(out)) + out
+            return P(*out[:ndim]) if ndim else P()
+    return P(*([None] * ndim)) if ndim else P()
+
+
+def param_pspecs(params_shape, ep_axis: str = "", tp_axis: str = "model",
+                 moe_token_shard: bool = False):
+    """Pytree of PartitionSpec mirroring an eval_shape'd param tree."""
+    def one(path, leaf):
+        p = jax.tree_util.keystr(path)
+        return spec_for_path(p, len(leaf.shape), ep_axis, tp_axis,
+                             moe_token_shard)
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def filter_uneven(pspecs, shapes_tree, mesh_dims: dict):
+    """Drop spec entries whose axis product does not divide the dim.
+
+    ``device_put`` (and manual shard_map axes) require even sharding; GSPMD
+    would pad, but padding a 85-row tensor across 2 shards silently wastes
+    memory anyway — replicating such leaves is the right default.
+    """
+    def one(spec, leaf):
+        if not isinstance(spec, P):
+            return spec
+        out = []
+        for d, e in enumerate(spec):
+            if e is None:
+                out.append(None)
+                continue
+            names = (e,) if isinstance(e, str) else tuple(e)
+            factor = 1
+            for n in names:
+                factor *= mesh_dims.get(n, 1)
+            if d < len(leaf.shape) and leaf.shape[d] % factor == 0:
+                out.append(e)
+            else:
+                out.append(None)
+        return P(*out)
+
+    return jax.tree.map(one, pspecs, shapes_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def manual_only(spec: P, manual_axes: frozenset[str]) -> P:
+    """Project a full PartitionSpec onto the manual axes (shard_map
+    in_specs must not mention auto axes)."""
+    out = []
+    for e in spec:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, str):
+            out.append(e if e in manual_axes else None)
+        else:
+            kept = tuple(x for x in e if x in manual_axes)
+            out.append(kept if kept else None)
+    return P(*out)
+
+
+def auto_only(spec: P, manual_axes: frozenset[str]) -> P:
+    out = []
+    for e in spec:
+        if e is None:
+            out.append(None)
+        elif isinstance(e, str):
+            out.append(e if e not in manual_axes else None)
+        else:
+            kept = tuple(x for x in e if x not in manual_axes)
+            out.append(kept if kept else None)
+    return P(*out)

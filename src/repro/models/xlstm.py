@@ -1,0 +1,273 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, sequential recurrence).  [arXiv:2405.04517]
+
+TPU adaptation: the original sLSTM CUDA kernel relies on register-level
+recurrence; here the sLSTM runs as a ``lax.scan`` over time with a small
+[B, d] state (throughput-irrelevant at 125M scale), while the mLSTM — the
+dominant block type — uses the chunkwise-parallel form (intra-chunk
+attention-like einsums on the MXU + inter-chunk (C, n, m) carry), the same
+schedule used for our Mamba port.
+
+Stabilized exponential gating follows the paper: running log-max state m
+keeps i/f gate products in range.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+PROJ_FACTOR_M = 2.0     # mLSTM up-projection factor
+PROJ_FACTOR_S = 4.0 / 3  # sLSTM FFN factor
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    d_in = int(PROJ_FACTOR_M * d)
+    h = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up_x": layers.dense_init(ks[0], d, d_in, dtype),
+        "up_z": layers.dense_init(ks[1], d, d_in, dtype),
+        "w_q": layers.dense_init(ks[2], d_in, d_in, dtype),
+        "w_k": layers.dense_init(ks[3], d_in, d_in, dtype),
+        "w_v": layers.dense_init(ks[4], d_in, d_in, dtype),
+        "w_if": layers.dense_init(ks[5], d_in, 2 * h, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.full((h,), 3.0)]),
+        "skip_scale": jnp.ones((d_in,), dtype),
+        "norm_scale": jnp.ones((d_in,), dtype),
+        "down": layers.dense_init(ks[6], d_in, d, dtype),
+    }
+
+
+def _mlstm_chunk(q, k, v, logf, logi, C0, n0, m0):
+    """Chunkwise-parallel mLSTM cell.
+
+    q/k/v: [B,ck,H,Dh]; logf/logi: [B,ck,H] (log forget / log input gate);
+    carries C0 [B,H,Dh,Dh], n0 [B,H,Dh], m0 [B,H].
+    Returns (y [B,ck,H,Dh], C1, n1, m1).
+    """
+    b, ck, h, dh = q.shape
+    F = jnp.cumsum(logf, axis=1)                        # [B,ck,H] log prod f
+    # log weight of input s surviving to position t: F_t - F_s + logi_s
+    lw = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]  # [B,t,s,H]
+    causal = jnp.tril(jnp.ones((ck, ck), bool))
+    lw = jnp.where(causal[None, :, :, None], lw, -jnp.inf)
+    # carry weight of initial state at position t: F_t + m0
+    lw0 = F + m0[:, None, :]                            # [B,t,H]
+    m = jnp.maximum(lw.max(axis=2), lw0)                # [B,t,H] stabilizer
+    m = jnp.maximum(m, -1e30)
+    w = jnp.exp(lw - m[:, :, None, :])                  # [B,t,s,H]
+    w0 = jnp.exp(lw0 - m)                               # [B,t,H]
+
+    scale = 1.0 / math.sqrt(dh)
+    att = jnp.einsum("bthd,bshd->btsh", q * scale, k) * w
+    num = jnp.einsum("btsh,bshd->bthd", att, v) + \
+        w0[..., None] * jnp.einsum("bthd,bhde->bthe", q * scale, C0)
+    # denominator: qn = q . n_t where n_t = sum_s w[t,s] k_s + w0 * n0
+    nsum = jnp.einsum("btsh,bshd->bthd", w, k) + w0[..., None] * n0[:, None]
+    qn = jnp.einsum("bthd,bthd->bth", q * scale, nsum)
+    den_t = jnp.maximum(jnp.abs(qn), jnp.exp(-m))       # xLSTM max(|qn|, e^-m)
+    y = num / den_t[..., None]
+
+    # chunk-final carries
+    mf = jnp.maximum(F[:, -1] + m0, (F[:, -1:] - F + logi).max(axis=1))
+    wk = jnp.exp(F[:, -1:, :] - F + logi - mf[:, None, :])   # [B,s,H]
+    C1 = jnp.exp(F[:, -1] + m0 - mf)[..., None, None] * C0 + jnp.einsum(
+        "bsh,bshd,bshe->bhde", wk, k, v)
+    n1 = jnp.exp(F[:, -1] + m0 - mf)[..., None] * n0 + jnp.einsum(
+        "bsh,bshd->bhd", wk, k)
+    return y, C1, n1, mf
+
+
+def mlstm_apply(params: dict, x: jax.Array, cfg: ModelConfig,
+                chunk: int = 64, return_state: bool = False):
+    b, s, d = x.shape
+    h = cfg.num_heads
+    xu = x @ params["up_x"]
+    z = x @ params["up_z"]
+    d_in = xu.shape[-1]
+    dh = d_in // h
+    q = (xu @ params["w_q"]).reshape(b, s, h, dh).astype(jnp.float32)
+    k = (xu @ params["w_k"]).reshape(b, s, h, dh).astype(jnp.float32)
+    v = (xu @ params["w_v"]).reshape(b, s, h, dh).astype(jnp.float32)
+    gif = xu.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    logi, logf = gif[..., :h], jax.nn.log_sigmoid(gif[..., h:])
+
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        logi = jnp.pad(logi, ((0, 0), (0, pad), (0, 0)),
+                       constant_values=-1e30)
+        logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+
+    def body(carry, inp):
+        C, n, m = carry
+        qb, kb, vb, lib, lfb = inp
+        y, C, n, m = jax.checkpoint(_mlstm_chunk)(qb, kb, vb, lfb, lib, C, n, m)
+        return (C, n, m), y
+
+    toc = lambda t: t.reshape((b, n_chunks, chunk) + t.shape[2:]
+                              ).transpose((1, 0, 2) + tuple(
+                                  range(3, t.ndim + 1)))
+    C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), 0.0, jnp.float32)
+    state, ys = jax.lax.scan(body, (C0, n0, m0),
+                             (toc(q), toc(k), toc(v), toc(logi), toc(logf)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, n_chunks * chunk, h, dh)[:, :s]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = layers.rms_norm(y, params["norm_scale"], 1e-6)
+    y = y + params["skip_scale"][None, None] * xu
+    y = y * jax.nn.silu(z)
+    out = y @ params["down"]
+    if not return_state:
+        return out
+    # Pads are exact state no-ops: logi padded -inf (zero input weight),
+    # logf padded 0 (forget factor 1).
+    C1, n1, m1 = state
+    return out, {"C": C1, "n": n1, "m": m1}
+
+
+def mlstm_cache_init(cfg: ModelConfig, batch: int) -> dict:
+    h = cfg.num_heads
+    d_in = int(PROJ_FACTOR_M * cfg.d_model)
+    dh = d_in // h
+    return {"C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, h, dh), jnp.float32),
+            "m": jnp.zeros((batch, h), jnp.float32)}
+
+
+def mlstm_decode_step(params: dict, cache: dict, x: jax.Array,
+                      cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    b, _, d = x.shape
+    h = cfg.num_heads
+    xu = x @ params["up_x"]
+    z = x @ params["up_z"]
+    d_in = xu.shape[-1]
+    dh = d_in // h
+    q = (xu @ params["w_q"]).reshape(b, h, dh).astype(jnp.float32)
+    k = (xu @ params["w_k"]).reshape(b, h, dh).astype(jnp.float32)
+    v = (xu @ params["w_v"]).reshape(b, h, dh).astype(jnp.float32)
+    gif = xu[:, 0].astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    logi, logf = gif[..., :h], jax.nn.log_sigmoid(gif[..., h:])
+    C, n, m0 = cache["C"], cache["n"], cache["m"]
+    m = jnp.maximum(logf + m0, logi)
+    fw = jnp.exp(logf + m0 - m)
+    iw = jnp.exp(logi - m)
+    C = fw[..., None, None] * C + iw[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k, v)
+    n = fw[..., None] * n + iw[..., None] * k
+    scale = 1.0 / math.sqrt(dh)
+    num = jnp.einsum("bhd,bhde->bhe", q * scale, C)
+    qn = jnp.einsum("bhd,bhd->bh", q * scale, n)
+    den = jnp.maximum(jnp.abs(qn), jnp.exp(-m))
+    y = (num / den[..., None]).reshape(b, 1, d_in).astype(x.dtype)
+    y = layers.rms_norm(y, params["norm_scale"], 1e-6)
+    y = y + params["skip_scale"][None, None] * xu
+    y = y * jax.nn.silu(z)
+    return y @ params["down"], {"C": C, "n": n, "m": m}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    d_ff = int(PROJ_FACTOR_S * d)
+    return {
+        "w_gates": layers.dense_init(ks[0], d, 4 * d, jnp.float32),
+        "r_gates": layers.dense_init(ks[1], d, 4 * d, jnp.float32),
+        "b_gates": jnp.zeros((4 * d,)),
+        "gn_scale": jnp.ones((d,), dtype),
+        "ffn": layers.mlp_init(ks[2], d, d_ff, "swiglu", dtype),
+    }
+
+
+def _slstm_cell(params, x_t, state):
+    """One step. x_t: [B,d] fp32; state: (c, n, h, m) each [B,d]."""
+    c, n, h, m = state
+    g = x_t @ params["w_gates"] + h @ params["r_gates"] + params["b_gates"]
+    d = x_t.shape[-1]
+    zt, it, ft, ot = g[:, :d], g[:, d:2*d], g[:, 2*d:3*d], g[:, 3*d:]
+    zt = jnp.tanh(zt)
+    ot = jax.nn.sigmoid(ot)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    fw = jnp.exp(logf + m - m_new)
+    iw = jnp.exp(it - m_new)
+    c = fw * c + iw * zt
+    n = fw * n + iw
+    h = ot * c / jnp.maximum(jnp.abs(n), 1.0)
+    return (c, n, h, m_new)
+
+
+def slstm_apply(params: dict, x: jax.Array, chunk: int = 128,
+                return_state: bool = False):
+    b, s, d = x.shape
+    xf = x.astype(jnp.float32)
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        xf = jnp.pad(xf, ((0, 0), (0, pad), (0, 0)))
+    # validity mask: pad steps must be exact state no-ops
+    valid = (jnp.arange(n_chunks * chunk) < s).astype(jnp.float32)
+
+    def chunk_fn(state, xs_valid):
+        xs, vs = xs_valid
+
+        def step(st, xv):
+            xt, vt = xv
+            new = _slstm_cell(params, xt, st)
+            new = tuple(jnp.where(vt > 0, a, b) for a, b in zip(new, st))
+            return new, new[2]
+        return jax.lax.scan(step, state, (xs, vs))
+
+    def body(state, xs_valid):
+        state, hs = jax.checkpoint(chunk_fn)(state, xs_valid)
+        return state, hs
+
+    z = jnp.zeros((b, d), jnp.float32)
+    state0 = (z, z, z, z)
+    xs = xf.reshape(b, n_chunks, chunk, d).transpose(1, 2, 0, 3)  # [nc,ck,B,d]
+    vs = valid.reshape(n_chunks, chunk)[:, :, None, None] * jnp.ones(
+        (1, 1, b, 1), jnp.float32)
+    state, hs = jax.lax.scan(body, state0, (xs, vs))
+    h = hs.transpose(2, 0, 1, 3).reshape(b, n_chunks * chunk, d)[:, :s]
+    h = h.astype(x.dtype)
+    h = layers.rms_norm(h, params["gn_scale"], 1e-6)
+    out = h + layers.mlp_apply(params["ffn"], h, "swiglu")
+    if not return_state:
+        return out
+    c, n, hh, m = state
+    return out, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_cache_init(cfg: ModelConfig, batch: int) -> dict:
+    z = jnp.zeros((batch, cfg.d_model), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}
+
+
+def slstm_decode_step(params: dict, cache: dict, x: jax.Array
+                      ) -> tuple[jax.Array, dict]:
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    state = _slstm_cell(params, x[:, 0].astype(jnp.float32), state)
+    c, n, h, m = state
+    y = h[:, None].astype(x.dtype)
+    y = layers.rms_norm(y, params["gn_scale"], 1e-6)
+    y = y + layers.mlp_apply(params["ffn"], y, "swiglu")
+    return y, {"c": c, "n": n, "h": h, "m": m}

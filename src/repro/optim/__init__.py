@@ -1,0 +1,9 @@
+"""Optimizers built leaf-wise so the same update runs on full pytrees
+(replicated DP) or on flat ZeRO shards (merged reduce-scatter buckets)."""
+
+from repro.optim.optimizers import (Optimizer, adamw, sgdm, make_optimizer)
+from repro.optim.schedule import warmup_cosine, constant
+from repro.optim.clip import global_norm, clip_by_global_norm
+
+__all__ = ["Optimizer", "adamw", "sgdm", "make_optimizer", "warmup_cosine",
+           "constant", "global_norm", "clip_by_global_norm"]

@@ -1,0 +1,25 @@
+"""Global-norm gradient clipping (works on pytrees of local shards; pass a
+``psum_axes`` to compute the true global norm across sharded grads)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree, psum_axes=None) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    if psum_axes:
+        sq = jax.lax.psum(sq, psum_axes)
+    return jnp.sqrt(sq)
+
+
+def clip_by_global_norm(tree, max_norm: float, norm: jax.Array | None = None,
+                        psum_axes=None):
+    if max_norm <= 0:
+        return tree, global_norm(tree, psum_axes)
+    n = norm if norm is not None else global_norm(tree, psum_axes)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda x: (x.astype(jnp.float32) * scale
+                                   ).astype(x.dtype), tree), n

@@ -1,0 +1,2 @@
+from repro.serve.engine import ServeEngine, build_serve_step
+from repro.serve import sampling

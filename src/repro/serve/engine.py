@@ -1,0 +1,157 @@
+"""Batched serving engine: prefill + decode steps with sharded KV caches.
+
+Serving has no gradient traffic, so the paper's technique does not apply
+here (DESIGN.md §5) — the serve path uses plain GSPMD auto-partitioning:
+params TP-sharded over ``model``, request batch over the data axes, and for
+``long_500k`` (batch 1) the KV cache sequence dim sharded over ``data``
+(flash-decode style — GSPMD partitions the attention contraction and
+inserts the partial-softmax reduction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models import sharding as shd
+from repro.models.transformer import LM
+from repro.serve import sampling
+
+
+def cache_pspecs(cache_shape, shape: ShapeConfig, parallel: ParallelConfig,
+                 mesh_dims: dict):
+    """Shard KV caches: batch over data axes when divisible, else the
+    sequence dim (long-context decode); KV heads over model."""
+    dp = tuple(a for a in parallel.dp_axes if a in mesh_dims)
+    dp_total = 1
+    for a in dp:
+        dp_total *= mesh_dims[a]
+    tp = parallel.tp_axis if (parallel.tp_enabled and
+                              parallel.tp_axis in mesh_dims) else None
+
+    def one(path, leaf):
+        s = leaf.shape
+        k = jax.tree_util.keystr(path)
+        if len(s) >= 3 and ("['k']" in k or "['v']" in k or "['xk']" in k
+                            or "['xv']" in k):
+            # [.., B, S, H, D]
+            spec = [None] * len(s)
+            bdim, sdim, hdim = len(s) - 4, len(s) - 3, len(s) - 2
+            if s[bdim] % max(dp_total, 1) == 0 and dp_total > 1:
+                spec[bdim] = dp
+            elif "data" in mesh_dims and s[sdim] % mesh_dims["data"] == 0 \
+                    and parallel.seq_shard_decode:
+                spec[sdim] = "data"
+            if tp and s[hdim] % mesh_dims[tp] == 0:
+                spec[hdim] = tp
+            return P(*spec)
+        # recurrent states: batch on first dim when divisible
+        spec = [None] * len(s)
+        bdim = 1 if len(s) >= 2 and "stages" in k and False else 0
+        for d in range(len(s)):
+            if s[d] % max(dp_total, 1) == 0 and dp_total > 1:
+                spec[d] = dp
+                break
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)
+
+
+def build_serve_step(model: LM, shape: ShapeConfig, mesh):
+    """Returns (decode_fn, prefill_fn, shardings) under GSPMD auto."""
+    cfg, par = model.cfg, model.parallel
+    if par.ep_axis:
+        # serving runs under plain GSPMD (no manual axes): experts are
+        # TP-sharded instead of expert-parallel
+        par = dataclasses.replace(par, ep_axis="")
+        model = LM(cfg, par)
+    dims = dict(zip(mesh.axis_names, mesh.devices.shape))
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    tp_axis = par.tp_axis if (par.tp_enabled and par.tp_axis in dims) else ""
+    pspecs = shd.param_pspecs(params_shape, ep_axis="", tp_axis=tp_axis)
+    pspecs = shd.filter_uneven(pspecs, params_shape, dims)
+    enc_len = shape.seq_len if cfg.enc_dec else 0
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, enc_len))
+    cspecs = cache_pspecs(cache_shape, shape, par, dims)
+
+    dp = tuple(a for a in par.dp_axes if a in dims)
+    dp_total = 1
+    for a in dp:
+        dp_total *= dims[a]
+    tok_spec = P(dp) if (dp and shape.global_batch % dp_total == 0
+                         and dp_total > 1) else P()
+
+    def decode_fn(params, cache, tokens, pos):
+        logits, new_cache = model.decode_step(params, cache, tokens, pos)
+        return logits, new_cache
+
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch, max_len=shape.seq_len)
+
+    shardings = {
+        "params": jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                               is_leaf=lambda x: isinstance(x, P)),
+        "cache": jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                              is_leaf=lambda x: isinstance(x, P)),
+        "tokens": NamedSharding(mesh, tok_spec),
+        "param_pspecs": pspecs,
+        "cache_pspecs": cspecs,
+        "token_pspec": tok_spec,
+    }
+    return decode_fn, prefill_fn, shardings
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: jax.Array          # [S] int32
+    max_new_tokens: int = 16
+
+
+class ServeEngine:
+    """Minimal batched engine: pad-and-batch prefill, synchronous decode.
+
+    Production continuous batching slots requests into a fixed batch and
+    recycles finished rows; here requests are grouped into one batch per
+    call (sufficient for the example/serving tests on CPU).
+    """
+
+    def __init__(self, model: LM, params, max_len: int = 256,
+                 temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, prompts: list[jax.Array], max_new_tokens: int = 16,
+                 extra_batch: dict | None = None) -> list[list[int]]:
+        b = len(prompts)
+        plen = max(int(p.shape[0]) for p in prompts)
+        toks = jnp.stack([jnp.pad(p, (plen - p.shape[0], 0)) for p in
+                          prompts])  # left-pad to align last positions
+        batch = {"tokens": toks, **(extra_batch or {})}
+        logits, cache = self.model.prefill(self.params, batch,
+                                           max_len=self.max_len)
+        outs: list[list[int]] = [[] for _ in range(b)]
+        tok = sampling.greedy(logits)
+        for i in range(b):
+            outs[i].append(int(tok[i, 0]))
+        for t in range(max_new_tokens - 1):
+            pos = jnp.int32(plen + t)
+            logits, cache = self._decode(self.params, cache, tok, pos)
+            lg = logits[:, 0]
+            if self.temperature > 0:
+                self.key, sk = jax.random.split(self.key)
+                tok = sampling.temperature(lg, sk, self.temperature)
+            else:
+                tok = sampling.greedy(lg)
+            for i in range(b):
+                outs[i].append(int(tok[i, 0]))
+        return outs

@@ -1,0 +1,21 @@
+"""Token sampling for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    """logits: [B, V] -> [B, 1] int32."""
+    return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+
+
+def temperature(logits: jax.Array, key, temp: float = 1.0,
+                top_k: int = 0) -> jax.Array:
+    lg = logits.astype(jnp.float32) / max(temp, 1e-6)
+    if top_k:
+        vals, _ = jax.lax.top_k(lg, top_k)
+        cut = vals[..., -1:]
+        lg = jnp.where(lg < cut, -1e30, lg)
+    return jax.random.categorical(key, lg, axis=-1)[:, None].astype(jnp.int32)

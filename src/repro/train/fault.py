@@ -1,0 +1,106 @@
+"""Fault tolerance & elasticity for the training loop.
+
+Mechanisms (scaled-down but production-shaped — see DESIGN.md §4 for the
+1000+-node design):
+
+* **checkpoint/restart** — ``run_with_recovery`` wraps the step loop;
+  any step exception triggers restore-from-LATEST and replay.  The data
+  pipeline is a pure function of the step index, so replayed batches are
+  byte-identical.
+* **step retry with backoff** — transient failures (preempted host,
+  flaky interconnect) retry the same step before escalating.
+* **elastic re-plan** — on membership change the MG-WFBP plan depends on
+  the cluster only through the all-reduce model's (a, b); ``replan_for``
+  recomputes the plan for a new mesh and the caller rebuilds the step.
+  Parameters reshard via checkpoint restore (shapes are mesh-invariant).
+* **straggler mitigation** — in synchronous SGD the step time is the max
+  over workers; ``StragglerMonitor`` tracks per-step wall times and flags
+  hosts whose EWMA exceeds the fleet median by a threshold so the launcher
+  can evict/replace them (the sync-SGD-compatible mitigation; async
+  fallback is out of scope per the paper's S-SGD setting).
+"""
+
+from __future__ import annotations
+
+import collections
+import logging
+import time
+from typing import Callable
+
+from repro.core import planner
+from repro.train import checkpoint
+
+log = logging.getLogger("repro.fault")
+
+
+def run_with_recovery(step_fn: Callable, state, pipeline, ckpt: "checkpoint.AsyncCheckpointer",
+                      start_step: int, num_steps: int,
+                      ckpt_every: int = 50, max_retries: int = 3,
+                      state_template=None, on_metrics=None):
+    """Drive the training loop with retry + restore-on-failure."""
+    step = start_step
+    retries = 0
+    while step < num_steps:
+        batch = pipeline.batch_at(step)
+        try:
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            dt = time.perf_counter() - t0
+            if on_metrics:
+                on_metrics(step, metrics, dt)
+            retries = 0
+            step += 1
+            if step % ckpt_every == 0:
+                ckpt.save(step, state)
+        except Exception as e:  # noqa: BLE001 — any step failure
+            retries += 1
+            log.warning("step %d failed (%s); retry %d/%d", step, e,
+                        retries, max_retries)
+            if retries > max_retries:
+                latest = checkpoint.latest_step(ckpt.ckpt_dir)
+                if latest is None:
+                    raise
+                log.warning("restoring from checkpoint step %d", latest)
+                state, step, _ = checkpoint.restore(
+                    ckpt.ckpt_dir, state_template or state)
+                retries = 0
+    ckpt.save(step, state)
+    ckpt.wait()
+    return state, step
+
+
+def replan_for(strategy: str, specs, new_mesh_shape, new_mesh_axes,
+               dp_axes=("pod", "data")):
+    """Elastic resize: new cluster -> new (a, b) -> new optimal plan.
+
+    O(L^2), runs once per membership change (paper §4.2: the plan is a
+    one-time computation; elasticity just repeats it)."""
+    from repro.core import cost_model
+    model = cost_model.production_comm_model(new_mesh_shape, new_mesh_axes,
+                                             dp_axes)
+    return planner.make_plan(strategy, specs, model), model
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker; flags hosts slower than median * threshold."""
+
+    def __init__(self, alpha: float = 0.2, threshold: float = 1.5,
+                 warmup: int = 5):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.warmup = warmup
+        self.ewma: dict = {}
+        self.counts: dict = collections.Counter()
+
+    def record(self, host: str, step_time: float):
+        prev = self.ewma.get(host, step_time)
+        self.ewma[host] = (1 - self.alpha) * prev + self.alpha * step_time
+        self.counts[host] += 1
+
+    def stragglers(self) -> list[str]:
+        ready = {h: t for h, t in self.ewma.items()
+                 if self.counts[h] >= self.warmup}
+        if len(ready) < 2:
+            return []
+        med = sorted(ready.values())[len(ready) // 2]
+        return [h for h, t in ready.items() if t > self.threshold * med]

@@ -1,0 +1,22 @@
+"""Training state container + construction helpers."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: jax.Array            # scalar int32
+    params: Any                # model param pytree
+    opt_state: Any             # tree (zero=0) or per-bucket shards (zero=1)
+
+    @staticmethod
+    def create(params, opt_state):
+        return TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                          opt_state=opt_state)

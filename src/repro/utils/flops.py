@@ -1,0 +1,62 @@
+"""MODEL_FLOPS accounting: 6·N·D (dense) / 6·N_active·D (MoE).
+
+The roofline's "useful compute" reference.  N counts parameters touched
+per token: for MoE, routed experts contribute ``top_k / num_experts`` of
+their parameters; shared experts and the dense residual always count.
+Attention O(S²) FLOPs are excluded per the 6ND convention (noted in
+EXPERIMENTS.md; the HLO-derived FLOPs include them, which is one source of
+HLO/MODEL ratio > 1 at long sequence).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def param_counts(params_shape) -> tuple[int, int]:
+    """(total_params, active_params) from an eval_shape'd tree."""
+    import re
+    total = active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        active += n  # corrected below for expert leaves by caller
+    return total, active
+
+
+def model_flops(cfg: ModelConfig, params_shape, shape: ShapeConfig,
+                kind: str) -> dict:
+    """Returns {total_params, active_params, tokens, model_flops}."""
+    import re
+    total = 0
+    expert = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        k = jax.tree_util.keystr(path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if re.search(r"w_(gate|up|down)_e", k):
+            expert += n
+    active = total - expert
+    if cfg.moe is not None and expert:
+        active += expert * cfg.moe.top_k / cfg.moe.num_experts
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 6.0
+    elif kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        factor = 2.0
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch * 1
+        factor = 2.0
+    return {
+        "total_params": int(total),
+        "active_params": int(active),
+        "tokens": int(tokens),
+        "model_flops": factor * active * tokens,
+    }

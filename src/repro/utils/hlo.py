@@ -1,0 +1,310 @@
+"""Compiled-HLO cost extraction with while-loop trip-count scaling.
+
+Why this exists: ``compiled.cost_analysis()`` counts the body of a
+``lax.scan``-generated while loop exactly **once**, so any scan-over-layers
+program under-reports FLOPs/bytes by ~L×.  Framework-scale models must use
+scan for compile-time sanity, so the roofline harness re-derives costs by
+parsing ``compiled.as_text()``:
+
+* per-computation op costs (dot / convolution FLOPs from shapes +
+  contracting dims; bytes from operand/result buffer sizes resolved through
+  a per-computation symbol table — compiled HLO prints operands as bare
+  ``%name`` refs),
+* fusion ops inherit their called computation's FLOPs, with bytes counted
+  at the fusion boundary (the HBM-traffic unit in XLA),
+* ``while`` ops multiply their body cost by the trip count parsed from the
+  condition computation's comparison constant (lax.scan emits
+  ``lt(induction, constant(L))`` with a 0-start, step-1 induction),
+* collective ops (all-reduce / all-gather / reduce-scatter / all-to-all /
+  collective-permute, sync or ``-start`` async forms) accumulate operand
+  bytes, also trip-count scaled.
+
+The parser is intentionally tolerant: unknown ops contribute zero FLOPs and
+their boundary bytes only at top level.  It is validated against
+``cost_analysis()`` on loop-free programs (tests/test_hlo.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# out_type matched lazily up to the first " opcode(" anchor — tuple types
+# contain spaces and /*index=N*/ comments, so no char-class can bound them.
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\((.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\.\d)" )
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_OPS = {
+    "all-reduce", "all-reduce-start", "all-gather", "all-gather-start",
+    "reduce-scatter", "all-to-all", "collective-permute",
+    "collective-permute-start", "ragged-all-to-all",
+}
+
+_BOOKKEEPING_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "all-reduce-done", "all-gather-done",
+    "collective-permute-done", "async-done", "copy-done", "partition-id",
+    "replica-id", "opt-barrier",
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> tuple[list[int], str]:
+    """Dims + dtype of the first array shape in a type string."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return [], ""
+    dtype, dims = m.groups()
+    return ([int(d) for d in dims.split(",")] if dims else []), dtype
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_type: str
+    rest: str           # raw text after the opcode's open paren
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list[Op]
+    types: dict         # op name -> out_type string
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_by_type: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_count: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    dot_flops: float = 0.0
+    conv_flops: float = 0.0
+
+    def add(self, other: "HloCost", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        self.collective_bytes += other.collective_bytes * scale
+        self.dot_flops += other.dot_flops * scale
+        self.conv_flops += other.conv_flops * scale
+        for k, v in other.collective_by_type.items():
+            self.collective_by_type[k] += v * scale
+        for k, v in other.collective_count.items():
+            self.collective_count[k] += v * scale
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "bytes": self.bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_by_type": dict(self.collective_by_type),
+            "collective_count": dict(self.collective_count),
+            "dot_flops": self.dot_flops,
+            "conv_flops": self.conv_flops,
+        }
+
+
+def _operand_list(rest: str) -> tuple[list[str], str]:
+    """Split `rest` (text after the op's open paren) into operand names and
+    the trailing attribute text."""
+    depth = 1
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                inner, attrs = rest[:i], rest[i + 1:]
+                return _OPERAND_RE.findall(inner), attrs
+    return _OPERAND_RE.findall(rest), ""
+
+
+def parse_computations(hlo_text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for line in hlo_text.splitlines():
+        stripped = line.rstrip()
+        if cur is None:
+            if stripped.endswith("{") and ("->" in stripped or stripped.startswith("ENTRY")):
+                m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)", stripped)
+                if m:
+                    cur = Computation(m.group(1), [], {})
+            continue
+        if stripped == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            name, out_type, opcode, rest = m.groups()
+            op = Op(name, opcode, out_type.strip(), rest)
+            cur.ops.append(op)
+            cur.types[name] = op.out_type
+    return comps
+
+
+def _operand_bytes(op: Op, comp: Computation) -> int:
+    names, _ = _operand_list(op.rest)
+    return sum(_shape_bytes(comp.types.get(n, "")) for n in names)
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_dims, _ = _shape_dims(op.out_type)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    names, attrs = _operand_list(op.rest)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", attrs)
+    if not names or not m:
+        return 2.0 * out_elems
+    lhs_dims, _ = _shape_dims(comp.types.get(names[0], ""))
+    k = 1
+    if m.group(1) and lhs_dims:
+        for idx in m.group(1).split(","):
+            i = int(idx)
+            if i < len(lhs_dims):
+                k *= lhs_dims[i]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    out_dims, _ = _shape_dims(op.out_type)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    names, _ = _operand_list(op.rest)
+    if len(names) < 2:
+        return 2.0 * out_elems
+    k_dims, _ = _shape_dims(comp.types.get(names[1], ""))
+    k_elems = 1
+    for d in k_dims[:-1]:   # exclude the output-feature dim
+        k_elems *= d
+    return 2.0 * out_elems * k_elems
+
+
+def _trip_count(cond: Computation) -> float:
+    """lax.scan conditions compare the induction var with constant(L)."""
+    consts = []
+    for op in cond.ops:
+        if op.opcode == "constant":
+            mm = re.match(r"\s*(\-?\d+)\s*\)", op.rest)
+            if mm:
+                consts.append(int(mm.group(1)))
+    if consts:
+        return float(max(consts))
+    return 1.0
+
+
+def _called_comps(op: Op) -> dict[str, str]:
+    """Map role -> computation name for ops that call computations."""
+    _, attrs = _operand_list(op.rest)
+    out = {}
+    for role in ("calls", "body", "condition", "to_apply"):
+        m = re.search(role + r"=[\{]?%?([\w.\-]+)", attrs)
+        if m:
+            out[role] = m.group(1)
+    return out
+
+
+def analyze(hlo_text: str, entry: str | None = None) -> HloCost:
+    comps = parse_computations(hlo_text)
+    if not comps:
+        return HloCost()
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", hlo_text)
+        entry = m.group(1) if m else next(iter(comps))
+
+    memo: dict[str, HloCost] = {}
+
+    def comp_cost(name: str, top_level: bool) -> HloCost:
+        key = f"{name}@{top_level}"
+        if key in memo:
+            return memo[key]
+        memo[key] = HloCost()  # cycle guard
+        cost = HloCost()
+        comp = comps.get(name)
+        if comp is None:
+            return cost
+        for op in comp.ops:
+            oc = HloCost()
+            if op.opcode == "dot":
+                oc.flops = oc.dot_flops = _dot_flops(op, comp)
+                oc.bytes = _shape_bytes(op.out_type) + _operand_bytes(op, comp)
+            elif op.opcode == "convolution":
+                oc.flops = oc.conv_flops = _conv_flops(op, comp)
+                oc.bytes = _shape_bytes(op.out_type) + _operand_bytes(op, comp)
+            elif op.opcode in COLLECTIVE_OPS:
+                opbytes = _operand_bytes(op, comp)
+                kind = op.opcode.replace("-start", "")
+                oc.collective_bytes = opbytes
+                oc.collective_by_type[kind] += opbytes
+                oc.collective_count[kind] += 1
+                oc.bytes = _shape_bytes(op.out_type) + opbytes
+            elif op.opcode == "fusion":
+                called = _called_comps(op).get("calls")
+                if called:
+                    inner = comp_cost(called, False)
+                    oc.add(inner)
+                # fusion boundary == HBM traffic unit
+                oc.bytes += _shape_bytes(op.out_type) + _operand_bytes(op, comp)
+            elif op.opcode == "while":
+                roles = _called_comps(op)
+                body, cond = roles.get("body"), roles.get("condition")
+                trips = _trip_count(comps[cond]) if cond in comps else 1.0
+                if body in comps:
+                    oc.add(comp_cost(body, True), scale=trips)
+                if cond in comps:
+                    oc.add(comp_cost(cond, False), scale=trips)
+            elif op.opcode in ("call", "conditional", "custom-call",
+                               "async-start"):
+                for _, cname in _called_comps(op).items():
+                    if cname in comps:
+                        oc.add(comp_cost(cname, top_level))
+                if op.opcode == "custom-call":
+                    oc.bytes += _shape_bytes(op.out_type) + _operand_bytes(op, comp)
+            elif op.opcode in _BOOKKEEPING_OPS:
+                pass
+            else:
+                # unfused elementwise/copy/reduce etc.
+                if top_level:
+                    oc.bytes = _shape_bytes(op.out_type) + _operand_bytes(op, comp)
+            cost.add(oc)
+        memo[key] = cost
+        return cost
+
+    return comp_cost(entry, True)
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Convenience: per-collective-type wire bytes (trip-count scaled)."""
+    c = analyze(hlo_text)
+    return dict(c.collective_by_type)

@@ -1,0 +1,72 @@
+"""Bucket assembly: ordering, pack/unpack, bucketed apply."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bucketer
+from repro.core.planner import MergePlan, TensorSpec, plan_fixed_size
+
+
+def _tree():
+    return {"a": {"w": jnp.arange(6.0).reshape(2, 3),
+                  "b": jnp.ones((4,))},
+            "z": jnp.full((2, 2), 3.0)}
+
+
+def test_backward_order_is_reversed_flatten():
+    tree = _tree()
+    order = [p for p, _ in bucketer.leaves_in_backward_order(tree)]
+    fwd = [jax.tree_util.keystr(p) for p, _ in
+           jax.tree_util.tree_flatten_with_path(tree)[0]]
+    assert order == list(reversed(fwd))
+
+
+def test_leaf_metadata():
+    metas = bucketer.leaf_metadata(_tree())
+    assert [m.size for m in metas] == [4, 6, 4]
+    assert metas[0].path == "['z']"
+    assert metas[0].nbytes == 16
+
+
+def test_pack_unpack_roundtrip():
+    tree = _tree()
+    metas = bucketer.leaf_metadata(tree)
+    leaves = [v for _, v in bucketer.leaves_in_backward_order(tree)]
+    buf = bucketer.pack(leaves)
+    assert buf.shape == (14,)
+    outs = bucketer.unpack(buf, metas)
+    for o, l in zip(outs, leaves):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(l))
+
+
+def test_unpack_size_mismatch():
+    metas = bucketer.leaf_metadata(_tree())
+    with pytest.raises(ValueError):
+        bucketer.unpack(jnp.zeros(13), metas)
+
+
+def test_apply_bucketed_identity():
+    tree = _tree()
+    metas = bucketer.leaf_metadata(tree)
+    specs = [TensorSpec(m.path, m.nbytes, 1e-3) for m in metas]
+    plan = plan_fixed_size(specs, 30)
+    out = bucketer.apply_bucketed(tree, plan, lambda buf: buf * 2.0)
+    for (_, a), (_, b) in zip(
+            bucketer.leaves_in_backward_order(out),
+            bucketer.leaves_in_backward_order(tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b) * 2.0)
+
+
+def test_apply_bucketed_plan_mismatch():
+    tree = _tree()
+    plan = MergePlan(((0,), (1,)))  # only 2 tensors, tree has 3
+    with pytest.raises(ValueError):
+        bucketer.apply_bucketed(tree, plan, lambda b: b)
+
+
+def test_tensor_specs_backward_order():
+    specs = bucketer.tensor_specs(_tree(), lambda m: m.size * 1e-6)
+    assert [s.name for s in specs] == ["['z']", "['a']['w']", "['a']['b']"]
+    assert specs[0].t_b == pytest.approx(4e-6)

@@ -1,0 +1,73 @@
+"""Checkpoint: roundtrip, atomic LATEST, async, resume semantics."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint
+from repro.train.train_state import TrainState
+
+
+def _state(v=1.0):
+    return TrainState(step=jnp.int32(7),
+                      params={"w": jnp.full((4, 4), v),
+                              "b": jnp.arange(3.0)},
+                      opt_state=[{"m": jnp.zeros(5), "v": jnp.ones(5)}])
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 7, _state(2.0))
+    assert checkpoint.latest_step(d) == 7
+    restored, step, _ = checkpoint.restore(d, _state(0.0))
+    assert step == 7
+    np.testing.assert_allclose(np.asarray(restored.params["w"]), 2.0)
+    np.testing.assert_allclose(np.asarray(restored.opt_state[0]["v"]), 1.0)
+
+
+def test_latest_pointer_moves(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 1, _state(1.0))
+    checkpoint.save(d, 2, _state(2.0))
+    assert checkpoint.latest_step(d) == 2
+    restored, step, _ = checkpoint.restore(d, _state(0.0))
+    np.testing.assert_allclose(np.asarray(restored.params["w"]), 2.0)
+    # older checkpoint still restorable explicitly
+    old, step, _ = checkpoint.restore(d, _state(0.0), step=1)
+    np.testing.assert_allclose(np.asarray(old.params["w"]), 1.0)
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 1, _state())
+    bad = TrainState(step=jnp.int32(0),
+                     params={"w": jnp.zeros((2, 2)), "b": jnp.zeros(3)},
+                     opt_state=[{"m": jnp.zeros(5), "v": jnp.zeros(5)}])
+    with pytest.raises(ValueError, match="shape mismatch"):
+        checkpoint.restore(d, bad)
+
+
+def test_missing_checkpoint(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        checkpoint.restore(str(tmp_path), _state())
+
+
+def test_async_checkpointer(tmp_path):
+    d = str(tmp_path)
+    ck = checkpoint.AsyncCheckpointer(d)
+    ck.save(5, _state(5.0))
+    ck.save(6, _state(6.0))  # waits for 5 internally
+    ck.wait()
+    assert checkpoint.latest_step(d) == 6
+    restored, step, _ = checkpoint.restore(d, _state(0.0))
+    np.testing.assert_allclose(np.asarray(restored.params["w"]), 6.0)
+
+
+def test_extra_metadata(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 3, _state(), extra={"data_position": 123})
+    _, _, extra = checkpoint.restore(d, _state())
+    assert extra == {"data_position": 123}

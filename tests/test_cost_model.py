@@ -1,0 +1,75 @@
+"""All-reduce cost models (paper Table 2 / Eq. 10-11) + fitting."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core import cost_model as cm
+
+
+def test_table2_shapes():
+    for name in cm.ALGORITHMS:
+        m = cm.make_model(name, 16, alpha=1e-5, beta=1e-9, gamma=1e-10)
+        assert m.a >= 0 and m.b >= 0
+        assert m.time(0) == 0.0
+        assert m.time(1 << 20) > m.a
+
+
+def test_ring_linear_startup_vs_tree_log():
+    """Ring startup grows linearly with N, double binary trees log N —
+    the reason the paper's Fig. 10 vs Fig. 11 differ."""
+    ring64 = cm.ring(64, 1e-5, 1e-9, 0).a
+    ring128 = cm.ring(128, 1e-5, 1e-9, 0).a
+    dbt64 = cm.double_binary_trees(64, 1e-5, 1e-9, 0).a
+    dbt128 = cm.double_binary_trees(128, 1e-5, 1e-9, 0).a
+    assert ring128 / ring64 > 1.9
+    assert dbt128 / dbt64 < 1.3
+
+
+@hypothesis.given(st.floats(1e-6, 1e-2), st.floats(1e-11, 1e-8),
+                  st.integers(1, 1 << 26), st.integers(1, 1 << 26))
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_merge_gain_is_startup(a, b, m1, m2):
+    """Eq. 11: T(M1) + T(M2) - T(M1+M2) == a (super-additivity)."""
+    m = cm.AllReduceModel(a, b)
+    assert m.merge_gain(m1, m2) == pytest.approx(a, rel=1e-9)
+
+
+def test_fit_recovers_parameters():
+    rng = np.random.default_rng(0)
+    a, b = 9.72e-4, 1.97e-9          # paper cluster 1
+    sizes = rng.integers(1 << 10, 1 << 26, 200).astype(float)
+    times = a + b * sizes + rng.normal(0, 1e-6, 200)
+    m = cm.fit(sizes, times)
+    assert m.a == pytest.approx(a, rel=0.05)
+    assert m.b == pytest.approx(b, rel=0.05)
+
+
+def test_fit_clamps_negative_intercept():
+    m = cm.fit([1e6, 2e6, 3e6], [1e-3, 2e-3, 3e-3])
+    assert m.a >= 0
+
+
+def test_hierarchical_flattens_to_linear():
+    h = cm.HierarchicalModel(intra=cm.tpu_ici_ring(16),
+                             inter=cm.tpu_dcn(2), intra_size=16)
+    flat = h.flat()
+    for nbytes in (1 << 10, 1 << 20, 1 << 30):
+        assert flat.time(nbytes) == pytest.approx(h.time(nbytes))
+    # inter-pod per-byte term is diluted by the intra reduce-scatter
+    assert h.b < cm.tpu_ici_ring(16).b + cm.tpu_dcn(2).b
+
+
+def test_production_comm_model():
+    single = cm.production_comm_model((16, 16), ("data", "model"))
+    multi = cm.production_comm_model((2, 16, 16), ("pod", "data", "model"))
+    assert multi.a > single.a          # DCN startup dominates
+    pod_only = cm.production_comm_model((2, 16, 16),
+                                        ("pod", "data", "model"), ("pod",))
+    assert pod_only.a > 0
+
+
+def test_unknown_algorithm():
+    with pytest.raises(ValueError):
+        cm.make_model("gossip", 8, 1e-5, 1e-9)

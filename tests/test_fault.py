@@ -1,0 +1,82 @@
+"""Fault tolerance: recovery loop, elastic replanning, stragglers."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import TensorSpec
+from repro.train import checkpoint, fault
+from repro.train.train_state import TrainState
+
+
+class _FakePipe:
+    def batch_at(self, step):
+        return {"x": np.float32(step)}
+
+
+def _mk_state(v):
+    return TrainState(step=jnp.int32(0), params={"w": jnp.float32(v)},
+                      opt_state=[])
+
+
+def test_recovery_retries_then_restores(tmp_path):
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path))
+    calls = {"n": 0, "fails": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        # fail persistently at step 5 until a restore resets us
+        if float(state.params["w"]) >= 5 and calls["fails"] < 5:
+            calls["fails"] += 1
+            raise RuntimeError("injected failure")
+        return (TrainState(state.step + 1,
+                           {"w": state.params["w"] + 1}, []), {})
+
+    state, final = fault.run_with_recovery(
+        step_fn, _mk_state(0.0), _FakePipe(), ck, 0, 8, ckpt_every=2,
+        max_retries=2)
+    assert final == 8
+    assert calls["fails"] == 5  # 2 retries + restore + re-fail path
+    assert checkpoint.latest_step(str(tmp_path)) == 8
+
+
+def test_recovery_clean_run(tmp_path):
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path))
+    seen = []
+
+    def step_fn(state, batch):
+        seen.append(float(batch["x"]))
+        return (TrainState(state.step + 1, state.params, []), {"loss": 0.0})
+
+    _, final = fault.run_with_recovery(step_fn, _mk_state(0.0), _FakePipe(),
+                                       ck, 0, 5, ckpt_every=100)
+    assert final == 5
+    assert seen == [0.0, 1.0, 2.0, 3.0, 4.0]  # deterministic replayable
+
+
+def test_elastic_replan_changes_with_scale():
+    specs = [TensorSpec(f"t{i}", 1 << 18, 1e-4) for i in range(20)]
+    plan16, m16 = fault.replan_for("mgwfbp", specs, (16, 16),
+                                   ("data", "model"), ("data",))
+    plan512, m512 = fault.replan_for("mgwfbp", specs, (2, 16, 16),
+                                     ("pod", "data", "model"),
+                                     ("pod", "data"))
+    assert m512.a > m16.a
+    # bigger startup -> at least as much merging
+    assert plan512.num_buckets <= plan16.num_buckets
+
+
+def test_straggler_monitor():
+    mon = fault.StragglerMonitor(warmup=3, threshold=1.5)
+    for t in range(10):
+        for h in ("h0", "h1", "h2", "h3"):
+            mon.record(h, 1.0 if h != "h2" else 2.5)
+    assert mon.stragglers() == ["h2"]
+
+
+def test_straggler_monitor_needs_warmup():
+    mon = fault.StragglerMonitor(warmup=5)
+    mon.record("a", 1.0)
+    mon.record("b", 99.0)
+    assert mon.stragglers() == []

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train-gradient step on CPU, asserting output shapes and finiteness.
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry
+
+ARCHS = registry.list_archs()
+
+
+def _batch(bundle, b=2, s=32):
+    cfg = bundle.cfg
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                     cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                     cfg.vocab_size),
+    }
+    if cfg.enc_dec:
+        batch["enc_embeds"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(3), (b, 32, cfg.d_model)).astype(jnp.bfloat16)
+    if cfg.frontend == "vision":
+        batch["prefix_embeds"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(4), (b, cfg.frontend_prefix_len,
+                                    cfg.d_model)).astype(jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_smoke_loss_and_grads(arch):
+    bundle = registry.reduced_arch(arch)
+    model = bundle.model()
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    assert n_params > 1000
+    batch = _batch(bundle)
+    (loss, metrics), grads = jax.value_and_grad(model.loss, has_aux=True)(
+        params, batch)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    assert float(loss) > 0
+    assert metrics["tokens"] == 64
+    gn = 0.0
+    for g in jax.tree.leaves(grads):
+        assert np.all(np.isfinite(np.asarray(g, np.float32))), \
+            f"{arch}: non-finite grads"
+        gn += float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+    assert gn > 0, f"{arch}: all-zero gradients"
+    # grads cover every parameter leaf
+    assert len(jax.tree.leaves(grads)) == len(jax.tree.leaves(params))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_arch_structure_matches_assignment(arch):
+    """Full (unreduced) config structural checks against the assignment."""
+    expected = {
+        "qwen2-1.5b": dict(num_layers=28, d_model=1536, num_heads=12,
+                           num_kv_heads=2, d_ff=8960, vocab_size=151936),
+        "deepseek-67b": dict(num_layers=95, d_model=8192, num_heads=64,
+                             num_kv_heads=8, d_ff=22016, vocab_size=102400),
+        "gemma3-12b": dict(num_layers=48, d_model=3840, num_heads=16,
+                           num_kv_heads=8, d_ff=15360, vocab_size=262144),
+        "stablelm-1.6b": dict(num_layers=24, d_model=2048, num_heads=32,
+                              num_kv_heads=32, d_ff=5632,
+                              vocab_size=100352),
+        "phi-3-vision-4.2b": dict(num_layers=32, d_model=3072, num_heads=32,
+                                  num_kv_heads=32, d_ff=8192,
+                                  vocab_size=32064),
+        "deepseek-moe-16b": dict(num_layers=28, d_model=2048, num_heads=16,
+                                 num_kv_heads=16, vocab_size=102400),
+        "arctic-480b": dict(num_layers=35, d_model=7168, num_heads=56,
+                            num_kv_heads=8, d_ff=4864, vocab_size=32000),
+        "jamba-v0.1-52b": dict(num_layers=32, d_model=4096, num_heads=32,
+                               num_kv_heads=8, d_ff=14336,
+                               vocab_size=65536),
+        "whisper-base": dict(num_layers=6, d_model=512, num_heads=8,
+                             num_kv_heads=8, d_ff=2048, vocab_size=51865),
+        "xlstm-125m": dict(num_layers=12, d_model=768, num_heads=4,
+                           num_kv_heads=4, d_ff=0, vocab_size=50304),
+    }[arch]
+    cfg = registry.get_arch(arch).cfg
+    for k, v in expected.items():
+        assert getattr(cfg, k) == v, f"{arch}.{k}"
+    # MoE structure
+    if arch == "deepseek-moe-16b":
+        assert cfg.moe.num_experts == 64 and cfg.moe.top_k == 6
+        assert cfg.moe.num_shared_experts == 2
+        assert cfg.moe.d_expert == 1408
+    if arch == "arctic-480b":
+        assert cfg.moe.num_experts == 128 and cfg.moe.top_k == 2
+        assert cfg.dense_residual
+    if arch == "jamba-v0.1-52b":
+        assert cfg.moe.num_experts == 16 and cfg.moe.top_k == 2
+        assert cfg.attn_interval == 8 and cfg.mamba is not None
+    if arch == "gemma3-12b":
+        assert cfg.sliding_window == 1024 and cfg.global_interval == 6
+    if arch == "whisper-base":
+        assert cfg.enc_dec and cfg.enc_layers == 6
+    if arch == "xlstm-125m":
+        assert cfg.xlstm_slstm_interval > 0
+
+
+def test_full_param_counts_in_expected_range():
+    """Total parameter counts are in the advertised ballpark."""
+    import re
+    expected_b = {"qwen2-1.5b": (1.2, 2.0), "deepseek-67b": (60, 72),
+                  "gemma3-12b": (10, 14), "stablelm-1.6b": (1.2, 2.1),
+                  "phi-3-vision-4.2b": (3.4, 4.6),
+                  "deepseek-moe-16b": (13, 20), "arctic-480b": (420, 520),
+                  "jamba-v0.1-52b": (45, 60), "whisper-base": (0.04, 0.12),
+                  "xlstm-125m": (0.08, 0.22)}
+    for arch, (lo, hi) in expected_b.items():
+        bundle = registry.get_arch(arch)
+        model = bundle.model()
+        shapes = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+        assert lo * 1e9 <= n <= hi * 1e9, f"{arch}: {n/1e9:.2f}B params"
+
+
+def test_block_kind_patterns():
+    cfg = registry.get_arch("jamba-v0.1-52b").cfg
+    kinds = [cfg.block_kind(i)["mixer"] for i in range(8)]
+    assert kinds.count("attn") == 1 and kinds.count("mamba") == 7
+    ffns = [cfg.block_kind(i)["ffn"] for i in range(8)]
+    assert ffns.count("moe") == 4
+
+    g = registry.get_arch("gemma3-12b").cfg
+    wins = [g.block_kind(i)["window"] for i in range(12)]
+    assert wins.count(0) == 2 and wins.count(1024) == 10  # 5:1 local:global

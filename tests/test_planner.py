@@ -1,0 +1,138 @@
+"""Planner correctness: Algorithm 1, DP optimality, baselines.
+
+Key property results (also reported in EXPERIMENTS.md):
+
+* ``plan_dp_optimal`` is certified optimal: never worse than exhaustive
+  search over all 2^(L-1) contiguous plans.
+* The paper's Algorithm 1 matches the optimum in the large majority of
+  random instances but is *not* always optimal (greedy local criterion,
+  gaps up to ~6% on adversarial instances) — an honest reproduction
+  finding; the paper's Theorem 1 proof is a local-exchange argument that
+  does not cover interactions between merge decisions.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import (MergePlan, TensorSpec, make_plan,
+                                plan_brute_force, plan_dp_optimal,
+                                plan_fixed_size, plan_mgwfbp, plan_single,
+                                plan_wfbp)
+from repro.core.simulator import simulate
+
+
+def _mk_specs(sizes, times):
+    return [TensorSpec(f"t{i}", s, t) for i, (s, t) in
+            enumerate(zip(sizes, times))]
+
+
+specs_strategy = st.integers(1, 8).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.integers(1, 1 << 22), min_size=n, max_size=n),
+        st.lists(st.floats(1e-6, 5e-3), min_size=n, max_size=n),
+    ))
+
+model_strategy = st.tuples(st.floats(0, 2e-3), st.floats(1e-11, 1e-8))
+
+
+@hypothesis.given(specs_strategy, model_strategy)
+@hypothesis.settings(max_examples=150, deadline=None)
+def test_dp_optimal_is_optimal(sizes_times, ab):
+    sizes, times = sizes_times
+    specs = _mk_specs(sizes, times)
+    model = AllReduceModel(*ab)
+    t_dp = simulate(specs, plan_dp_optimal(specs, model), model).t_iter
+    t_bf = simulate(specs, plan_brute_force(specs, model), model).t_iter
+    assert t_dp <= t_bf + 1e-12
+
+
+@hypothesis.given(specs_strategy, model_strategy)
+@hypothesis.settings(max_examples=150, deadline=None)
+def test_mgwfbp_beats_or_matches_baselines(sizes_times, ab):
+    """The paper's central claim: MG-WFBP <= min(WFBP, SyncEASGD)."""
+    sizes, times = sizes_times
+    specs = _mk_specs(sizes, times)
+    model = AllReduceModel(*ab)
+    t_mg = simulate(specs, plan_mgwfbp(specs, model), model).t_iter
+    t_wfbp = simulate(specs, plan_wfbp(specs), model).t_iter
+    t_single = simulate(specs, plan_single(specs), model).t_iter
+    assert t_mg <= min(t_wfbp, t_single) + 1e-12
+
+
+@hypothesis.given(specs_strategy, model_strategy)
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_mgwfbp_near_optimal(sizes_times, ab):
+    """Algorithm 1 is within 10% of the certified optimum (empirically it
+    matches exactly in ~94% of instances; see module docstring)."""
+    sizes, times = sizes_times
+    specs = _mk_specs(sizes, times)
+    model = AllReduceModel(*ab)
+    t_mg = simulate(specs, plan_mgwfbp(specs, model), model).t_iter
+    t_dp = simulate(specs, plan_dp_optimal(specs, model), model).t_iter
+    assert t_mg <= 1.10 * t_dp + 1e-12
+
+
+def test_extremes():
+    """a -> 0 favours WFBP granularity; a -> inf favours single bucket."""
+    specs = _mk_specs([1 << 20] * 8, [1e-3] * 8)
+    no_startup = AllReduceModel(0.0, 1e-9)
+    plan = plan_mgwfbp(specs, no_startup)
+    t = simulate(specs, plan, no_startup).t_iter
+    t_wfbp = simulate(specs, plan_wfbp(specs), no_startup).t_iter
+    assert t <= t_wfbp + 1e-12
+
+    huge_startup = AllReduceModel(10.0, 1e-9)
+    plan = plan_mgwfbp(specs, huge_startup)
+    assert plan.num_buckets == 1  # converges to SyncEASGD (paper §6.4)
+
+
+def test_plan_structure():
+    specs = _mk_specs([100, 200, 300, 400], [1e-3] * 4)
+    plan = plan_fixed_size(specs, 350)
+    assert plan.num_tensors == 4
+    # close a bucket once accumulated bytes reach the cap
+    assert [sum(specs[i].nbytes for i in b) for b in plan.buckets] == \
+        [600, 400]
+    flags = plan.merged_flags()
+    assert flags == [True, True, False, False]
+    rebuilt = MergePlan.from_merged_flags(flags)
+    assert rebuilt.buckets == plan.buckets
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError):
+        MergePlan(((1, 0),))        # not contiguous
+    with pytest.raises(ValueError):
+        MergePlan(((0,), (2,)))     # gap
+
+
+def test_make_plan_dispatch():
+    specs = _mk_specs([100, 200], [1e-3, 1e-3])
+    model = AllReduceModel(1e-3, 1e-9)
+    for s in ("wfbp", "single", "mgwfbp", "dp_optimal", "fixed:150"):
+        p = make_plan(s, specs, model)
+        assert p.num_tensors == 2
+    with pytest.raises(ValueError):
+        make_plan("nope", specs, model)
+
+
+def test_alg1_known_suboptimal_cases_exist():
+    """Regression-documenting test: record that Algorithm 1 can be beaten
+    (gap observed during reproduction; see EXPERIMENTS.md §Planner)."""
+    import random
+    random.seed(0)
+    beaten = 0
+    for _ in range(300):
+        n = random.randint(1, 9)
+        specs = _mk_specs(
+            [random.randint(1, 500) * 1024 for _ in range(n)],
+            [random.uniform(1e-4, 5e-3) for _ in range(n)])
+        model = AllReduceModel(random.uniform(0, 2e-3),
+                               random.uniform(1e-10, 5e-9))
+        t1 = simulate(specs, plan_mgwfbp(specs, model), model).t_iter
+        td = simulate(specs, plan_dp_optimal(specs, model), model).t_iter
+        if t1 > td + 1e-9:
+            beaten += 1
+    assert 0 < beaten < 60   # suboptimal sometimes, not usually

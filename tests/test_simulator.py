@@ -1,0 +1,77 @@
+"""Pipeline simulator invariants (paper Eqs. 6-8)."""
+
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import TensorSpec, plan_single, plan_wfbp, make_plan
+from repro.core.simulator import compare_strategies, simulate, speedup
+
+
+def _specs(sizes, times):
+    return [TensorSpec(f"t{i}", s, t) for i, (s, t) in
+            enumerate(zip(sizes, times))]
+
+
+specs_strategy = st.integers(1, 10).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.integers(1, 1 << 24), min_size=n, max_size=n),
+        st.lists(st.floats(1e-6, 1e-2), min_size=n, max_size=n)))
+
+
+@hypothesis.given(specs_strategy, st.floats(0, 1e-3), st.floats(1e-11, 1e-8),
+                  st.floats(0, 0.1))
+@hypothesis.settings(max_examples=150, deadline=None)
+def test_timeline_invariants(sizes_times, a, b, t_f):
+    specs = _specs(*sizes_times)
+    model = AllReduceModel(a, b)
+    for strategy in ("wfbp", "single", "mgwfbp"):
+        res = simulate(specs, make_plan(strategy, specs, model), model, t_f)
+        # Eq. 7: a bucket's comm starts no earlier than its readiness and
+        # no earlier than the previous bucket's end.
+        prev_end = 0.0
+        for ev in res.events:
+            assert ev.start >= ev.ready - 1e-12
+            assert ev.start >= prev_end - 1e-12
+            assert ev.end == pytest.approx(
+                ev.start + model.time(ev.nbytes), abs=1e-12)
+            prev_end = ev.end
+        assert res.comm_end >= res.t_b_total - 1e-12
+        assert res.t_iter == pytest.approx(t_f + res.comm_end, abs=1e-12)
+        assert res.t_c_no >= -1e-12
+        assert 0.0 <= res.overlap_ratio <= 1.0 + 1e-12
+
+
+def test_single_layer_closed_form():
+    """SyncEASGD: t_iter = t_f + t_b + T(total) exactly (paper Eq. 9)."""
+    specs = _specs([100, 200, 300], [1e-3, 2e-3, 3e-3])
+    model = AllReduceModel(1e-3, 1e-9)
+    res = simulate(specs, plan_single(specs), model, t_f=0.01)
+    assert res.t_iter == pytest.approx(0.01 + 6e-3 + model.time(600))
+    assert res.overlap_ratio == pytest.approx(0.0)
+
+
+def test_wfbp_full_overlap_when_comm_fast():
+    """Case 1 (paper Fig. 2a): fast comm hides under compute except the
+    final tensor's all-reduce."""
+    specs = _specs([8] * 5, [1.0] * 5)
+    model = AllReduceModel(1e-6, 1e-9)
+    res = simulate(specs, plan_wfbp(specs), model)
+    assert res.t_c_no == pytest.approx(model.time(8), rel=1e-6)
+
+
+def test_speedup_eq5():
+    """S(N) = N / (1 + t_c_no/(t_f+t_b)) (paper Eqs. 4-5)."""
+    specs = _specs([1 << 20] * 4, [1e-3] * 4)
+    model = AllReduceModel(1e-3, 1e-9)
+    res = simulate(specs, plan_wfbp(specs), model, t_f=2e-3)
+    s = speedup(specs, plan_wfbp(specs), model, 2e-3, 16)
+    assert s == pytest.approx(16 / (1 + res.t_c_no / (2e-3 + 4e-3)))
+    assert s <= 16
+
+
+def test_compare_strategies_keys():
+    specs = _specs([100] * 3, [1e-3] * 3)
+    res = compare_strategies(specs, AllReduceModel(1e-4, 1e-9))
+    assert set(res) == {"wfbp", "single", "mgwfbp", "dp_optimal"}

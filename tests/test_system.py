@@ -1,0 +1,86 @@
+"""System behaviour: public API surface + cross-component contracts."""
+
+import jax
+import pytest
+
+import repro.core as core
+from repro.configs.base import SHAPES
+from repro.models import registry
+
+
+def test_public_api_importable():
+    from repro.core import (AllReduceModel, MergePlan, TensorSpec,
+                            make_plan, simulate)
+    from repro.train import build_train_step, checkpoint, fault
+    from repro.serve import ServeEngine
+    from repro.kernels.flash_attention import ops as fa
+    assert callable(make_plan) and callable(simulate)
+
+
+def test_all_assigned_archs_registered():
+    assert sorted(registry.ARCHS) == sorted([
+        "qwen2-1.5b", "deepseek-67b", "gemma3-12b", "stablelm-1.6b",
+        "phi-3-vision-4.2b", "deepseek-moe-16b", "arctic-480b",
+        "jamba-v0.1-52b", "whisper-base", "xlstm-125m"])
+    assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                           "long_500k"}
+
+
+def test_cell_assignment_covers_40_with_documented_skips():
+    """40 (arch x shape) cells total; every skip carries a reason."""
+    total = skipped = 0
+    for arch in registry.list_archs():
+        b = registry.get_arch(arch)
+        for shape in SHAPES:
+            total += 1
+            if shape in b.skip_shapes:
+                skipped += 1
+                assert len(b.skip_shapes[shape]) > 10  # documented reason
+    assert total == 40
+    # long_500k runs for ssm/hybrid/local-window archs only
+    runs_long = [a for a in registry.list_archs()
+                 if "long_500k" not in registry.get_arch(a).skip_shapes]
+    assert sorted(runs_long) == ["gemma3-12b", "jamba-v0.1-52b",
+                                 "xlstm-125m"]
+
+
+def test_input_specs_no_allocation():
+    """input_specs are ShapeDtypeStructs — never device arrays."""
+    for arch in ("qwen2-1.5b", "whisper-base", "phi-3-vision-4.2b"):
+        b = registry.get_arch(arch)
+        specs = registry.train_input_specs(b.cfg, SHAPES["train_4k"])
+        for leaf in jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+        assert specs["tokens"].shape == (256, 4096)
+
+
+def test_decode_input_specs_structural():
+    b = registry.get_arch("gemma3-12b")
+    model = b.model()
+    specs = registry.decode_input_specs(b.cfg, SHAPES["decode_32k"], model)
+    assert specs["tokens"].shape == (128, 1)
+    ks = [l for p, l in jax.tree_util.tree_flatten_with_path(
+        specs["cache"])[0] if "['k']" in jax.tree_util.keystr(p)]
+    # sliding-window layers cache at most `window` slots
+    assert min(x.shape[-3] for x in ks) == b.cfg.sliding_window
+    assert max(x.shape[-3] for x in ks) == 32768
+
+
+def test_plan_consistency_across_build():
+    """build_plan is deterministic and honours the strategy override."""
+    from repro.train.step import build_plan
+    b = registry.get_arch("qwen2-1.5b")
+    params_shape = jax.eval_shape(
+        lambda: b.model().init(jax.random.PRNGKey(0)))
+    run = b.run_config("train_4k")
+    p1, _, specs, model = build_plan(params_shape, run, (16, 16),
+                                     ("data", "model"))
+    p2, _, _, _ = build_plan(params_shape, run, (16, 16), ("data", "model"))
+    assert p1.buckets == p2.buckets
+    pw, _, _, _ = build_plan(params_shape, run, (16, 16), ("data", "model"),
+                             strategy="wfbp")
+    assert pw.num_buckets == len(specs)
+    ps, _, _, _ = build_plan(params_shape, run, (16, 16), ("data", "model"),
+                             strategy="single")
+    assert ps.num_buckets == 1
