@@ -1,0 +1,188 @@
+"""Event-driven cluster-simulation suite (beyond Figs. 10-11).
+
+Reproduces the paper's §7 *structural* scaling results through the new
+``repro.sim`` engine instead of the closed form — WFBP and SyncEASGD
+speedup curves cross under ring, MG-WFBP dominates both everywhere — then
+runs the scenarios only an event engine can express:
+
+  * straggler sweep        (sync-SGD step time is a max over workers)
+  * elastic resize         (online (a, b) refit -> planner.replan mid-run)
+  * bursty background      (processor-sharing link contention)
+  * two-job contention     (independent jobs time-sharing one network)
+
+Every scenario's timeline round-trips through Chrome-trace JSON
+(``repro.sim.trace``), which is also asserted here.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+from benchmarks.paper_profiles import tensor_profile
+from repro.core.planner import make_plan
+from repro.core.simulator import simulate
+from repro.sim import scenarios, trace
+from repro.sim.network import FlatTopology
+
+EPS = 1e-9
+
+
+def _speedup(n: int, t_iter: float, t_f: float, t_b: float) -> float:
+    """Paper Eqs. 4-5 on an engine-measured iteration time."""
+    t_c_no = max(t_iter - (t_f + t_b), 0.0)
+    return n / (1.0 + t_c_no / (t_f + t_b))
+
+
+def _engine_t_iter(sim) -> float:
+    job = next(iter(sim.run().jobs.values()))
+    return job.iterations[-1].t_iter
+
+
+def _scaling_rows(rows: list) -> None:
+    for alg in ("ring", "double_binary_trees"):
+        for mname in ("googlenet", "resnet50"):
+            specs, t_f = tensor_profile(mname)
+            t_b = sum(s.t_b for s in specs)
+            cross = None
+            prev_rel = None
+            max_dev = 0.0
+            for p in range(2, 12):
+                n = 2 ** p
+                model = FlatTopology(alg, n, scenarios.PAPER_ALPHA,
+                                     scenarios.PAPER_BETA,
+                                     scenarios.PAPER_GAMMA).linear_model()
+                s = {}
+                for strat in ("wfbp", "single", "mgwfbp"):
+                    plan = make_plan(strat, specs, model)
+                    sim = scenarios.paper_scaling(
+                        specs, t_f, n, algorithm=alg, strategy=strat,
+                        plan=plan)
+                    t_iter = _engine_t_iter(sim)
+                    s[strat] = _speedup(n, t_iter, t_f, t_b)
+                    # engine vs closed form on the shared domain
+                    ref = simulate(specs, plan, model, t_f).t_iter
+                    max_dev = max(max_dev, abs(ref - t_iter))
+                rel = s["wfbp"] - s["single"]
+                if prev_rel is not None and rel * prev_rel < 0 and \
+                        cross is None:
+                    cross = n
+                prev_rel = rel
+                assert s["mgwfbp"] >= max(s["wfbp"], s["single"]) - EPS, \
+                    (alg, mname, n, s)
+                rows.append((f"cluster_sim.scaling.{alg}.{mname}.N{n}",
+                             s["mgwfbp"] / n,
+                             f"wfbp={s['wfbp']/n:.2f} "
+                             f"single={s['single']/n:.2f} engine-eff"))
+            assert max_dev < 1e-9, (alg, mname, max_dev)
+            if alg == "ring":
+                assert cross is not None, \
+                    f"{mname}: WFBP/SyncEASGD ring curves never crossed"
+                rows.append((f"cluster_sim.scaling.ring.{mname}.crossover_N",
+                             cross, "curves cross (paper Fig. 10, engine)"))
+            rows.append((f"cluster_sim.scaling.{alg}.{mname}.engine_vs_cf",
+                         max_dev, "max |engine - closed form| seconds"))
+
+
+def _straggler_rows(rows: list) -> None:
+    specs, t_f = tensor_profile("googlenet")
+    n = 16
+    prev = None
+    for factor in (1.0, 1.25, 1.5, 2.0, 3.0):
+        sim = scenarios.straggler(specs, t_f, n, slow_factor=factor)
+        t_iter = _engine_t_iter(sim)
+        if prev is not None:
+            assert t_iter >= prev - EPS, (factor, t_iter, prev)
+        rows.append((f"cluster_sim.straggler.x{factor:g}", t_iter * 1e3,
+                     "ms/iter, 1 slow worker of 16 (sync-SGD max)"))
+        if factor == 1.0:
+            base = t_iter
+        prev = t_iter
+    rows.append(("cluster_sim.straggler.stretch_at_3x", prev / base,
+                 "t_iter(3x straggler)/t_iter(homogeneous)"))
+
+
+def _elastic_rows(rows: list) -> None:
+    specs, t_f = tensor_profile("googlenet")
+    n_before, n_after = 8, 32
+    sim, report = scenarios.elastic_resize(
+        specs, t_f, n_before=n_before, n_after=n_after, resize_at=1,
+        iters=4)
+    res = sim.run()
+    job = res.job("train")
+    t_before = job.iterations[0].t_iter
+    t_after = job.iterations[-1].t_iter
+    assert report.plan_after is not None, "resize hook never fired"
+
+    # ideal: a fresh run planned directly for the post-resize cluster
+    ideal = _engine_t_iter(scenarios.paper_scaling(specs, t_f, n_after))
+    if not report.used_fallback:
+        # exact-fit world: online refit must recover the true model and
+        # land the run on the from-scratch plan
+        assert abs(t_after - ideal) < 1e-9, (t_after, ideal)
+        true_model = FlatTopology(
+            "ring", n_before, scenarios.PAPER_ALPHA, scenarios.PAPER_BETA,
+            scenarios.PAPER_GAMMA).linear_model()
+        rows.append(("cluster_sim.elastic.refit_a_rel_err",
+                     abs(report.fitted.a - true_model.a) /
+                     max(true_model.a, 1e-30),
+                     f"fitted a={report.fitted.a:.3e} vs true"))
+    rows.append(("cluster_sim.elastic.t_iter_before_ms", t_before * 1e3,
+                 f"N={n_before} buckets={report.plan_before.num_buckets}"))
+    rows.append(("cluster_sim.elastic.t_iter_after_ms", t_after * 1e3,
+                 f"N={n_after} buckets="
+                 f"{report.plan_after.num_buckets} (refit+replanned)"))
+    rows.append(("cluster_sim.elastic.vs_fresh_plan", t_after / ideal,
+                 "1.0 = online replan matches from-scratch plan"))
+
+    # chrome trace round-trip on this scenario's full timeline
+    fd, path = tempfile.mkstemp(suffix=".json")
+    try:
+        os.close(fd)
+        trace.write_chrome_trace(path, res.spans)
+        back = trace.read_chrome_trace(path)
+        with open(path) as f:
+            n_events = len(json.load(f)["traceEvents"])
+        assert back == res.spans, "chrome trace did not round-trip"
+        assert n_events == len(res.spans) > 0
+    finally:
+        os.unlink(path)
+    rows.append(("cluster_sim.elastic.trace_events", len(res.spans),
+                 "spans round-tripped through chrome-trace JSON"))
+
+
+def _contention_rows(rows: list) -> None:
+    specs, t_f = tensor_profile("googlenet")
+    # bursty background traffic
+    quiet = _engine_t_iter(scenarios.paper_scaling(specs, t_f, 16, iters=4))
+    noisy_sim = scenarios.bursty(specs, t_f, 16, burst_flows=3,
+                                 horizon_iters=4)
+    noisy = _engine_t_iter(noisy_sim)
+    assert noisy >= quiet - EPS
+    rows.append(("cluster_sim.bursty.stretch", noisy / quiet,
+                 "t_iter under 3-flow bursts / quiet network"))
+
+    # two jobs sharing the link
+    specs_b, t_f_b = tensor_profile("resnet50")
+    alone_a = _engine_t_iter(scenarios.paper_scaling(specs, t_f, 8, iters=2))
+    alone_b = _engine_t_iter(scenarios.paper_scaling(specs_b, t_f_b, 8,
+                                                     iters=2))
+    shared = scenarios.two_jobs(specs, t_f, specs_b, t_f_b,
+                                n_workers=8, iters=2).run()
+    both_a = shared.job("job_a").iterations[-1].t_iter
+    both_b = shared.job("job_b").iterations[-1].t_iter
+    assert both_a >= alone_a - EPS and both_b >= alone_b - EPS
+    rows.append(("cluster_sim.two_jobs.stretch_a", both_a / alone_a,
+                 "googlenet t_iter shared/alone (link contention)"))
+    rows.append(("cluster_sim.two_jobs.stretch_b", both_b / alone_b,
+                 "resnet50 t_iter shared/alone (link contention)"))
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows: list[tuple[str, float, str]] = []
+    _scaling_rows(rows)
+    _straggler_rows(rows)
+    _elastic_rows(rows)
+    _contention_rows(rows)
+    return rows

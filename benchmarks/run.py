@@ -5,7 +5,9 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
   allreduce_model  — Fig. 4   (linear all-reduce model fit)
   tensor_dist      — Fig. 5   (tensor-size distributions)
   nonoverlap       — Figs 6-9 (t_c^no per strategy per cluster)
-  scaling_sim      — Figs 10-11 (4..2048-worker trace simulation)
+  scaling_sim      — Figs 10-11 (4..2048-worker closed-form fast path)
+  cluster_sim      — §7 via the event engine + beyond-paper scenarios
+                     (stragglers, elastic refit+replan, bursts, contention)
   planner_bench    — §4.2     (O(L^2) one-time planning cost)
   kernels_bench    — kernels  (structural tile/bandwidth notes)
   roofline         — EXPERIMENTS.md §Roofline terms from dry-run artifacts
@@ -18,14 +20,15 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (allreduce_model, kernels_bench, nonoverlap,
-                            planner_bench, roofline, scaling_sim,
-                            tensor_dist)
+    from benchmarks import (allreduce_model, cluster_sim, kernels_bench,
+                            nonoverlap, planner_bench, roofline,
+                            scaling_sim, tensor_dist)
     suites = [
         ("allreduce_model", allreduce_model.run),
         ("tensor_dist", tensor_dist.run),
         ("nonoverlap", nonoverlap.run),
         ("scaling_sim", scaling_sim.run),
+        ("cluster_sim", cluster_sim.run),
         ("planner_bench", planner_bench.run),
         ("kernels_bench", kernels_bench.run),
         ("roofline", roofline.run),

@@ -9,22 +9,21 @@ Expected paper behaviours, all checked here:
   * 64-worker ring: MG-WFBP ~1.7x over WFBP / ~1.3x over SyncEASGD;
   * at >= 256 ring workers MG-WFBP converges to single-layer comms;
   * with double binary trees WFBP-family stays ahead of SyncEASGD.
+
+This suite is the closed-form FAST PATH over the shared scenario-catalog
+constants (``repro.sim.scenarios.PAPER_ALPHA/BETA/GAMMA``); the
+event-driven twin — same clusters through the ``repro.sim`` engine, plus
+the scenarios the closed form cannot express — is
+``benchmarks/cluster_sim.py``, which also asserts the two paths agree.
 """
 
 from __future__ import annotations
 
-import math
-
 from benchmarks.paper_profiles import tensor_profile
-from repro.core import cost_model as cm
 from repro.core.planner import make_plan
 from repro.core.simulator import simulate, speedup
-
-# point-to-point constants matching the paper's fitted cluster 1 at N=8
-# (ring: a = 2(N-1)alpha -> alpha = 972us/14; b -> beta per byte)
-ALPHA = 9.72e-4 / 14
-BETA = 1.97e-9 / (2 * 7 / 8)
-GAMMA = BETA / 10
+from repro.sim.network import FlatTopology
+from repro.sim.scenarios import PAPER_ALPHA, PAPER_BETA, PAPER_GAMMA
 
 
 def run() -> list[tuple[str, float, str]]:
@@ -37,7 +36,8 @@ def run() -> list[tuple[str, float, str]]:
             converged_256 = None
             for p in range(2, 12):
                 n = 2 ** p
-                model = cm.make_model(alg, n, ALPHA, BETA, GAMMA)
+                model = FlatTopology(alg, n, PAPER_ALPHA, PAPER_BETA,
+                                     PAPER_GAMMA).linear_model()
                 s = {}
                 for strat in ("wfbp", "single", "mgwfbp"):
                     plan = make_plan(strat, specs, model)

@@ -42,3 +42,24 @@ for name, shape, axes, dp in [
 print("\nLarger startup cost (more pods) -> heavier merging, as the paper "
       "predicts;\nthe checkpoint format is mesh-invariant so the restart "
       "reshards transparently.")
+
+# ---------------------------------------------------------------------------
+# The same loop, closed *inside* the event-driven cluster simulator: run a
+# few iterations, least-squares-refit (a, b) from the observed bucket
+# timings, invert to point-to-point constants, predict the post-resize
+# model, replan, and keep training — no ground-truth peeking.
+# ---------------------------------------------------------------------------
+from repro.sim import scenarios
+
+sim, report = scenarios.elastic_resize(specs, t_f=0.05, n_before=8,
+                                       n_after=32, resize_at=1, iters=4)
+job = sim.run().job("train")
+print("\nsimulated elastic resize 8 -> 32 workers (online refit + replan):")
+print(f"  iter times (ms): "
+      f"{', '.join(f'{t*1e3:.1f}' for t in job.t_iters)}")
+if report.fitted is not None:
+    print(f"  refit:  a={report.fitted.a*1e6:.1f}us "
+          f"b={report.fitted.b*1e12:.2f}ps/B  -> predicted "
+          f"a'={report.predicted.a*1e6:.1f}us for N=32")
+print(f"  plan: {report.plan_before.num_buckets} buckets -> "
+      f"{report.plan_after.num_buckets} buckets after resize")

@@ -18,6 +18,7 @@ import jax
 
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import DataPipeline
+from repro.launch.mesh import make_mesh
 from repro.models import registry
 from repro.train import checkpoint, fault
 from repro.train.step import build_train_step
@@ -46,8 +47,7 @@ def main():
                               shape=shape, microbatch=0,
                               learning_rate=args.lr)
     model = bundle.model(par)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     step_fn, init_fn, art = build_train_step(model, run, mesh)
     state = init_fn(jax.random.PRNGKey(0))
     n = sum(x.size for x in jax.tree.leaves(state.params))

@@ -21,7 +21,8 @@ from repro.core.planner import (
     plan_brute_force,
     replan,
 )
-from repro.core.simulator import simulate, speedup, compare_strategies, SimResult
+from repro.core.simulator import (simulate, speedup, compare_strategies,
+                                  cross_validate, SimResult)
 from repro.core import bucketer, comm, profiler
 
 __all__ = [
@@ -29,6 +30,7 @@ __all__ = [
     "production_comm_model", "PAPER_CLUSTERS",
     "TensorSpec", "MergePlan", "make_plan", "plan_wfbp", "plan_single",
     "plan_fixed_size", "plan_mgwfbp", "plan_dp_optimal", "plan_brute_force",
-    "replan", "simulate", "speedup", "compare_strategies", "SimResult",
+    "replan", "simulate", "speedup", "compare_strategies", "cross_validate",
+    "SimResult",
     "bucketer", "comm", "profiler",
 ]

@@ -33,12 +33,38 @@ from repro.core.planner import MergePlan
 AxisNames = str | Sequence[str]
 
 
+def axis_size(name: str) -> int:
+    """Static mesh-axis size inside a collective context, on any JAX.
+
+    New JAX has ``jax.lax.axis_size``; on old JAX ``psum(1, name)`` of a
+    concrete value constant-folds to the same static int.
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(name)
+    return jax.lax.psum(1, name)
+
+
+def replicated_shard(buf: jax.Array, axis_name: str) -> jax.Array:
+    """This member's tile of a dim-0-even value replicated over ``axis_name``.
+
+    Only reached on new JAX: the sole caller is the ZeRO-1 step, which
+    ``build_train_step`` degrades to the replicated optimizer on old JAX
+    (its merged all-gather cannot compile inside an old partial-auto
+    shard_map anyway).
+    """
+    n = axis_size(axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    sz = buf.shape[0] // n
+    return jax.lax.dynamic_slice_in_dim(buf, idx * sz, sz)
+
+
 def _mean_scale(axis_names: AxisNames) -> Callable[[jax.Array], jax.Array]:
     def scale(x):
         n = 1
         names = (axis_names,) if isinstance(axis_names, str) else tuple(axis_names)
         for a in names:
-            n *= jax.lax.axis_size(a)
+            n *= axis_size(a)
         return x / n
     return scale
 
@@ -182,7 +208,7 @@ def hierarchical_allreduce(grads, plan: MergePlan, *, intra_axis: str = "data",
 
     def collective(buf):
         buf, restore = _wire_cast(buf, wire_dtype)
-        n = jax.lax.axis_size(intra_axis)
+        n = axis_size(intra_axis)
         pad = (-buf.shape[0]) % n
         if pad:
             buf = jnp.pad(buf, (0, pad))
@@ -220,7 +246,7 @@ def bucketed_reduce_scatter(grads, plan: MergePlan, axis_name: str,
     metas = bucketer.leaf_metadata(grads)
     flat, _ = jax.tree_util.tree_flatten_with_path(grads)
     by_path = {bucketer._path_str(p): v for p, v in flat}
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     shards, bucket_metas = [], []
     for bucket in plan.buckets:
         bmetas = [metas[i] for i in bucket]

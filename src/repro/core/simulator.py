@@ -1,4 +1,4 @@
-"""Discrete pipeline simulator for bucketed WFBP communication (Eqs. 6-8).
+"""Closed-form pipeline simulator for bucketed WFBP communication (Eqs. 6-8).
 
 Given per-tensor backward times, a merge plan, and an all-reduce cost model,
 replay the timeline:
@@ -8,9 +8,12 @@ replay the timeline:
     end of bucket k-1's all-reduce)``                        (paper Eq. 7)
   * iteration time = t_f + final all-reduce end              (paper Eq. 8)
 
-This is the engine behind the paper-reproduction benchmarks (Figs. 6-11) and
-the trace-based scaling study (4..2048 workers), and doubles as the oracle
-for planner property tests.
+This is the FAST PATH: O(L) per evaluation, which is what the planner
+property tests and the O(L^2)-evaluation planners need.  For anything the
+closed form cannot express — heterogeneous/straggling workers, link
+contention between collectives or jobs, elastic resizes — use the
+event-driven engine in ``repro.sim``; :func:`cross_validate` checks the
+two agree exactly on their shared (homogeneous, single-job) domain.
 """
 
 from __future__ import annotations
@@ -83,6 +86,27 @@ def simulate(specs: Sequence[TensorSpec], plan: MergePlan,
         t_c_no=comm_end - t_b_total,
         events=tuple(events),
     )
+
+
+def cross_validate(specs: Sequence[TensorSpec], plan: MergePlan,
+                   model: AllReduceModel, t_f: float = 0.0,
+                   atol: float = 1e-9, **engine_kwargs) -> SimResult:
+    """Run the closed form AND the event-driven engine; assert they agree.
+
+    The engine (repro.sim) reaches the same iteration time through
+    independent mechanics — a priority-queue event loop over compute
+    streams and link resources — so agreement within ``atol`` (default
+    1e-9 s) is strong evidence both are implementing Eqs. 6-8.
+    """
+    from repro.sim import event_driven_t_iter  # local: sim depends on core
+
+    res = simulate(specs, plan, model, t_f)
+    t_engine = event_driven_t_iter(specs, plan, model, t_f, **engine_kwargs)
+    if abs(res.t_iter - t_engine) > atol:
+        raise AssertionError(
+            f"closed form t_iter={res.t_iter!r} != engine {t_engine!r} "
+            f"(|diff|={abs(res.t_iter - t_engine):.3e} > atol={atol})")
+    return res
 
 
 def speedup(specs: Sequence[TensorSpec], plan: MergePlan,

@@ -1,21 +1,61 @@
-"""Production mesh construction.
+"""Production mesh construction + JAX version compatibility shims.
 
 Never touches jax device state at import time — everything is a function.
 Mesh shapes: single-pod (16, 16) = 256 chips ("data", "model"); multi-pod
 (2, 16, 16) = 512 chips ("pod", "data", "model").  ``pod`` is the DCN-level
 data-parallel axis (high startup cost — where gradient merging pays most).
+
+Compatibility: new JAX (>= 0.5) exposes ``jax.sharding.AxisType`` and
+``jax.set_mesh``; old JAX (0.4.x) has neither — ``jax.make_mesh`` takes no
+``axis_types`` and the ambient mesh is set with the ``with mesh:`` resource
+env.  :func:`make_mesh` and :func:`use_mesh` paper over the difference so
+every call site (and the tests) runs on both.
 """
 
 from __future__ import annotations
 
+import contextlib
+
 import jax
+
+# None on old JAX (< 0.5); the AxisType enum on new JAX.
+AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def make_mesh(shape, axes, *, devices=None):
+    """``jax.make_mesh`` on any JAX: request Auto axis types when supported.
+
+    New JAX wants explicit ``axis_types`` for GSPMD-auto partitioning; old
+    JAX predates axis types entirely (everything behaves as Auto).
+    """
+    if AXIS_TYPE is not None:
+        try:
+            return jax.make_mesh(
+                shape, axes, devices=devices,
+                axis_types=(AXIS_TYPE.Auto,) * len(axes))
+        except TypeError:
+            pass  # jax.make_mesh without the axis_types kwarg
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh):
+    """Ambient-mesh context: ``jax.set_mesh`` on new JAX, ``with mesh:``
+    (the pjit resource env) on old JAX.  Either way bare ``PartitionSpec``
+    sharding constraints inside resolve against ``mesh``."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        with set_mesh(mesh):
+            yield mesh
+    else:
+        with mesh:
+            yield mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(devices: int, model_parallel: int = 0):
@@ -27,6 +67,4 @@ def make_mesh_for(devices: int, model_parallel: int = 0):
                 model_parallel = cand
                 break
     data = devices // model_parallel
-    return jax.make_mesh(
-        (data, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model_parallel), ("data", "model"))

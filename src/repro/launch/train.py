@@ -44,7 +44,7 @@ def main():
 
     from repro.configs.base import SHAPES, ShapeConfig
     from repro.data.pipeline import DataPipeline
-    from repro.launch.mesh import make_mesh_for
+    from repro.launch.mesh import make_mesh_for, use_mesh
     from repro.models import registry
     from repro.train import checkpoint, fault
     from repro.train.step import build_train_step
@@ -66,7 +66,7 @@ def main():
                               shape=shape)
     model = bundle.model(par)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         step_fn, init_fn, art = build_train_step(model, run, mesh,
                                                  strategy=args.strategy)
         print(f"arch={bundle.cfg.name} devices={n_dev} mesh={dims} "

@@ -1,0 +1,59 @@
+"""Event-driven cluster simulator: contention, stragglers, elasticity.
+
+``core/simulator`` answers "how long is one homogeneous iteration" in
+closed form; this package answers everything the closed form cannot —
+heterogeneous/jittery workers, link contention between collectives and
+jobs, bursty background traffic, two-level topologies, and mid-run elastic
+resizes with online cost-model refit.  The two are cross-validated on
+their shared domain (``core.simulator.cross_validate``).
+"""
+
+from repro.sim.engine import (
+    BucketTiming,
+    ClusterResult,
+    ClusterSim,
+    Engine,
+    IterationResult,
+    JobResult,
+    JobSpec,
+    Link,
+    event_driven_t_iter,
+)
+from repro.sim.network import (
+    Burst,
+    FlatTopology,
+    HierarchicalTopology,
+    Phase,
+    Topology,
+    invert_ring,
+    predicted_ring,
+    topology_for_cluster,
+)
+from repro.sim.trace import (
+    Span,
+    from_chrome_trace,
+    read_chrome_trace,
+    refit_model,
+    replan_from_samples,
+    specs_from_json,
+    specs_from_rows,
+    specs_to_json,
+    synthetic_specs,
+    to_chrome_trace,
+    write_chrome_trace,
+)
+from repro.sim.workers import WorkerProfile, make_workers
+from repro.sim import scenarios
+
+__all__ = [
+    "BucketTiming", "ClusterResult", "ClusterSim", "Engine",
+    "IterationResult", "JobResult", "JobSpec", "Link",
+    "event_driven_t_iter",
+    "Burst", "FlatTopology", "HierarchicalTopology", "Phase", "Topology",
+    "invert_ring", "predicted_ring", "topology_for_cluster",
+    "Span", "from_chrome_trace", "read_chrome_trace", "refit_model",
+    "replan_from_samples", "specs_from_json", "specs_from_rows",
+    "specs_to_json", "synthetic_specs", "to_chrome_trace",
+    "write_chrome_trace",
+    "WorkerProfile", "make_workers", "scenarios",
+]

@@ -1,0 +1,466 @@
+"""Discrete-event cluster simulator for bucketed data-parallel training.
+
+Where ``core/simulator.simulate`` replays ONE homogeneous pipeline in
+closed form (paper Eqs. 6-8), this engine simulates a *cluster*:
+
+* per-worker compute streams — heterogeneous speeds and seeded jitter
+  (``workers.py``), each worker's backward producing gradients on its own
+  timeline; a bucket's all-reduce may start only when **every** worker has
+  produced the bucket's last tensor (synchronous S-SGD semantics);
+* shared network links as processor-sharing resources — concurrent
+  all-reduces (same job in ``concurrent`` mode, other jobs, background
+  bursts) split link bandwidth, startup latency is paid per collective;
+* topology-aware collectives (``network.py``) — a collective is a sequence
+  of phases over links (e.g. ICI reduce-scatter/all-gather then a DCN leg);
+* multi-iteration BSP loops with per-iteration hooks for elastic resize /
+  replanning (``scenarios.py`` closes the refit -> replan loop).
+
+On a homogeneous single-job sequential setup the engine's iteration time
+equals the closed form to ~1e-12 (see ``core/simulator.cross_validate`` and
+tests/test_cluster_sim.py) — that identity anchors everything the engine
+says about the scenarios the closed form cannot express.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.planner import MergePlan, TensorSpec
+from repro.sim.events import EventQueue
+from repro.sim.network import Burst, Topology
+from repro.sim.trace import Span
+from repro.sim.workers import WorkerProfile
+
+_EPS = 1e-15
+
+
+class Engine:
+    """Priority-queue event loop.  ``now`` only moves forward."""
+
+    def __init__(self) -> None:
+        self.now = 0.0
+        self._queue = EventQueue()
+        self.events_processed = 0
+
+    def at(self, time: float, fn: Callable[[], None]) -> None:
+        if time < self.now - _EPS:
+            raise ValueError(f"cannot schedule at {time} < now {self.now}")
+        self._queue.push(max(time, self.now), fn)
+
+    def after(self, delay: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + max(delay, 0.0), fn)
+
+    def run(self, until: float | None = None,
+            max_events: int = 50_000_000) -> None:
+        while self._queue:
+            if until is not None and self._queue.peek_time() > until:
+                break
+            ev = self._queue.pop()
+            self.now = max(self.now, ev.time)
+            ev.fn()
+            self.events_processed += 1
+            if self.events_processed > max_events:
+                raise RuntimeError("event budget exhausted — runaway sim?")
+
+
+@dataclasses.dataclass
+class _Flow:
+    remaining: float          # seconds of transfer at full link rate
+    on_done: Callable[[], None]
+
+
+class Link:
+    """Shared link with egalitarian processor sharing.
+
+    Each active flow drains at ``1/claimants`` of full rate, where
+    claimants = live flows + background flows (bursty neighbours).  On any
+    membership change the remaining work is advanced and the next
+    completion re-scheduled; stale completions are invalidated by a
+    generation counter.
+    """
+
+    def __init__(self, engine: Engine, name: str):
+        self.engine = engine
+        self.name = name
+        self.flows: list[_Flow] = []
+        self.background = 0
+        self._last = 0.0
+        self._gen = 0
+
+    def _claimants(self) -> int:
+        return len(self.flows) + self.background
+
+    def _advance(self) -> None:
+        now = self.engine.now
+        if self.flows and now > self._last:
+            rate = 1.0 / self._claimants()
+            dt = now - self._last
+            for f in self.flows:
+                f.remaining -= dt * rate
+        self._last = now
+
+    def add_flow(self, volume: float, on_done: Callable[[], None]) -> None:
+        if volume <= 0:
+            on_done()
+            return
+        self._advance()
+        self.flows.append(_Flow(volume, on_done))
+        self._reschedule()
+
+    def add_background(self, count: int = 1) -> None:
+        self._advance()
+        self.background += count
+        self._reschedule()
+
+    def remove_background(self, count: int = 1) -> None:
+        self._advance()
+        self.background = max(0, self.background - count)
+        self._reschedule()
+
+    def _reschedule(self) -> None:
+        self._gen += 1
+        if not self.flows:
+            return
+        gen = self._gen
+        t_next = min(f.remaining for f in self.flows) * self._claimants()
+        self.engine.after(max(t_next, 0.0), lambda: self._complete(gen))
+
+    def _complete(self, gen: int) -> None:
+        if gen != self._gen:
+            return                    # superseded by a membership change
+        self._advance()
+        now = self.engine.now
+        c = max(self._claimants(), 1)
+
+        def finished(f: _Flow) -> bool:
+            # absolute epsilon, plus: a remainder too small for `now + dt`
+            # to advance the clock can never drain — count it done (the
+            # error is below one float ulp of the current timestamp).
+            return f.remaining <= _EPS or now + f.remaining * c <= now
+
+        done = [f for f in self.flows if finished(f)]
+        self.flows = [f for f in self.flows if not finished(f)]
+        self._reschedule()
+        for f in done:
+            f.on_done()
+
+
+# ---------------------------------------------------------------------------
+# Jobs.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketTiming:
+    """One bucket's all-reduce in one iteration (engine analogue of
+    ``simulator.BucketEvent``, plus the iteration index)."""
+
+    iteration: int
+    bucket: int
+    nbytes: int
+    ready: float        # all workers produced the bucket's last gradient
+    start: float        # collective issued (first phase startup begins)
+    end: float          # last phase completed
+
+
+@dataclasses.dataclass(frozen=True)
+class IterationResult:
+    index: int
+    start: float
+    end: float
+    backward_end: float                     # max over workers
+    buckets: tuple[BucketTiming, ...]
+
+    @property
+    def t_iter(self) -> float:
+        return self.end - self.start
+
+
+@dataclasses.dataclass
+class JobSpec:
+    """One training job: what to compute, how to merge, on which workers."""
+
+    name: str
+    specs: Sequence[TensorSpec]             # backward order
+    plan: MergePlan
+    t_f: float
+    workers: Sequence[WorkerProfile]
+    topology: Topology
+    iters: int = 1
+    start_time: float = 0.0
+    comm_mode: str = "sequential"           # "sequential" | "concurrent"
+    compute_mode: str = "events"            # "events" | "analytic"
+    # hook(sim, jobrun, finished_iter_index) runs after that iteration;
+    # it may replace the run's workers / plan / topology (elastic resize).
+    hooks: Mapping[int, Callable] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.plan.num_tensors != len(self.specs):
+            raise ValueError(
+                f"plan covers {self.plan.num_tensors} tensors, "
+                f"specs has {len(self.specs)}")
+        if self.comm_mode not in ("sequential", "concurrent"):
+            raise ValueError(f"unknown comm_mode {self.comm_mode!r}")
+        if self.compute_mode not in ("events", "analytic"):
+            raise ValueError(f"unknown compute_mode {self.compute_mode!r}")
+        if self.iters < 1 or not self.workers:
+            raise ValueError("need >= 1 iteration and >= 1 worker")
+
+
+@dataclasses.dataclass
+class JobResult:
+    name: str
+    iterations: list[IterationResult]
+
+    @property
+    def t_iters(self) -> list[float]:
+        return [it.t_iter for it in self.iterations]
+
+    @property
+    def total_time(self) -> float:
+        return self.iterations[-1].end - self.iterations[0].start
+
+    @property
+    def bucket_samples(self) -> list[tuple[int, float]]:
+        """(nbytes, duration) per observed collective — refit fodder."""
+        return [(b.nbytes, b.end - b.start)
+                for it in self.iterations for b in it.buckets]
+
+
+class _JobRun:
+    """Engine-side state machine for one job."""
+
+    def __init__(self, sim: "ClusterSim", spec: JobSpec):
+        self.sim = sim
+        self.spec = spec
+        self.name = spec.name
+        # mutable copies — iteration hooks may replace them mid-run
+        self.plan = spec.plan
+        self.workers = list(spec.workers)
+        self.topology = spec.topology
+        self.result = JobResult(spec.name, [])
+        self.it = 0
+        # per-iteration transient state
+        self._ready: dict[int, float] = {}
+        self._issued = 0
+        self._in_flight = 0
+        self._done_buckets: list[BucketTiming] = []
+        self._bwd_end = 0.0
+        self._iter_start = 0.0
+
+    # -- iteration lifecycle --------------------------------------------
+
+    def start_iteration(self) -> None:
+        eng = self.sim.engine
+        spec = self.spec
+        it = self.it
+        T = self._iter_start = eng.now
+        self._ready = {}
+        self._issued = 0
+        self._in_flight = 0
+        self._done_buckets = []
+
+        t_b = np.array([s.t_b for s in spec.specs], dtype=np.float64)
+        prefix = np.cumsum(t_b) if len(t_b) else np.zeros(0)
+        scales = np.array(
+            [w.scale(self.sim.seed, self.name, wi, it)
+             for wi, w in enumerate(self.workers)], dtype=np.float64)
+        fwd_end = T + spec.t_f * scales
+        bwd_end = fwd_end + (prefix[-1] if len(prefix) else 0.0) * scales
+        self._bwd_end = float(bwd_end.max())
+
+        for wi, w in enumerate(self.workers):
+            self.sim.record(Span(
+                name="forward", cat="compute", pid=self.name, tid=w.name,
+                start=T, end=float(fwd_end[wi]), args={"iter": it}))
+            self.sim.record(Span(
+                name="backward", cat="compute", pid=self.name, tid=w.name,
+                start=float(fwd_end[wi]), end=float(bwd_end[wi]),
+                args={"iter": it}))
+
+        buckets = self.plan.buckets
+        if not buckets:
+            eng.at(self._bwd_end, self._finish_iteration)
+            return
+
+        if spec.compute_mode == "analytic":
+            # bucket ready == max over workers; compute directly.
+            for k, bucket in enumerate(buckets):
+                r = float((fwd_end + prefix[bucket[-1]] * scales).max())
+                eng.at(r, lambda k=k: self._bucket_ready(k))
+        else:
+            # faithful per-worker streams: each tensor completion is an
+            # event; the Nth arrival of a bucket's last tensor marks ready.
+            last_of = {b[-1]: k for k, b in enumerate(buckets)}
+            arrivals = {k: 0 for k in range(len(buckets))}
+            n = len(self.workers)
+
+            def arrive(k: int) -> None:
+                arrivals[k] += 1
+                if arrivals[k] == n:
+                    self._bucket_ready(k)
+
+            for wi in range(len(self.workers)):
+                for j, k in last_of.items():
+                    t = float(fwd_end[wi] + prefix[j] * scales[wi])
+                    eng.at(t, lambda k=k: arrive(k))
+
+    def _bucket_ready(self, k: int) -> None:
+        self._ready[k] = self.sim.engine.now
+        if self.spec.comm_mode == "concurrent":
+            self._launch(k)
+        else:
+            self._try_issue()
+
+    def _try_issue(self) -> None:
+        if self._in_flight or self._issued >= self.plan.num_buckets:
+            return
+        if self._issued in self._ready:
+            self._launch(self._issued)
+
+    def _launch(self, k: int) -> None:
+        self._in_flight += 1
+        self._issued = max(self._issued, k + 1)
+        nbytes = sum(self.spec.specs[i].nbytes for i in self.plan.buckets[k])
+        start = self.sim.engine.now
+        # closed-form convention: T(0) == 0 — an empty message is free
+        phases = self.topology.phases(nbytes) if nbytes > 0 else []
+
+        def next_phase(idx: int) -> None:
+            if idx == len(phases):
+                self._collective_done(k, nbytes, start)
+                return
+            ph = phases[idx]
+            phase_start = self.sim.engine.now
+
+            def transfer() -> None:
+                link = self.sim.links[ph.link]
+                link.add_flow(ph.volume(nbytes), lambda: finish())
+
+            def finish() -> None:
+                self.sim.record(Span(
+                    name=f"allreduce:b{k}", cat="comm", pid=self.name,
+                    tid=f"link:{ph.link}", start=phase_start,
+                    end=self.sim.engine.now,
+                    args={"iter": self.it, "bucket": k, "bytes": nbytes,
+                          "phase": idx}))
+                next_phase(idx + 1)
+
+            self.sim.engine.after(ph.startup, transfer)
+
+        next_phase(0)
+
+    def _collective_done(self, k: int, nbytes: int, start: float) -> None:
+        self._in_flight -= 1
+        self._done_buckets.append(BucketTiming(
+            iteration=self.it, bucket=k, nbytes=nbytes,
+            ready=self._ready[k], start=start, end=self.sim.engine.now))
+        if self.spec.comm_mode == "sequential":
+            self._try_issue()
+        if len(self._done_buckets) == self.plan.num_buckets:
+            end = max(self.sim.engine.now, self._bwd_end)
+            self.sim.engine.at(end, self._finish_iteration)
+
+    def _finish_iteration(self) -> None:
+        buckets = tuple(sorted(self._done_buckets,
+                               key=lambda b: b.bucket))
+        self.result.iterations.append(IterationResult(
+            index=self.it, start=self._iter_start,
+            end=self.sim.engine.now, backward_end=self._bwd_end,
+            buckets=buckets))
+        hook = self.spec.hooks.get(self.it)
+        if hook is not None:
+            hook(self.sim, self, self.it)
+        self.it += 1
+        if self.it < self.spec.iters:
+            self.start_iteration()
+
+
+# ---------------------------------------------------------------------------
+# Cluster.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ClusterResult:
+    jobs: dict[str, JobResult]
+    spans: list[Span]
+    events_processed: int
+
+    def job(self, name: str) -> JobResult:
+        return self.jobs[name]
+
+
+class ClusterSim:
+    """A set of jobs sharing link resources, driven by one event engine."""
+
+    def __init__(self, jobs: Sequence[JobSpec], *, seed: int = 0,
+                 bursts: Sequence[Burst] = ()):
+        names = [j.name for j in jobs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate job names: {names}")
+        self.engine = Engine()
+        self.seed = seed
+        self.spans: list[Span] = []
+        self.links: dict[str, Link] = {}
+        self._runs = [_JobRun(self, j) for j in jobs]
+        for run in self._runs:
+            self.ensure_links(run.topology)
+        for b in bursts:
+            self.ensure_link(b.link)
+            self.engine.at(b.start,
+                           lambda b=b: self.links[b.link].add_background(
+                               b.flows))
+            self.engine.at(b.end,
+                           lambda b=b: self.links[b.link].remove_background(
+                               b.flows))
+            self.record(Span(name=f"burst x{b.flows}", cat="network",
+                             pid="background", tid=f"link:{b.link}",
+                             start=b.start, end=b.end,
+                             args={"flows": b.flows}))
+
+    def ensure_link(self, name: str) -> Link:
+        if name not in self.links:
+            self.links[name] = Link(self.engine, name)
+        return self.links[name]
+
+    def ensure_links(self, topology: Topology) -> None:
+        for name in topology.links:
+            self.ensure_link(name)
+
+    def record(self, span: Span) -> None:
+        self.spans.append(span)
+
+    def run(self) -> ClusterResult:
+        for r in self._runs:
+            self.engine.at(r.spec.start_time, r.start_iteration)
+        self.engine.run()
+        return ClusterResult(
+            jobs={r.name: r.result for r in self._runs},
+            spans=list(self.spans),
+            events_processed=self.engine.events_processed)
+
+
+# ---------------------------------------------------------------------------
+# Closed-form bridge.
+# ---------------------------------------------------------------------------
+
+def event_driven_t_iter(specs: Sequence[TensorSpec], plan: MergePlan,
+                        model, t_f: float = 0.0, *, n_workers: int = 1,
+                        iters: int = 1,
+                        compute_mode: str = "events") -> float:
+    """Iteration time of the homogeneous single-job case via the engine.
+
+    This is the configuration in which the engine must agree with
+    ``core/simulator.simulate`` (identical semantics, independent
+    mechanics) — the cross-validation oracle.
+    """
+    from repro.sim.workers import make_workers
+
+    topo = Topology(model, n_workers=n_workers)
+    job = JobSpec(name="job", specs=list(specs), plan=plan, t_f=t_f,
+                  workers=make_workers(n_workers), topology=topo,
+                  iters=iters, compute_mode=compute_mode)
+    res = ClusterSim([job]).run()
+    return res.job("job").iterations[-1].t_iter

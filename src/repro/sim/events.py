@@ -1,0 +1,53 @@
+"""Deterministic priority-queue event core for the cluster simulator.
+
+Every event is ``(time, seq, callback)``: ``seq`` is a monotonically
+increasing tie-breaker, so two events at the same timestamp always fire in
+scheduling order and a run is a pure function of its inputs — no set/dict
+iteration order, no wall clock, no global RNG.  This is what makes the
+engine's timelines reproducible enough to cross-validate against the
+closed-form simulator at 1e-9 (see ``core/simulator.cross_validate``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """A scheduled callback.  Ordering: time, then insertion order."""
+
+    time: float
+    seq: int
+    fn: Callable[[], None] = dataclasses.field(compare=False)
+
+    def __lt__(self, other: "Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class EventQueue:
+    """Min-heap of :class:`Event` with deterministic tie-breaking."""
+
+    def __init__(self) -> None:
+        self._heap: list[Event] = []
+        self._seq = 0
+
+    def push(self, time: float, fn: Callable[[], None]) -> Event:
+        ev = Event(time, self._seq, fn)
+        self._seq += 1
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)
+
+    def peek_time(self) -> float:
+        return self._heap[0].time
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def __bool__(self) -> bool:
+        return bool(self._heap)

@@ -1,0 +1,197 @@
+"""Topology-aware collective timing for the event engine.
+
+A *topology* answers two questions:
+
+* ``linear_model()`` — the flat ``T(M) = a + b*M`` view that the MG-WFBP
+  planner consumes (reusing :mod:`repro.core.cost_model`'s Table-2
+  algorithms and TPU constants);
+* ``phases(nbytes)`` — how one all-reduce actually occupies shared link
+  resources in the engine: an ordered list of (link, startup, transfer
+  seconds at full rate).  Phases on the same link *contend* with other
+  collectives via processor sharing, which is what the closed-form model
+  cannot express.
+
+Uncontended, the phase times sum exactly to ``linear_model().time(M)`` —
+the engine cross-validates against ``core/simulator.simulate`` on that
+identity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core import cost_model
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    """One leg of a collective on one link resource."""
+
+    link: str
+    startup: float            # latency before the transfer starts (s)
+    seconds_per_byte: float   # transfer cost at full link rate (s/B)
+
+    def volume(self, nbytes: float) -> float:
+        """Transfer work in seconds-at-full-rate."""
+        return self.seconds_per_byte * float(nbytes)
+
+
+class Topology:
+    """Base: a single-link topology defined directly by an (a, b) model."""
+
+    def __init__(self, model: cost_model.AllReduceModel, link: str = "net",
+                 n_workers: int = 1):
+        self._model = model
+        self.link = link
+        self.n_workers = n_workers
+
+    @property
+    def links(self) -> tuple[str, ...]:
+        return (self.link,)
+
+    def linear_model(self) -> cost_model.AllReduceModel:
+        return self._model
+
+    def phases(self, nbytes: float) -> list[Phase]:
+        return [Phase(self.link, self._model.a, self._model.b)]
+
+    def rescale(self, n_workers: int) -> "Topology":
+        """Same physical links, different membership (elastic resize)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support elastic resize")
+
+
+class FlatTopology(Topology):
+    """One shared link running a Table-2 collective algorithm over N."""
+
+    def __init__(self, algorithm: str, n_workers: int, alpha: float,
+                 beta: float, gamma: float = 0.0, link: str = "net"):
+        self.algorithm = algorithm
+        self.alpha, self.beta, self.gamma = alpha, beta, gamma
+        model = cost_model.make_model(algorithm, n_workers, alpha, beta,
+                                      gamma)
+        super().__init__(model, link, n_workers)
+
+    def rescale(self, n_workers: int) -> "FlatTopology":
+        return FlatTopology(self.algorithm, n_workers, self.alpha,
+                            self.beta, self.gamma, self.link)
+
+    @staticmethod
+    def from_fitted(a: float, b: float, n_workers: int = 1,
+                    link: str = "net") -> "Topology":
+        """Topology from measured (a, b) — e.g. PAPER_CLUSTERS entries."""
+        return Topology(cost_model.AllReduceModel(a, b, "fitted"), link,
+                        n_workers)
+
+
+class HierarchicalTopology(Topology):
+    """Two-level ICI + DCN: reduce-scatter/all-gather intra-pod, all-reduce
+    across pods on the 1/intra_size shard (reuses
+    ``cost_model.HierarchicalModel`` so the planner sees the identical flat
+    (a, b) the production mesh path produces)."""
+
+    ICI_LINK = "ici"
+    DCN_LINK = "dcn"
+
+    def __init__(self, pods: int, chips_per_pod: int, *,
+                 ici_bw: float = cost_model.ICI_BW_PER_LINK,
+                 ici_alpha: float = cost_model.ICI_ALPHA,
+                 dcn_bw: float = cost_model.DCN_BW,
+                 dcn_alpha: float = cost_model.DCN_ALPHA):
+        if pods < 1 or chips_per_pod < 1:
+            raise ValueError("need >= 1 pod and >= 1 chip per pod")
+        self.pods, self.chips_per_pod = pods, chips_per_pod
+        self._params = dict(ici_bw=ici_bw, ici_alpha=ici_alpha,
+                            dcn_bw=dcn_bw, dcn_alpha=dcn_alpha)
+        intra = (cost_model.tpu_ici_ring(chips_per_pod, bw_per_link=ici_bw,
+                                         alpha=ici_alpha)
+                 if chips_per_pod > 1
+                 else cost_model.AllReduceModel(0.0, 0.0, "noop"))
+        if pods > 1:
+            inter = cost_model.tpu_dcn(pods, bw=dcn_bw, alpha=dcn_alpha)
+            self._hier = cost_model.HierarchicalModel(
+                intra=intra, inter=inter, intra_size=chips_per_pod)
+            model = self._hier.flat()
+        else:
+            self._hier = None
+            model = cost_model.AllReduceModel(intra.a, intra.b,
+                                              "tpu_ici_ring")
+        super().__init__(model, self.ICI_LINK, pods * chips_per_pod)
+
+    @property
+    def links(self) -> tuple[str, ...]:
+        return (self.ICI_LINK, self.DCN_LINK) if self._hier else \
+            (self.ICI_LINK,)
+
+    def phases(self, nbytes: float) -> list[Phase]:
+        if self._hier is None:
+            m = self.linear_model()
+            return [Phase(self.ICI_LINK, m.a, m.b)]
+        h = self._hier
+        return [
+            Phase(self.ICI_LINK, h.intra.a, h.intra.b),
+            Phase(self.DCN_LINK, h.inter.a,
+                  h.inter.b / max(h.intra_size, 1)),
+        ]
+
+    def rescale(self, n_workers: int) -> "HierarchicalTopology":
+        """Resize by pod count; chips per pod are fixed hardware."""
+        if n_workers % self.chips_per_pod:
+            raise ValueError(
+                f"{n_workers} workers not divisible by pod size "
+                f"{self.chips_per_pod}")
+        return HierarchicalTopology(n_workers // self.chips_per_pod,
+                                    self.chips_per_pod, **self._params)
+
+
+@dataclasses.dataclass(frozen=True)
+class Burst:
+    """Background traffic: ``flows`` extra processor-sharing claimants on
+    ``link`` during [start, end) — a bursty neighbour job, a checkpoint
+    write storm, an incast."""
+
+    link: str
+    start: float
+    end: float
+    flows: int = 1
+
+    def __post_init__(self):
+        if self.end <= self.start or self.flows < 1:
+            raise ValueError(f"malformed burst: {self}")
+
+
+def invert_ring(a: float, b: float, n: int,
+                gamma_ratio: float = 0.0) -> tuple[float, float]:
+    """Recover point-to-point (alpha, beta) from a fitted ring (a, b).
+
+    Ring: a = 2(N-1)alpha, b = (2(N-1)/N)beta + ((N-1)/N)gamma; with
+    gamma = gamma_ratio * beta.  This is the paper's Fig. 4 fit turned
+    inside out — the elastic-replanning loop fits (a, b) online from
+    simulated bucket timings at size N, inverts to hardware constants, and
+    re-predicts (a', b') for the post-resize N'.
+    """
+    if n < 2:
+        raise ValueError("ring inversion needs N >= 2")
+    alpha = a / (2 * (n - 1))
+    denom = (2 * (n - 1) / n) + (n - 1) / n * gamma_ratio
+    beta = b / denom
+    return alpha, beta
+
+
+def predicted_ring(a: float, b: float, n_old: int, n_new: int,
+                   gamma_ratio: float = 0.0) -> cost_model.AllReduceModel:
+    """Project a fitted ring model from N_old membership to N_new."""
+    alpha, beta = invert_ring(a, b, n_old, gamma_ratio)
+    return cost_model.ring(n_new, alpha, beta, gamma_ratio * beta)
+
+
+def topology_for_cluster(name: str, n_workers: int) -> Topology:
+    """Paper-cluster topology from the measured PAPER_CLUSTERS constants."""
+    try:
+        a, b = cost_model.PAPER_CLUSTERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown paper cluster {name!r}; choose from "
+            f"{sorted(cost_model.PAPER_CLUSTERS)}") from None
+    return FlatTopology.from_fitted(a, b, n_workers)

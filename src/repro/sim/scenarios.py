@@ -1,0 +1,221 @@
+"""Scenario catalog for the cluster simulator.
+
+Each builder assembles a ready-to-run :class:`ClusterSim`:
+
+* ``paper_scaling``    — the §7 trace-driven study (homogeneous workers,
+  Table-2 collective over the paper's fitted cluster constants);
+* ``straggler``        — one (or more) persistently slow workers, the
+  sweep the closed form cannot express;
+* ``elastic_resize``   — mid-run membership change with ONLINE (a, b)
+  refit from observed bucket timings -> ``planner.replan`` (the loop from
+  ``examples/elastic_replan.py``, now closed inside the simulator);
+* ``bursty``           — background traffic bursts contending on the link;
+* ``two_jobs``         — two training jobs sharing one network.
+
+Builders take ``(specs, t_f)`` so callers choose the profile source
+(``benchmarks/paper_profiles.py``, ``core/profiler.py`` measurements, or
+``trace.synthetic_specs``); the zero-argument ``CATALOG`` entries use small
+synthetic profiles and exist for docs, smoke tests and quick looks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from repro.core import cost_model, planner
+from repro.core.planner import MergePlan, TensorSpec
+from repro.sim import network, trace
+from repro.sim.engine import ClusterSim, JobSpec
+from repro.sim.network import Burst, FlatTopology, HierarchicalTopology
+from repro.sim.workers import make_workers
+
+# Point-to-point constants matching the paper's fitted cluster 1 at N=8
+# (ring: a = 2(N-1)alpha -> alpha = 972us/14; b -> beta per byte).  These
+# were previously private to benchmarks/scaling_sim.py.
+PAPER_ALPHA = 9.72e-4 / 14
+PAPER_BETA = 1.97e-9 / (2 * 7 / 8)
+PAPER_GAMMA = PAPER_BETA / 10
+
+
+def paper_scaling(specs: Sequence[TensorSpec], t_f: float, n_workers: int,
+                  *, algorithm: str = "ring", strategy: str = "mgwfbp",
+                  alpha: float = PAPER_ALPHA, beta: float = PAPER_BETA,
+                  gamma: float = PAPER_GAMMA, iters: int = 1,
+                  compute_mode: str = "analytic", seed: int = 0,
+                  name: str = "train",
+                  plan: MergePlan | None = None) -> ClusterSim:
+    """Homogeneous N-worker job — the paper's Figs. 10-11 setting.
+
+    Pass ``plan`` to skip the O(L^2) planner when the caller already built
+    one for the identical cost model (benchmarks sweep many N points)."""
+    topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
+    if plan is None:
+        plan = planner.make_plan(strategy, specs, topo.linear_model())
+    job = JobSpec(name=name, specs=list(specs), plan=plan, t_f=t_f,
+                  workers=make_workers(n_workers), topology=topo,
+                  iters=iters, compute_mode=compute_mode)
+    return ClusterSim([job], seed=seed)
+
+
+def straggler(specs: Sequence[TensorSpec], t_f: float, n_workers: int,
+              *, slow_factor: float = 2.0, slow_workers: int = 1,
+              jitter_sigma: float = 0.0, algorithm: str = "ring",
+              strategy: str = "mgwfbp", alpha: float = PAPER_ALPHA,
+              beta: float = PAPER_BETA, gamma: float = PAPER_GAMMA,
+              iters: int = 2, compute_mode: str = "analytic",
+              seed: int = 0) -> ClusterSim:
+    """Synchronous SGD with persistent stragglers: the step time is the max
+    over workers, so one slow host drags the fleet (fault.py's
+    StragglerMonitor exists to evict exactly these)."""
+    topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
+    plan = planner.make_plan(strategy, specs, topo.linear_model())
+    slow = {i: slow_factor for i in range(min(slow_workers, n_workers))}
+    job = JobSpec(name="train", specs=list(specs), plan=plan, t_f=t_f,
+                  workers=make_workers(n_workers, slow=slow,
+                                       jitter_sigma=jitter_sigma),
+                  topology=topo, iters=iters, compute_mode=compute_mode)
+    return ClusterSim([job], seed=seed)
+
+
+@dataclasses.dataclass
+class ElasticReport:
+    """What the elastic-replanning loop did (filled in by the hook)."""
+
+    plan_before: MergePlan
+    plan_after: MergePlan | None = None
+    fitted: cost_model.AllReduceModel | None = None
+    predicted: cost_model.AllReduceModel | None = None
+    used_fallback: bool = False
+
+
+def elastic_resize(specs: Sequence[TensorSpec], t_f: float, *,
+                   n_before: int = 8, n_after: int = 32,
+                   resize_at: int = 1, iters: int = 4,
+                   strategy: str = "mgwfbp", alpha: float = PAPER_ALPHA,
+                   beta: float = PAPER_BETA, gamma: float = PAPER_GAMMA,
+                   compute_mode: str = "analytic", seed: int = 0,
+                   ) -> tuple[ClusterSim, ElasticReport]:
+    """Mid-run resize N_before -> N_after with online refit + replan.
+
+    After iteration ``resize_at`` the hook (1) least-squares-fits (a, b)
+    from the bucket timings observed so far (trace.refit_model), (2)
+    inverts the ring formulas to point-to-point (alpha, beta) and predicts
+    the post-resize model (network.predicted_ring), (3) reruns the planner
+    for the new model, and (4) swaps workers/topology/plan.  Ring only —
+    the inversion is algorithm-specific.
+    """
+    topo = FlatTopology("ring", n_before, alpha, beta, gamma)
+    plan = planner.make_plan(strategy, specs, topo.linear_model())
+    report = ElasticReport(plan_before=plan)
+
+    def hook(sim: ClusterSim, run, it: int) -> None:
+        samples = run.result.bucket_samples
+        try:
+            fitted = trace.refit_model(samples)
+            predicted = network.predicted_ring(
+                fitted.a, fitted.b, n_before, n_after,
+                gamma_ratio=gamma / beta if beta else 0.0)
+        except ValueError:
+            # degenerate observation (e.g. plan merged to one bucket) —
+            # fall back to the topology's own rescaled model
+            fitted = None
+            predicted = topo.rescale(n_after).linear_model()
+            report.used_fallback = True
+        new_plan = planner.replan(strategy, specs, predicted)
+        run.workers = make_workers(n_after)
+        run.topology = run.topology.rescale(n_after)
+        run.plan = new_plan
+        sim.ensure_links(run.topology)
+        report.fitted, report.predicted = fitted, predicted
+        report.plan_after = new_plan
+
+    job = JobSpec(name="train", specs=list(specs), plan=plan, t_f=t_f,
+                  workers=make_workers(n_before), topology=topo,
+                  iters=iters, compute_mode=compute_mode,
+                  hooks={resize_at: hook})
+    return ClusterSim([job], seed=seed), report
+
+
+def bursty(specs: Sequence[TensorSpec], t_f: float, n_workers: int = 16,
+           *, burst_flows: int = 3, duty: float = 0.5, period: float = 0.25,
+           horizon_iters: int = 4, strategy: str = "mgwfbp",
+           algorithm: str = "ring", alpha: float = PAPER_ALPHA,
+           beta: float = PAPER_BETA, gamma: float = PAPER_GAMMA,
+           compute_mode: str = "analytic", seed: int = 0) -> ClusterSim:
+    """Periodic background traffic steals link bandwidth during bursts."""
+    topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
+    plan = planner.make_plan(strategy, specs, topo.linear_model())
+    base = topo.linear_model()
+    # size the burst schedule to roughly cover the run
+    t_iter_est = t_f + sum(s.t_b for s in specs) + sum(
+        base.time(n) for n in plan.bucket_bytes(specs))
+    horizon = t_iter_est * horizon_iters * 2
+    bursts, t = [], 0.0
+    while t < horizon:
+        bursts.append(Burst(link=topo.link, start=t, end=t + period * duty,
+                            flows=burst_flows))
+        t += period
+    job = JobSpec(name="train", specs=list(specs), plan=plan, t_f=t_f,
+                  workers=make_workers(n_workers), topology=topo,
+                  iters=horizon_iters, compute_mode=compute_mode)
+    return ClusterSim([job], seed=seed, bursts=bursts)
+
+
+def two_jobs(specs_a: Sequence[TensorSpec], t_f_a: float,
+             specs_b: Sequence[TensorSpec], t_f_b: float, *,
+             n_workers: int = 8, stagger: float = 0.0,
+             strategy: str = "mgwfbp", algorithm: str = "ring",
+             alpha: float = PAPER_ALPHA, beta: float = PAPER_BETA,
+             gamma: float = PAPER_GAMMA, iters: int = 2,
+             compute_mode: str = "analytic", seed: int = 0) -> ClusterSim:
+    """Two independent jobs time-sharing one network — their all-reduces
+    contend via processor sharing on the common link."""
+    topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
+    model = topo.linear_model()
+    jobs = []
+    for name, specs, t_f, start in (("job_a", specs_a, t_f_a, 0.0),
+                                    ("job_b", specs_b, t_f_b, stagger)):
+        plan = planner.make_plan(strategy, specs, model)
+        jobs.append(JobSpec(name=name, specs=list(specs), plan=plan,
+                            t_f=t_f, workers=make_workers(n_workers,
+                                                          prefix=name + ".w"),
+                            topology=topo, iters=iters, start_time=start,
+                            compute_mode=compute_mode))
+    return ClusterSim(jobs, seed=seed)
+
+
+def hierarchical_pods(specs: Sequence[TensorSpec], t_f: float, *,
+                      pods: int = 2, chips_per_pod: int = 16,
+                      strategy: str = "mgwfbp", iters: int = 1,
+                      compute_mode: str = "analytic",
+                      seed: int = 0) -> ClusterSim:
+    """Two-level ICI+DCN cluster (the production mesh of launch/mesh.py)."""
+    topo = HierarchicalTopology(pods, chips_per_pod)
+    plan = planner.make_plan(strategy, specs, topo.linear_model())
+    job = JobSpec(name="train", specs=list(specs), plan=plan, t_f=t_f,
+                  workers=make_workers(pods * chips_per_pod),
+                  topology=topo, iters=iters, compute_mode=compute_mode)
+    return ClusterSim([job], seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Zero-argument catalog (synthetic profiles) for docs / smoke tests.
+# ---------------------------------------------------------------------------
+
+def _syn():
+    return trace.synthetic_specs(48, seed=7)
+
+
+CATALOG: dict[str, Callable[[], ClusterSim]] = {
+    "paper_ring_16": lambda: paper_scaling(*_syn(), 16),
+    "paper_dbt_64": lambda: paper_scaling(*_syn(), 64,
+                                          algorithm="double_binary_trees"),
+    "straggler_2x": lambda: straggler(*_syn(), 16, slow_factor=2.0),
+    "jittery": lambda: straggler(*_syn(), 16, slow_factor=1.0,
+                                 jitter_sigma=0.2, iters=4),
+    "elastic_8_to_32": lambda: elastic_resize(*_syn())[0],
+    "bursty": lambda: bursty(*_syn()),
+    "two_jobs": lambda: two_jobs(*_syn(), *trace.synthetic_specs(32, seed=9)),
+    "pods_2x16": lambda: hierarchical_pods(*_syn()),
+}

@@ -1,0 +1,166 @@
+"""Trace I/O for the cluster simulator.
+
+Three jobs:
+
+* **ingest** per-tensor profiles — from ``benchmarks/paper_profiles.py``
+  rows, ``core/profiler.py`` measurements, or a JSON file — into the
+  ``TensorSpec`` list the planner/engine consume;
+* **export** engine timelines as Chrome-trace JSON (load in
+  ``chrome://tracing`` / Perfetto), and round-trip them back losslessly —
+  the acceptance gate for every scenario run;
+* **refit** the linear all-reduce model online from *observed* bucket
+  timings (the engine's analogue of the paper's Fig. 4 measurement pass)
+  and feed ``planner.replan`` — closing the elastic-replanning loop from
+  ``examples/elastic_replan.py`` without peeking at the simulator's ground
+  truth.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core import cost_model, planner
+from repro.core.planner import MergePlan, TensorSpec
+
+_US = 1e6   # chrome trace timestamps are microseconds
+
+
+@dataclasses.dataclass(frozen=True)
+class Span:
+    """One complete ("ph": "X") trace event."""
+
+    name: str
+    cat: str          # "compute" | "comm" | "network"
+    pid: str          # job name (or "background")
+    tid: str          # worker name or "link:<name>"
+    start: float      # seconds
+    end: float        # seconds
+    args: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.end < self.start:
+            raise ValueError(f"span ends before it starts: {self}")
+
+
+# ---------------------------------------------------------------------------
+# Profile ingestion.
+# ---------------------------------------------------------------------------
+
+def specs_from_rows(rows: Iterable[tuple[str, int, float]]
+                    ) -> list[TensorSpec]:
+    """(name, nbytes, t_b) rows (backward order) -> TensorSpec list."""
+    return [TensorSpec(str(n), int(b), float(t)) for n, b, t in rows]
+
+
+def specs_from_json(path: str) -> tuple[list[TensorSpec], float]:
+    """Load ``{"t_f": s, "tensors": [{"name", "nbytes", "t_b"}, ...]}``."""
+    with open(path) as f:
+        obj = json.load(f)
+    specs = [TensorSpec(t["name"], int(t["nbytes"]), float(t["t_b"]))
+             for t in obj["tensors"]]
+    return specs, float(obj.get("t_f", 0.0))
+
+
+def specs_to_json(path: str, specs: Sequence[TensorSpec],
+                  t_f: float = 0.0) -> None:
+    obj = {"t_f": t_f,
+           "tensors": [{"name": s.name, "nbytes": s.nbytes, "t_b": s.t_b}
+                       for s in specs]}
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def synthetic_specs(n_tensors: int, seed: int = 0, *,
+                    mean_bytes: int = 1 << 18,
+                    t_b_total: float = 50e-3) -> tuple[list[TensorSpec], float]:
+    """Small deterministic profile for tests and scenario defaults —
+    log-uniform sizes (many tiny tensors, few big: the paper's Fig. 5
+    shape) with backward time proportional to size."""
+    rng = np.random.default_rng(seed)
+    raw = np.exp(rng.uniform(np.log(64), np.log(mean_bytes * 16), n_tensors))
+    sizes = np.maximum(raw.astype(np.int64), 16)
+    t_b = sizes / sizes.sum() * t_b_total
+    specs = [TensorSpec(f"t{i}", int(s), float(t))
+             for i, (s, t) in enumerate(zip(sizes, t_b))]
+    return specs, t_b_total / 3.0           # t_f ~ 1/3 of iteration compute
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export / import (round-trips exactly).
+# ---------------------------------------------------------------------------
+
+def to_chrome_trace(spans: Sequence[Span]) -> dict:
+    """Chrome/Perfetto "X" events; ``ts``/``dur`` are microseconds per the
+    trace-event spec, while ``ts_s``/``end_s`` (ignored by viewers) keep
+    the exact float seconds so a round-trip is lossless."""
+    events = []
+    for s in spans:
+        events.append({
+            "name": s.name, "cat": s.cat, "ph": "X",
+            "pid": s.pid, "tid": s.tid,
+            "ts": s.start * _US, "dur": (s.end - s.start) * _US,
+            "ts_s": s.start, "end_s": s.end,
+            "args": dict(s.args),
+        })
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def from_chrome_trace(obj: dict) -> list[Span]:
+    spans = []
+    for ev in obj.get("traceEvents", []):
+        if ev.get("ph") != "X":
+            continue
+        if "ts_s" in ev:                      # our lossless sidecar fields
+            start, end = ev["ts_s"], ev["end_s"]
+        else:                                 # foreign chrome trace
+            start = ev["ts"] / _US
+            end = start + ev["dur"] / _US
+        spans.append(Span(name=ev["name"], cat=ev.get("cat", ""),
+                          pid=str(ev["pid"]), tid=str(ev["tid"]),
+                          start=start, end=end,
+                          args=dict(ev.get("args", {}))))
+    return spans
+
+
+def write_chrome_trace(path: str, spans: Sequence[Span]) -> None:
+    with open(path, "w") as f:
+        json.dump(to_chrome_trace(spans), f)
+
+
+def read_chrome_trace(path: str) -> list[Span]:
+    with open(path) as f:
+        return from_chrome_trace(json.load(f))
+
+
+# ---------------------------------------------------------------------------
+# Online (a, b) refit -> replan.
+# ---------------------------------------------------------------------------
+
+def refit_model(bucket_samples: Sequence[tuple[int, float]],
+                name: str = "refit") -> cost_model.AllReduceModel:
+    """Least-squares (a, b) from observed (nbytes, duration) collectives.
+
+    Needs >= 2 samples spanning >= 2 distinct sizes (otherwise the linear
+    system is rank-deficient); sequential-mode durations exclude queueing
+    so the fit recovers the effective startup + per-byte cost including
+    any contention the collectives experienced.
+    """
+    if len(bucket_samples) < 2:
+        raise ValueError("need >= 2 bucket samples to refit")
+    sizes = [float(s) for s, _ in bucket_samples]
+    if len(set(sizes)) < 2:
+        raise ValueError("need >= 2 distinct bucket sizes to refit")
+    times = [float(t) for _, t in bucket_samples]
+    return cost_model.fit(sizes, times, name)
+
+
+def replan_from_samples(strategy: str, specs: Sequence[TensorSpec],
+                        bucket_samples: Sequence[tuple[int, float]],
+                        ) -> tuple[MergePlan, cost_model.AllReduceModel]:
+    """Refit the comm model from observed collectives, then replan."""
+    model = refit_model(bucket_samples)
+    return planner.replan(strategy, specs, model), model

@@ -1,0 +1,64 @@
+"""Worker profiles: heterogeneous speeds, stragglers, seeded jitter.
+
+A worker's compute times are the job's nominal per-tensor times multiplied
+by a per-iteration *scale*:
+
+    scale(iter) = slowdown * lognormal(sigma)        (seeded, reproducible)
+
+``slowdown`` models persistent heterogeneity (an old GPU, a thermally
+throttled host, the paper's K80 vs V100 gap); ``jitter_sigma`` models
+transient noise (OS scheduling, network interrupts, garbage collection).
+The lognormal draw is keyed on ``(seed, job, worker, iteration)`` through a
+``numpy`` ``SeedSequence``, so a scenario replays identically regardless of
+event interleaving — the engine's determinism-under-seed property tests
+depend on this.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerProfile:
+    """One worker's compute behaviour (communication lives in network.py)."""
+
+    name: str
+    slowdown: float = 1.0        # >= 1 is slower than nominal
+    jitter_sigma: float = 0.0    # lognormal sigma; 0 = deterministic
+
+    def __post_init__(self):
+        if self.slowdown <= 0:
+            raise ValueError(f"slowdown must be positive: {self}")
+        if self.jitter_sigma < 0:
+            raise ValueError(f"negative jitter_sigma: {self}")
+
+    def scale(self, seed: int, job: str, worker_idx: int,
+              iteration: int) -> float:
+        """Compute-time multiplier for one iteration (deterministic)."""
+        if self.jitter_sigma == 0.0:
+            return self.slowdown
+        key = [seed, zlib.crc32(job.encode()), worker_idx, iteration]
+        rng = np.random.default_rng(np.random.SeedSequence(key))
+        # mean-one lognormal so jitter adds variance, not bias
+        draw = rng.lognormal(mean=-0.5 * self.jitter_sigma ** 2,
+                             sigma=self.jitter_sigma)
+        return self.slowdown * float(draw)
+
+
+def make_workers(n: int, *, slow: dict[int, float] | None = None,
+                 jitter_sigma: float = 0.0,
+                 prefix: str = "w") -> list[WorkerProfile]:
+    """Build ``n`` workers; ``slow`` maps worker index -> slowdown factor."""
+    if n < 1:
+        raise ValueError("need at least one worker")
+    slow = slow or {}
+    bad = [i for i in slow if not 0 <= i < n]
+    if bad:
+        raise ValueError(f"straggler indices out of range: {bad}")
+    return [WorkerProfile(f"{prefix}{i}", slowdown=slow.get(i, 1.0),
+                          jitter_sigma=jitter_sigma)
+            for i in range(n)]

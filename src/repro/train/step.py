@@ -49,6 +49,36 @@ from repro.train.train_state import TrainState
 EP_LEAF_RE = re.compile(r"w_(gate|up|down)_e")
 
 
+def _microbatch_scan(body, carry, xs, n_micro):
+    """lax.scan over microbatches, unrolled where scan cannot lower (old
+    JAX inside a shard_map manual subgroup — see layers.unroll_scans_here)."""
+    from repro.models import layers as _layers
+    if not _layers.unroll_scans_here():
+        return jax.lax.scan(body, carry, xs)
+    ys = []
+    for i in range(n_micro):
+        mb = jax.tree.map(lambda x, i=i: x[i], xs)
+        carry, y = body(carry, mb)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, stacked
+
+
+def _shard_map(body, mesh, in_specs, out_specs, manual_axes):
+    """shard_map across JAX versions: new JAX takes ``axis_names`` (the
+    manual set) and ``check_vma``; old JAX (0.4.x) lives in
+    jax.experimental and takes the complementary ``auto`` set and
+    ``check_rep``."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  axis_names=set(manual_axes), check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm_old
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return sm_old(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_rep=False, auto=auto)
+
+
 @dataclasses.dataclass
 class StepArtifacts:
     """Everything the launcher needs besides the step function itself."""
@@ -95,7 +125,7 @@ def _merge_groups(template, rep, ep):
 def _axes_size(axes) -> int:
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        n *= comm.axis_size(a)
     return n
 
 
@@ -105,13 +135,18 @@ def _axes_size(axes) -> int:
 
 def build_plan(params_shape, run: RunConfig, mesh_shape, mesh_axes,
                strategy: str | None = None,
-               exclude: set | None = None):
+               exclude: set | None = None,
+               ep_on: bool | None = None):
     """Merge plan(s) + tensor specs + cost model for this run.
 
     ``exclude``: leaf paths whose DP reduction happens elsewhere (ZeRO-3
-    leaves reduce inside autodiff via the gather transpose)."""
+    leaves reduce inside autodiff via the gather transpose).
+    ``ep_on``: expert-parallel split as decided by the caller — must match
+    the step body's _split_groups or the plan's bucket indices point at
+    the wrong leaves; defaults to the mesh-derived value."""
     par = run.parallel
-    ep_on = bool(par.ep_axis) and par.ep_axis in mesh_axes
+    if ep_on is None:
+        ep_on = bool(par.ep_axis) and par.ep_axis in mesh_axes
     rep_shape, ep_shape = _split_groups(params_shape, ep_on)
     if exclude:
         rep_shape = jax.tree_util.tree_map_with_path(
@@ -266,12 +301,24 @@ def build_train_step(model: LM, run: RunConfig, mesh,
     dp_axes = tuple(a for a in par.dp_axes if a in mesh_axes)
     manual = frozenset(dp_axes)
     ep_on = bool(par.ep_axis) and par.ep_axis in mesh_axes
+    if ep_on and dp_axes and not hasattr(jax, "shard_map"):
+        # Old JAX: moe_apply skips the EP all_to_all inside shard_map (see
+        # models/moe.py), computing every expert locally — so expert leaves
+        # must be treated as replicated here too.
+        ep_on = False
     zero_axis = "data" if "data" in dp_axes else (dp_axes[0] if dp_axes
                                                   else "")
     pod_axes = tuple(a for a in dp_axes if a != zero_axis)
     zero_n = _static_size(dims, (zero_axis,)) if zero_axis else 1
     # effective ZeRO mode: sharded-state modes need a real data axis
     eff_zero = par.zero if (zero_axis and dp_axes) else 0
+    if eff_zero == 1 and not hasattr(jax, "shard_map"):
+        # Old JAX (< 0.5): the merged all-gather of updated params trips the
+        # old SPMD partitioner inside a partial-auto shard_map.  ZeRO-1 is
+        # numerically identical to the replicated optimizer (see
+        # tests/test_train_integration.py::test_zero1_matches_zero0), so
+        # degrade to the replicated path rather than crash.
+        eff_zero = 0
 
     opt = make_optimizer(run.optimizer, weight_decay=run.weight_decay,
                          state_dtype=run.optimizer_state_dtype)
@@ -291,7 +338,8 @@ def build_train_step(model: LM, run: RunConfig, mesh,
                                          zero_n, ep_on)
     plan, ep_plan, specs, cmodel = build_plan(params_shape, run, mesh_shape,
                                               mesh_axes, strategy,
-                                              exclude=set(fsdp_dims))
+                                              exclude=set(fsdp_dims),
+                                              ep_on=ep_on)
 
     # static per-bucket weight-decay masks (packed ZeRO-1 path only)
     decay_masks = []
@@ -337,8 +385,8 @@ def build_train_step(model: LM, run: RunConfig, mesh,
 
         zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
                              params)
-        (gacc, loss_sum), metrics = jax.lax.scan(
-            mb_body, (zeros, jnp.zeros((), jnp.float32)), resh)
+        (gacc, loss_sum), metrics = _microbatch_scan(
+            mb_body, (zeros, jnp.zeros((), jnp.float32)), resh, n_micro)
         grads = jax.tree.map(lambda g: g / n_micro, gacc)
         metrics = jax.tree.map(lambda m: m[-1], metrics)
         return loss_sum / n_micro, metrics, grads
@@ -404,7 +452,6 @@ def build_train_step(model: LM, run: RunConfig, mesh,
         lr = lr_fn(state.step)
 
         n = _axes_size((zero_axis,))
-        idx = jax.lax.axis_index(zero_axis)
         rep_p, ep_p = _split_groups(state.params, ep_on)
         flatp, _ = jax.tree_util.tree_flatten_with_path(rep_p)
         by_path = {_keystr(p): v for p, v in flatp}
@@ -416,11 +463,8 @@ def build_train_step(model: LM, run: RunConfig, mesh,
             if pad:
                 pbuf = jnp.pad(pbuf, (0, pad))
                 mask = jnp.pad(mask, (0, pad))
-            shard_sz = pbuf.shape[0] // n
-            pshard = jax.lax.dynamic_slice_in_dim(pbuf, idx * shard_sz,
-                                                  shard_sz)
-            mshard = jax.lax.dynamic_slice_in_dim(mask, idx * shard_sz,
-                                                  shard_sz)
+            pshard = comm.replicated_shard(pbuf, zero_axis)
+            mshard = comm.replicated_shard(mask, zero_axis)
             g = gshard.astype(jnp.float32) * scale
             new_p, new_s = _masked_update(opt, g, pshard, state.opt_state[k],
                                           state.step, lr, mshard,
@@ -470,8 +514,8 @@ def build_train_step(model: LM, run: RunConfig, mesh,
                 return (acc, loss_acc + l), m
             zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
                                  state.params)
-            (grads, loss_sum), metrics = jax.lax.scan(
-                mb_body, (zeros, jnp.zeros((), jnp.float32)), resh)
+            (grads, loss_sum), metrics = _microbatch_scan(
+                mb_body, (zeros, jnp.zeros((), jnp.float32)), resh, n_micro)
             grads = jax.tree.map(lambda g: g / n_micro, grads)
             metrics = jax.tree.map(lambda m: m[-1], metrics)
             loss = loss_sum / n_micro
@@ -543,11 +587,11 @@ def build_train_step(model: LM, run: RunConfig, mesh,
         manual_state = jax.tree.map(
             lambda s: shd.manual_only(s, manual), st_pspecs,
             is_leaf=lambda x: isinstance(x, P))
-        step_fn = jax.shard_map(
-            body, mesh=mesh,
+        step_fn = _shard_map(
+            body, mesh,
             in_specs=(manual_state, batch_pspec),
             out_specs=(manual_state, P()),
-            axis_names=manual, check_vma=False)
+            manual_axes=manual)
     else:
         step_fn = body
 

@@ -1,0 +1,145 @@
+"""Hypothesis fallback so property tests degrade gracefully.
+
+When the real ``hypothesis`` package is installed we re-export it untouched.
+When it is missing (the CI image does not ship it) we provide a tiny
+deterministic stand-in implementing the small strategy surface these tests
+use — ``integers``, ``floats``, ``booleans``, ``sampled_from``, ``lists``,
+``tuples``, ``just`` and ``.flatmap``/``.map`` — with ``@given`` expanding to
+a seeded random sweep of ``max_examples`` draws.  The fallback trades
+shrinking and coverage-guided search for zero dependencies; failures print
+the offending draw so they stay reproducible (the sweep is seeded per test
+name).
+
+Usage in test modules::
+
+    from _hypothesis_compat import hypothesis, st
+"""
+
+from __future__ import annotations
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng: random.Random):
+            return self._draw(rng)
+
+        def flatmap(self, fn) -> "_Strategy":
+            return _Strategy(lambda rng: fn(self.draw(rng)).draw(rng))
+
+        def map(self, fn) -> "_Strategy":
+            return _Strategy(lambda rng: fn(self.draw(rng)))
+
+        def filter(self, pred, _max_tries: int = 1000) -> "_Strategy":
+            def draw(rng):
+                for _ in range(_max_tries):
+                    v = self.draw(rng)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate too strict")
+            return _Strategy(draw)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def _floats(min_value, max_value, **_kw):
+        # Log-uniform-ish mix: hypothesis is fond of boundary values, so
+        # include them explicitly for a little adversarial flavour.
+        def draw(rng):
+            r = rng.random()
+            if r < 0.05:
+                return min_value
+            if r < 0.10:
+                return max_value
+            return rng.uniform(min_value, max_value)
+        return _Strategy(draw)
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+    def _just(value):
+        return _Strategy(lambda rng: value)
+
+    def _lists(elements, min_size=0, max_size=None):
+        hi = max_size if max_size is not None else min_size + 10
+        return _Strategy(lambda rng: [
+            elements.draw(rng) for _ in range(rng.randint(min_size, hi))])
+
+    def _tuples(*strategies):
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    st = types.ModuleType("hypothesis.strategies")
+    st.integers = _integers
+    st.floats = _floats
+    st.booleans = _booleans
+    st.sampled_from = _sampled_from
+    st.just = _just
+    st.lists = _lists
+    st.tuples = _tuples
+    st.SearchStrategy = _Strategy
+
+    _DEFAULT_MAX_EXAMPLES = 100
+
+    def _given(*g_strategies, **g_kw):
+        if g_kw:
+            raise NotImplementedError(
+                "fallback @given supports positional strategies only")
+
+        def deco(fn):
+            # NB: no functools.wraps — pytest must see a zero-arg signature,
+            # not the original one (it would mistake draws for fixtures).
+            def wrapper():
+                n = getattr(wrapper, "_compat_max_examples",
+                            getattr(fn, "_compat_max_examples",
+                                    _DEFAULT_MAX_EXAMPLES))
+                rng = random.Random(fn.__qualname__)
+                for i in range(n):
+                    draws = tuple(s.draw(rng) for s in g_strategies)
+                    try:
+                        fn(*draws)
+                    except Exception:
+                        print(f"[hypothesis-compat] falsifying example "
+                              f"#{i} for {fn.__qualname__}: {draws!r}")
+                        raise
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+    def _settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            # Works whether @settings sits above or below @given: the @given
+            # wrapper checks its own attribute first, then the inner fn's.
+            fn._compat_max_examples = max_examples
+            return fn
+        return deco
+
+    def _assume(condition):
+        if not condition:
+            raise NotImplementedError(
+                "fallback hypothesis cannot reject examples; restructure "
+                "the strategy instead of using assume()")
+
+    hypothesis = types.ModuleType("hypothesis")
+    hypothesis.given = _given
+    hypothesis.settings = _settings
+    hypothesis.assume = _assume
+    hypothesis.strategies = st
+
+__all__ = ["hypothesis", "st", "HAVE_HYPOTHESIS"]

@@ -1,0 +1,313 @@
+"""Event-driven cluster simulator (repro.sim) correctness.
+
+The anchor result: on the shared domain — homogeneous workers, one job,
+sequential comm — the engine's iteration time equals the closed-form
+``core/simulator.simulate`` to 1e-9 for every planner, including the
+brute-force-optimal plan.  Everything beyond that domain (stragglers,
+jitter, contention, elastic resize) is tested for the properties the
+closed form predicts at the boundary plus engine-specific invariants
+(determinism under seed, straggler monotonicity, trace round-trips).
+"""
+
+import json
+
+import pytest
+from _hypothesis_compat import hypothesis, st
+
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import (TensorSpec, make_plan, plan_brute_force,
+                                replan)
+from repro.core.simulator import cross_validate, simulate
+from repro.sim import (ClusterSim, JobSpec, Topology, event_driven_t_iter,
+                       make_workers, scenarios, trace)
+from repro.sim.network import (FlatTopology, HierarchicalTopology,
+                               invert_ring, predicted_ring)
+
+STRATEGIES = ("wfbp", "single", "mgwfbp", "dp_optimal")
+
+
+def _mk_specs(sizes, times):
+    return [TensorSpec(f"t{i}", s, t) for i, (s, t) in
+            enumerate(zip(sizes, times))]
+
+
+specs_strategy = st.integers(1, 8).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.integers(1, 1 << 22), min_size=n, max_size=n),
+        st.lists(st.floats(1e-6, 5e-3), min_size=n, max_size=n)))
+
+model_strategy = st.tuples(st.floats(0, 2e-3), st.floats(1e-11, 1e-8))
+
+
+# ---------------------------------------------------------------------------
+# Cross-validation against the closed form.
+# ---------------------------------------------------------------------------
+
+@hypothesis.given(specs_strategy, model_strategy, st.floats(0, 0.01),
+                  st.sampled_from(["events", "analytic"]))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_engine_matches_closed_form(sizes_times, ab, t_f, compute_mode):
+    specs = _mk_specs(*sizes_times)
+    model = AllReduceModel(*ab)
+    for strat in STRATEGIES:
+        plan = make_plan(strat, specs, model)
+        t_cf = simulate(specs, plan, model, t_f).t_iter
+        t_eng = event_driven_t_iter(specs, plan, model, t_f,
+                                    n_workers=4, compute_mode=compute_mode)
+        assert t_eng == pytest.approx(t_cf, abs=1e-9)
+
+
+@hypothesis.given(specs_strategy, model_strategy)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_engine_matches_closed_form_on_optimal_plan(sizes_times, ab):
+    """Same identity on the certified-optimal brute-force plan."""
+    specs = _mk_specs(*sizes_times)
+    model = AllReduceModel(*ab)
+    plan = plan_brute_force(specs, model)
+    cross_validate(specs, plan, model, t_f=1e-3, atol=1e-9, n_workers=3)
+
+
+def test_multi_iteration_steady_state():
+    """Homogeneous BSP: every iteration takes exactly as long as the first."""
+    specs, t_f = trace.synthetic_specs(20, seed=3)
+    sim = scenarios.paper_scaling(specs, t_f, 8, iters=5,
+                                  compute_mode="events")
+    job = sim.run().job("train")
+    t0 = job.iterations[0].t_iter
+    for it in job.iterations[1:]:
+        assert it.t_iter == pytest.approx(t0, abs=1e-9)
+
+
+def test_hierarchical_phases_match_flat_model():
+    """Uncontended two-phase ICI+DCN collective == its flat (a, b) view,
+    so the unmodified planner stays valid on pod topologies."""
+    specs, t_f = trace.synthetic_specs(16, seed=5)
+    topo = HierarchicalTopology(pods=4, chips_per_pod=16)
+    model = topo.linear_model()
+    for strat in STRATEGIES:
+        plan = make_plan(strat, specs, model)
+        t_cf = simulate(specs, plan, model, t_f).t_iter
+        job = JobSpec(name="j", specs=specs, plan=plan, t_f=t_f,
+                      workers=make_workers(4), topology=topo)
+        res = ClusterSim([job]).run()
+        assert res.job("j").iterations[-1].t_iter == \
+            pytest.approx(t_cf, abs=1e-9)
+
+
+def test_events_and_analytic_agree_heterogeneous():
+    """The per-tensor event streams and the vectorized ready times are two
+    implementations of the same semantics — also off the homogeneous
+    domain."""
+    specs, t_f = trace.synthetic_specs(24, seed=11)
+    for mode_kwargs in (dict(slow_factor=2.5), dict(jitter_sigma=0.3)):
+        ts = []
+        for cm in ("events", "analytic"):
+            sim = scenarios.straggler(specs, t_f, 6, iters=3,
+                                      compute_mode=cm, **mode_kwargs)
+            ts.append(sim.run().job("train").t_iters)
+        for a, b in zip(*ts):
+            assert a == pytest.approx(b, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Engine-specific invariants.
+# ---------------------------------------------------------------------------
+
+def test_deterministic_under_seed():
+    specs, t_f = trace.synthetic_specs(16, seed=2)
+    runs = [scenarios.straggler(specs, t_f, 8, jitter_sigma=0.25, iters=4,
+                                seed=123).run()
+            for _ in range(2)]
+    assert runs[0].job("train").t_iters == runs[1].job("train").t_iters
+    assert runs[0].spans == runs[1].spans
+    other = scenarios.straggler(specs, t_f, 8, jitter_sigma=0.25, iters=4,
+                                seed=124).run()
+    assert other.job("train").t_iters != runs[0].job("train").t_iters
+
+
+@hypothesis.given(st.floats(1.0, 4.0), st.floats(0.0, 2.0))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_straggler_monotonicity(factor, extra):
+    """Sequential-comm sync SGD: slowing a worker down more never makes
+    the iteration faster."""
+    specs, t_f = trace.synthetic_specs(12, seed=4)
+    t1 = scenarios.straggler(specs, t_f, 6, slow_factor=factor) \
+        .run().job("train").t_iters[-1]
+    t2 = scenarios.straggler(specs, t_f, 6, slow_factor=factor + extra) \
+        .run().job("train").t_iters[-1]
+    assert t2 >= t1 - 1e-12
+
+
+def test_straggler_slows_whole_fleet():
+    specs, t_f = trace.synthetic_specs(16, seed=2)
+    base = scenarios.straggler(specs, t_f, 8, slow_factor=1.0) \
+        .run().job("train").t_iters[-1]
+    slow = scenarios.straggler(specs, t_f, 8, slow_factor=3.0) \
+        .run().job("train").t_iters[-1]
+    assert slow > base * 1.5          # one 3x worker drags everyone
+
+
+def test_contention_stretches_both_jobs():
+    sa, tfa = trace.synthetic_specs(20, seed=6)
+    sb, tfb = trace.synthetic_specs(14, seed=7)
+    alone_a = scenarios.paper_scaling(sa, tfa, 4, iters=2) \
+        .run().job("train").t_iters[-1]
+    alone_b = scenarios.paper_scaling(sb, tfb, 4, iters=2) \
+        .run().job("train").t_iters[-1]
+    shared = scenarios.two_jobs(sa, tfa, sb, tfb, n_workers=4, iters=2).run()
+    ta = shared.job("job_a").t_iters[-1]
+    tb = shared.job("job_b").t_iters[-1]
+    assert ta >= alone_a - 1e-12
+    assert tb >= alone_b - 1e-12
+    assert ta > alone_a or tb > alone_b   # somebody paid for sharing
+
+
+def test_bursty_background_slows_training():
+    specs, t_f = trace.synthetic_specs(16, seed=8)
+    quiet = scenarios.paper_scaling(specs, t_f, 8, iters=3) \
+        .run().job("train").t_iters[-1]
+    noisy = scenarios.bursty(specs, t_f, 8, burst_flows=4,
+                             horizon_iters=3).run().job("train").t_iters[-1]
+    assert noisy >= quiet - 1e-12
+
+
+def test_concurrent_mode_no_slower_than_sequential():
+    """Removing the in-order issue constraint can only start collectives
+    earlier; with fair sharing the last finish never regresses... is not a
+    theorem under processor sharing, but it must hold on a plan whose
+    buckets never overlap (single bucket)."""
+    specs, t_f = trace.synthetic_specs(16, seed=9)
+    model = AllReduceModel(1e-4, 1e-9)
+    plan = make_plan("single", specs, model)
+    ts = {}
+    for mode in ("sequential", "concurrent"):
+        job = JobSpec(name="j", specs=specs, plan=plan, t_f=t_f,
+                      workers=make_workers(4), topology=Topology(model),
+                      comm_mode=mode)
+        ts[mode] = ClusterSim([job]).run().job("j").t_iters[-1]
+    assert ts["concurrent"] == pytest.approx(ts["sequential"], abs=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Trace I/O + refit + elastic loop.
+# ---------------------------------------------------------------------------
+
+def test_chrome_trace_roundtrip(tmp_path):
+    specs, t_f = trace.synthetic_specs(12, seed=10)
+    res = scenarios.straggler(specs, t_f, 4, jitter_sigma=0.1, iters=2) \
+        .run()
+    assert res.spans
+    path = str(tmp_path / "trace.json")
+    trace.write_chrome_trace(path, res.spans)
+    with open(path) as f:
+        obj = json.load(f)
+    assert all(ev["ph"] == "X" and ev["dur"] >= 0
+               for ev in obj["traceEvents"])
+    assert trace.read_chrome_trace(path) == res.spans
+
+
+def test_foreign_chrome_trace_import():
+    obj = {"traceEvents": [
+        {"name": "op", "ph": "X", "pid": 1, "tid": 2, "ts": 1000.0,
+         "dur": 500.0},
+        {"name": "marker", "ph": "i", "pid": 1, "tid": 2, "ts": 0.0},
+    ]}
+    spans = trace.from_chrome_trace(obj)
+    assert len(spans) == 1
+    assert spans[0].start == pytest.approx(1e-3)
+    assert spans[0].end == pytest.approx(1.5e-3)
+
+
+def test_refit_recovers_model_from_engine_timings():
+    """Bucket (bytes, duration) samples from an uncontended sequential run
+    are exact draws from T(M) = a + b*M — the fit must recover (a, b)."""
+    specs, t_f = trace.synthetic_specs(24, seed=12)
+    model = AllReduceModel(5e-4, 2e-9)
+    plan = make_plan("wfbp", specs, model)
+    job = JobSpec(name="j", specs=specs, plan=plan, t_f=t_f,
+                  workers=make_workers(4), topology=Topology(model))
+    samples = ClusterSim([job]).run().job("j").bucket_samples
+    fitted = trace.refit_model(samples)
+    assert fitted.a == pytest.approx(model.a, rel=1e-6)
+    assert fitted.b == pytest.approx(model.b, rel=1e-6)
+    new_plan, new_model = trace.replan_from_samples("mgwfbp", specs, samples)
+    assert new_plan.buckets == replan("mgwfbp", specs, model).buckets
+
+
+def test_refit_rejects_degenerate_samples():
+    with pytest.raises(ValueError):
+        trace.refit_model([(1024, 1e-3)])
+    with pytest.raises(ValueError):
+        trace.refit_model([(1024, 1e-3), (1024, 1.1e-3)])
+
+
+def test_ring_inversion_roundtrip():
+    from repro.core import cost_model
+    alpha, beta = 3e-5, 2e-9
+    m8 = cost_model.ring(8, alpha, beta, 0.0)
+    a_hat, b_hat = invert_ring(m8.a, m8.b, 8)
+    assert a_hat == pytest.approx(alpha, rel=1e-12)
+    assert b_hat == pytest.approx(beta, rel=1e-12)
+    m32 = predicted_ring(m8.a, m8.b, 8, 32)
+    ref = cost_model.ring(32, alpha, beta, 0.0)
+    assert m32.a == pytest.approx(ref.a, rel=1e-12)
+    assert m32.b == pytest.approx(ref.b, rel=1e-12)
+
+
+def test_elastic_resize_closes_replanning_loop():
+    specs, t_f = trace.synthetic_specs(32, seed=13)
+    n_after = 32
+    sim, report = scenarios.elastic_resize(specs, t_f, n_before=8,
+                                           n_after=n_after, resize_at=1,
+                                           iters=4)
+    res = sim.run()
+    job = res.job("train")
+    assert len(job.iterations) == 4
+    assert report.plan_after is not None
+    # post-resize iterations all use the new cluster + plan
+    t_after = job.iterations[-1].t_iter
+    fresh = scenarios.paper_scaling(specs, t_f, n_after) \
+        .run().job("train").t_iters[-1]
+    if not report.used_fallback:
+        # exact refit -> the online replan equals planning from scratch
+        assert report.fitted is not None
+        assert t_after == pytest.approx(fresh, abs=1e-9)
+    assert job.iterations[2].t_iter == pytest.approx(t_after, abs=1e-9)
+
+
+def test_specs_json_roundtrip(tmp_path):
+    specs, t_f = trace.synthetic_specs(10, seed=14)
+    path = str(tmp_path / "profile.json")
+    trace.specs_to_json(path, specs, t_f)
+    specs2, t_f2 = trace.specs_from_json(path)
+    assert specs2 == specs and t_f2 == t_f
+
+
+def test_scenario_catalog_smoke():
+    """Every catalog entry builds and completes, producing >= 1 iteration
+    per job and a non-empty span timeline."""
+    for name, build in scenarios.CATALOG.items():
+        res = build().run()
+        assert res.jobs, name
+        for job in res.jobs.values():
+            assert job.iterations, (name, job.name)
+        assert res.spans, name
+
+
+def test_worker_validation():
+    with pytest.raises(ValueError):
+        make_workers(0)
+    with pytest.raises(ValueError):
+        make_workers(4, slow={7: 2.0})
+    from repro.sim.workers import WorkerProfile
+    with pytest.raises(ValueError):
+        WorkerProfile("w", slowdown=0.0)
+
+
+def test_jobspec_validation():
+    specs, t_f = trace.synthetic_specs(4, seed=15)
+    model = AllReduceModel(1e-4, 1e-9)
+    plan = make_plan("single", specs[:3], model)
+    with pytest.raises(ValueError):
+        JobSpec(name="j", specs=specs, plan=plan, t_f=t_f,
+                workers=make_workers(2), topology=Topology(model))

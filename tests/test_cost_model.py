@@ -1,9 +1,8 @@
 """All-reduce cost models (paper Table 2 / Eq. 10-11) + fitting."""
 
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core import cost_model as cm
 

@@ -1,12 +1,11 @@
 """Per-kernel allclose vs pure-jnp oracles, shape/dtype sweeps
 (interpret=True executes the kernel body on CPU)."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.kernels.bucket_pack import ops as bp_ops, ref as bp_ref
 from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref

@@ -21,10 +21,9 @@ _SCRIPT = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.configs.base import ShapeConfig
     from repro.data.pipeline import DataPipeline
+    from repro.launch.mesh import make_mesh, use_mesh
     from repro.models import registry
     from repro.train.step import build_train_step
-
-    AT = jax.sharding.AxisType.Auto
 
     def run(arch, mesh_shape, axes, dp_axes, zero, ep, steps=3):
         bundle = registry.reduced_arch(arch)
@@ -36,9 +35,8 @@ _SCRIPT = textwrap.dedent("""
                                       shape=shape, microbatch=0,
                                       learning_rate=1e-2)
         model = bundle.model(par)
-        mesh = jax.make_mesh(mesh_shape, axes,
-                             axis_types=(AT,) * len(axes))
-        with jax.set_mesh(mesh):
+        mesh = make_mesh(mesh_shape, axes)
+        with use_mesh(mesh):
             step_fn, init_fn, art = build_train_step(model, run_cfg, mesh)
             sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
                               art.state_pspecs,
@@ -72,6 +70,15 @@ _SCRIPT = textwrap.dedent("""
     l_ep = run("deepseek-moe-16b", (2, 2, 2), ("pod", "data", "model"),
                ("pod", "data"), 1, "data", steps=2)
     assert all(np.isfinite(l_ep)), l_ep
+    if not hasattr(jax, "shard_map"):
+        # old JAX degrades EP to local expert compute, so the run must be
+        # numerically identical to EP disabled — this catches plan/grad-tree
+        # misalignment in the degrade (expert leaves skipping the all-reduce)
+        l_noep = run("deepseek-moe-16b", (2, 2, 2),
+                     ("pod", "data", "model"), ("pod", "data"), 1, "",
+                     steps=2)
+        for a, b in zip(l_ep, l_noep):
+            assert abs(a - b) < 1e-5, (l_ep, l_noep)
     print("EP moe OK", l_ep)
     print("ALL-MULTIDEVICE-PASS")
 """)

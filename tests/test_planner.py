@@ -11,9 +11,8 @@ Key property results (also reported in EXPERIMENTS.md):
   does not cover interactions between merge decisions.
 """
 
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core.cost_model import AllReduceModel
 from repro.core.planner import (MergePlan, TensorSpec, make_plan,

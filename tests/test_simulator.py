@@ -1,8 +1,7 @@
 """Pipeline simulator invariants (paper Eqs. 6-8)."""
 
-import hypothesis
-import hypothesis.strategies as st
 import pytest
+from _hypothesis_compat import hypothesis, st
 
 from repro.core.cost_model import AllReduceModel
 from repro.core.planner import TensorSpec, plan_single, plan_wfbp, make_plan

@@ -19,6 +19,7 @@ import pytest
 
 from repro.configs.base import ShapeConfig
 from repro.data.pipeline import DataPipeline
+from repro.launch.mesh import make_mesh
 from repro.models import registry
 from repro.train import checkpoint
 from repro.train.step import build_train_step
@@ -33,8 +34,7 @@ def _setup(arch="xlstm-125m", strategy=None, steps=1, zero=0, seed=0,
     run = dataclasses.replace(bundle.run_config("train_4k", par),
                               shape=shape, microbatch=0, learning_rate=lr)
     model = bundle.model(par)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     step_fn, init_fn, art = build_train_step(model, run, mesh,
                                              strategy=strategy)
     state = init_fn(jax.random.PRNGKey(seed))
@@ -90,8 +90,7 @@ def test_microbatch_accumulation_matches_full_batch():
     par = dataclasses.replace(bundle.parallel, dp_axes=(), zero=0,
                               ep_axis="", attn_chunk=32)
     shape = ShapeConfig("tiny", "train", 32, 4)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     model = bundle.model(par)
     outs = {}
     for micro in (0, 2):
