@@ -1,37 +1,167 @@
-"""Algorithm 1 complexity check: O(L^2), one-time cost (paper §4.2).
+"""Planning-cost benchmarks: one-time O(L^2) reference vs the fast path.
 
-Measures wall time of the faithful Algorithm 1 and the DP-optimal planner
-for L up to 2048 tensors — both must stay far below one training step, so
-the 'no side-effect to training performance' claim holds even for the
-largest assigned model (deepseek-67b: ~600 tensors unrolled)."""
+The paper's §4.2 claim is that the merge plan is a one-time O(L^2) cost,
+"without affecting the training performance".  That holds for a single
+static plan — but this repo replans *in the loop* (elastic resizes,
+straggler evictions, contention fixpoints, scenario sweeps), so the
+planning cost itself is a hot path.  This suite measures:
+
+  * the faithful Algorithm 1 and DP-optimal reference planners (O(L^2));
+  * the incremental planner's from-scratch build (O(L));
+  * incremental replanning at L=512 — cost-model swaps, point updates,
+    appends — which must be >= 10x faster than a from-scratch
+    ``plan_mgwfbp`` (asserted);
+  * the counter guard: a model-update sweep through one ``Planner`` must
+    never rebuild state from scratch (``scratch_plans`` stays 1).  CI runs
+    ``python benchmarks/planner_bench.py --check`` to enforce exactly
+    this, so a regression that silently falls back to from-scratch
+    replanning where the incremental path applies fails the build.
+"""
 
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
 
 from repro.core.cost_model import AllReduceModel
-from repro.core.planner import TensorSpec, plan_dp_optimal, plan_mgwfbp
+from repro.core.planner import (Planner, SpecDelta, TensorSpec,
+                                plan_dp_optimal, plan_mgwfbp)
+
+REPLAN_L = 512          # the CI-guarded size
+REPLAN_UPDATES = 32
+MIN_SPEEDUP = 10.0      # incremental replan vs from-scratch Algorithm 1
+
+
+def _specs(L: int, seed: int = 0) -> list[TensorSpec]:
+    rng = np.random.default_rng(seed)
+    return [TensorSpec(f"t{i}", int(rng.integers(256, 1 << 22)),
+                       float(rng.uniform(1e-5, 1e-3)))
+            for i in range(L)]
+
+
+def _bench_replan(L: int = REPLAN_L, updates: int = REPLAN_UPDATES,
+                  ) -> dict[str, float]:
+    """Measure from-scratch vs incremental replanning at size L."""
+    specs = _specs(L)
+    base = AllReduceModel(9.72e-4, 1.97e-9)
+    models = [AllReduceModel(base.a * (1 + 0.01 * k), base.b)
+              for k in range(1, updates + 1)]
+
+    t0 = time.perf_counter()
+    plan_mgwfbp(specs, base)
+    t_scratch_alg1 = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    plan_dp_optimal(specs, base)
+    t_scratch_dp = time.perf_counter() - t0
+
+    planner = Planner(specs, base)
+    t0 = time.perf_counter()
+    for m in models:
+        planner.replan(m)
+    t_model = (time.perf_counter() - t0) / updates
+
+    rng = np.random.default_rng(1)
+    deltas = [SpecDelta(updates={
+        int(rng.integers(0, L)): TensorSpec(
+            f"u{k}", int(rng.integers(256, 1 << 22)),
+            float(rng.uniform(1e-5, 1e-3)))})
+        for k in range(updates)]
+    t0 = time.perf_counter()
+    for d in deltas:
+        planner.update(d)
+    t_point = (time.perf_counter() - t0) / updates
+
+    t0 = time.perf_counter()
+    for k in range(updates):
+        planner.append(TensorSpec(f"a{k}", 1 << 20, 1e-4))
+    t_append = (time.perf_counter() - t0) / updates
+
+    return {
+        "scratch_alg1": t_scratch_alg1,
+        "scratch_dp": t_scratch_dp,
+        "incr_model": t_model,
+        "incr_point": t_point,
+        "incr_append": t_append,
+        "speedup": t_scratch_alg1 / t_model,
+        "scratch_plans": planner.scratch_plans,
+        "incremental_updates": planner.incremental_updates,
+    }
+
+
+def check_incremental(L: int = REPLAN_L) -> dict[str, float]:
+    """The CI guard: counters + speedup floor at the guarded size.
+
+    Raises if the update sweep rebuilt planner state from scratch anywhere
+    the incremental path applies, or if the speedup target is missed.
+    """
+    r = _bench_replan(L)
+    if r["scratch_plans"] != 1:
+        raise AssertionError(
+            f"incremental planner rebuilt from scratch {r['scratch_plans']}x "
+            f"during an update sweep at L={L} — the incremental path was "
+            f"bypassed (expected exactly 1 initial build)")
+    if r["incremental_updates"] != 3 * REPLAN_UPDATES:
+        raise AssertionError(
+            f"expected {3 * REPLAN_UPDATES} incremental updates, "
+            f"counted {r['incremental_updates']}")
+    if r["speedup"] < MIN_SPEEDUP:
+        raise AssertionError(
+            f"incremental replan speedup {r['speedup']:.1f}x < "
+            f"{MIN_SPEEDUP}x target at L={L} "
+            f"(scratch {r['scratch_alg1']*1e3:.2f}ms vs incremental "
+            f"{r['incr_model']*1e3:.3f}ms)")
+    return r
 
 
 def run() -> list[tuple[str, float, str]]:
     rows = []
-    rng = np.random.default_rng(0)
     model = AllReduceModel(9.72e-4, 1.97e-9)
     prev = None
     for L in (64, 256, 1024, 2048):
-        specs = [TensorSpec(f"t{i}", int(rng.integers(256, 1 << 22)),
-                            float(rng.uniform(1e-5, 1e-3)))
-                 for i in range(L)]
+        specs = _specs(L)
         t0 = time.perf_counter()
         plan_mgwfbp(specs, model)
         t1 = time.perf_counter() - t0
         t0 = time.perf_counter()
         plan_dp_optimal(specs, model)
         t2 = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        Planner(specs, model).plan()
+        t3 = time.perf_counter() - t0
         growth = "" if prev is None else f"alg1 growth x{t1/prev:.1f}"
         prev = t1
         rows.append((f"planner.alg1.L{L}_us", t1 * 1e6,
-                     f"dp_optimal={t2*1e6:.0f}us {growth}"))
+                     f"dp_optimal={t2*1e6:.0f}us incr_scratch={t3*1e6:.0f}us "
+                     f"{growth}"))
+
+    r = check_incremental()
+    rows.append((f"planner.replan.scratch_alg1.L{REPLAN_L}_us",
+                 r["scratch_alg1"] * 1e6, "from-scratch Algorithm 1"))
+    rows.append((f"planner.replan.incremental.L{REPLAN_L}_us",
+                 r["incr_model"] * 1e6,
+                 f"cost-model swap via Planner.update "
+                 f"(point={r['incr_point']*1e6:.0f}us "
+                 f"append={r['incr_append']*1e6:.0f}us)"))
+    rows.append((f"planner.replan.speedup.L{REPLAN_L}", r["speedup"],
+                 f"incremental vs from-scratch (>= {MIN_SPEEDUP}x enforced); "
+                 f"scratch_plans={r['scratch_plans']:.0f}"))
     return rows
+
+
+def main(argv: list[str]) -> int:
+    if "--check" in argv:
+        r = check_incremental()
+        print(f"planner incremental-path guard OK at L={REPLAN_L}: "
+              f"speedup {r['speedup']:.0f}x, "
+              f"scratch_plans={r['scratch_plans']:.0f}, "
+              f"incremental_updates={r['incremental_updates']:.0f}")
+        return 0
+    for name, value, derived in run():
+        print(f"{name},{value:.3f},{derived}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -7,16 +7,48 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
   nonoverlap       — Figs 6-9 (t_c^no per strategy per cluster)
   scaling_sim      — Figs 10-11 (4..2048-worker closed-form fast path)
   cluster_sim      — §7 via the event engine + beyond-paper scenarios
-                     (stragglers, elastic refit+replan, bursts, contention)
-  planner_bench    — §4.2     (O(L^2) one-time planning cost)
+                     (stragglers, eviction, elastic refit+replan, bursts,
+                     contention fixpoint, batched sweeps)
+  planner_bench    — §4.2 one-time O(L^2) cost + the incremental planner
+                     fast path (>= 10x replan speedup enforced)
   kernels_bench    — kernels  (structural tile/bandwidth notes)
   roofline         — EXPERIMENTS.md §Roofline terms from dry-run artifacts
+
+Perf-trajectory tracking: the suites named in ``BENCH_JSON`` additionally
+write machine-readable ``BENCH_<suite>.json`` files (wall time of the
+whole suite plus every row) into the working directory, so CI can archive
+them and perf regressions are diffable across PRs.
 """
 
 from __future__ import annotations
 
+import json
 import sys
+import time
 import traceback
+
+# suite name -> artifact path (cwd-relative); wall-time + simulated-time
+# metrics for the perf-critical suites tracked across PRs.
+BENCH_JSON = {
+    "planner_bench": "BENCH_planner.json",
+    "cluster_sim": "BENCH_cluster_sim.json",
+}
+
+
+def write_bench_json(name: str, wall_s: float,
+                     rows: list[tuple[str, float, str]],
+                     error: str | None = None) -> None:
+    """One artifact per tracked suite — written on failure too (with the
+    error recorded), so a failing CI run still archives what it measured."""
+    path = BENCH_JSON[name]
+    payload = {
+        "suite": name,
+        "wall_s": wall_s,
+        "error": error,
+        "rows": [{"name": n, "value": v, "derived": d} for n, v, d in rows],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
 
 
 def main() -> None:
@@ -36,13 +68,21 @@ def main() -> None:
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in suites:
+        t0 = time.perf_counter()
         try:
-            for row_name, value, derived in fn():
+            rows = fn()
+            wall = time.perf_counter() - t0
+            for row_name, value, derived in rows:
                 print(f"{row_name},{value:.3f},{derived}")
+            if name in BENCH_JSON:
+                write_bench_json(name, wall, rows)
         except Exception as e:  # noqa: BLE001
             failed += 1
             traceback.print_exc()
             print(f"{name}.ERROR,0,{type(e).__name__}: {e}")
+            if name in BENCH_JSON:
+                write_bench_json(name, time.perf_counter() - t0, [],
+                                 error=f"{type(e).__name__}: {e}")
     if failed:
         sys.exit(1)
 

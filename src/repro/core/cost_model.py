@@ -82,6 +82,21 @@ class AllReduceModel:
         return AllReduceModel(self.a * factor, self.b * factor, self.name)
 
 
+def blend(old: AllReduceModel, new: AllReduceModel,
+          weight: float) -> AllReduceModel:
+    """Damped model update: ``weight`` on the new estimate, rest on the old.
+
+    The contention fixpoint (``planner.plan_contention_aware``) uses this to
+    suppress plan/fit oscillation: a full-step update (weight=1) can flip
+    between two plans whose observations each justify the other's model.
+    """
+    if not 0.0 <= weight <= 1.0:
+        raise ValueError(f"blend weight must be in [0, 1], got {weight}")
+    return AllReduceModel(old.a * (1 - weight) + new.a * weight,
+                          old.b * (1 - weight) + new.b * weight,
+                          new.name)
+
+
 # ---------------------------------------------------------------------------
 # Table 2: (a, b) per collective algorithm.
 # ---------------------------------------------------------------------------

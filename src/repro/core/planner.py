@@ -20,9 +20,22 @@ Planners
 * ``plan_single``      — one bucket for everything (SyncEASGD, Fig. 1c).
 * ``plan_fixed_size``  — PyTorch-DDP style byte-capped buckets (beyond-paper
                          baseline).
-* ``plan_mgwfbp``      — the paper's Algorithm 1, faithful O(L^2).
-* ``plan_dp_optimal``  — beyond-paper O(L^2) dynamic program that provably
-                         minimizes the final communication finish time.
+* ``plan_mgwfbp``      — the paper's Algorithm 1, faithful O(L^2)
+                         (reference implementation).
+* ``plan_dp_optimal``  — O(L^2) dynamic program that provably minimizes the
+                         final communication finish time (reference
+                         implementation).
+* ``Planner``          — the production fast path: the same optimal DP
+                         restructured around prefix-sum recurrences and a
+                         monotonic frontier so a from-scratch plan is O(L)
+                         and ``Planner.update(SpecDelta)`` replans
+                         incrementally (O(L log L) amortized over an update
+                         stream) — cheap enough to run *inside* elastic
+                         resizes and simulator sweeps.
+* ``plan_contention_aware`` — plan -> simulate -> refit (a, b) -> replan
+                         fixpoint that corrects the exclusive-link
+                         assumption against an observed (contended)
+                         environment.
 * ``plan_brute_force`` — exhaustive 2^(L-1) search (testing only).
 
 All planners consume a list of :class:`TensorSpec` (backward order) and a
@@ -32,10 +45,13 @@ cost model exposing ``a``, ``b`` and ``time(nbytes)`` (see
 
 from __future__ import annotations
 
+import bisect
+import collections
 import dataclasses
 import itertools
-from typing import Sequence
+from typing import Callable, Mapping, Sequence
 
+from repro.core import cost_model
 from repro.core.cost_model import AllReduceModel
 
 
@@ -250,6 +266,393 @@ def plan_dp_optimal(specs: Sequence[TensorSpec], model: AllReduceModel) -> Merge
     return MergePlan.from_boundaries(L, sorted(last), "dp_optimal")
 
 
+# ---------------------------------------------------------------------------
+# Fast path: incremental O(L log L) planner.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SpecDelta:
+    """A change to a planning problem, consumed by :meth:`Planner.update`.
+
+    Applied in order: ``updates`` (index -> replacement spec), then
+    ``truncate`` (keep the first ``truncate`` tensors), then ``append``.
+    ``model`` swaps the cost model (elastic resize / online (a, b) refit)
+    without touching the specs.
+    """
+
+    model: AllReduceModel | None = None
+    updates: Mapping[int, TensorSpec] | None = None
+    truncate: int | None = None
+    append: tuple[TensorSpec, ...] = ()
+
+
+class Planner:
+    """Incremental DP-optimal merge planner.
+
+    Same objective as :func:`plan_dp_optimal` —
+
+        f[i] = min_{j<i}  max(f[j], ready[i]) + T(pre[i+1] - pre[j+1])
+
+    — but evaluated in O(1) amortized per tensor instead of O(L) by
+    splitting the candidate set ``j`` on ``f[j] <= ready[i]``:
+
+    * **overlapped** candidates (``f[j] <= ready[i]``): the bucket starts at
+      ``ready[i]``, so the best candidate maximizes ``pre[j+1]`` — and since
+      prefix bytes are nondecreasing that is simply the *largest* such j.
+      Because both ``f`` and ``ready`` are nondecreasing, the split point
+      only moves right: a two-pointer suffices.
+    * **queued** candidates (``f[j] > ready[i]``): the bucket starts at
+      ``f[j]``, so the best candidate minimizes ``g[j] = f[j] - b*pre[j+1]``
+      over a window whose ends both move right — a classic monotonic-deque
+      sliding minimum.
+
+    The DP frontier (``f``/``parent``/prefix arrays) persists on the
+    instance, so :meth:`update` only recomputes the suffix at/after the
+    first changed tensor — O(L - k) for a point edit, O(1) amortized for a
+    stream of appends, O(L) for a cost-model swap (still a ~L× win over the
+    O(L^2) reference planners, which is what makes replanning cheap enough
+    for simulator sweeps and contention fixpoints).  ``scratch_plans`` /
+    ``incremental_updates`` count how state was (re)built; the benchmark
+    smoke guard asserts sweeps never fall back to from-scratch planning.
+    """
+
+    strategy = "dp_incremental"
+
+    def __init__(self, specs: Sequence[TensorSpec], model: AllReduceModel):
+        self.scratch_plans = 0
+        self.incremental_updates = 0
+        self._specs: list[TensorSpec] = list(specs)
+        self._model = model
+        self._rebuild()
+
+    # -- public API ------------------------------------------------------
+
+    @property
+    def specs(self) -> tuple[TensorSpec, ...]:
+        return tuple(self._specs)
+
+    @property
+    def model(self) -> AllReduceModel:
+        return self._model
+
+    @property
+    def num_tensors(self) -> int:
+        return len(self._specs)
+
+    def plan(self) -> MergePlan:
+        """The current optimal plan (cached; O(#buckets) to materialize)."""
+        if self._plan is None:
+            L = len(self._specs)
+            if L == 0:
+                self._plan = MergePlan((), self.strategy)
+            else:
+                last, i = [], L - 1
+                while i >= 0:
+                    last.append(i)
+                    i = self._parent[i]
+                self._plan = MergePlan.from_boundaries(L, sorted(last),
+                                                       self.strategy)
+        return self._plan
+
+    @property
+    def finish_time(self) -> float:
+        """Optimal final communication finish time f[L-1] (0 if L == 0)."""
+        return self._f[-1] if self._f else 0.0
+
+    def update(self, delta: SpecDelta) -> MergePlan:
+        """Apply a delta and replan, reusing the unchanged DP prefix."""
+        # validate the whole delta before mutating anything — a partial
+        # application would leave specs and DP state silently inconsistent
+        if delta.updates:
+            bad = [i for i in delta.updates if not 0 <= i < len(self._specs)]
+            if bad:
+                raise IndexError(f"update indices {bad} out of range "
+                                 f"0..{len(self._specs) - 1}")
+        if delta.truncate is not None and \
+                not 0 <= delta.truncate <= len(self._specs):
+            raise IndexError(f"truncate {delta.truncate} out of range")
+        self.incremental_updates += 1
+        dirty = len(self._specs)            # first index whose DP is stale
+        if delta.updates:
+            for idx, spec in sorted(delta.updates.items()):
+                if self._specs[idx] != spec:
+                    self._specs[idx] = spec
+                    dirty = min(dirty, idx)
+        if delta.truncate is not None and delta.truncate < len(self._specs):
+            del self._specs[delta.truncate:]
+            dirty = min(dirty, delta.truncate)
+        if delta.append:
+            dirty = min(dirty, len(self._specs))
+            self._specs.extend(delta.append)
+        if delta.model is not None:
+            if (delta.model.a != self._model.a or
+                    delta.model.b != self._model.b):
+                dirty = 0                   # every edge cost changed
+            self._model = delta.model
+        self._refresh(dirty)
+        return self.plan()
+
+    def replan(self, model: AllReduceModel) -> MergePlan:
+        """Convenience: elastic resize / (a, b) refit -> new plan."""
+        return self.update(SpecDelta(model=model))
+
+    def append(self, *specs: TensorSpec) -> MergePlan:
+        """Convenience: streaming profile ingestion."""
+        return self.update(SpecDelta(append=tuple(specs)))
+
+    # -- internals -------------------------------------------------------
+
+    def _rebuild(self) -> None:
+        """Full state construction from the spec list (counted)."""
+        self.scratch_plans += 1
+        self._ready: list[float] = []
+        self._pre: list[float] = [0.0]      # prefix bytes, extended index m
+        acc_t = 0.0
+        for s in self._specs:
+            acc_t += s.t_b
+            self._ready.append(acc_t)
+            self._pre.append(self._pre[-1] + s.nbytes)
+        self._F: list[float] = [0.0]        # F[m] = f[m-1], F[0] = 0
+        self._g: list[float] = [0.0]        # g[m] = F[m] - b*pre[m]
+        self._f: list[float] = []
+        self._parent: list[int] = []
+        self._dq: collections.deque[int] = collections.deque()
+        self._p = 0
+        self._plan: MergePlan | None = None
+        self._run_dp(0)
+
+    def _refresh(self, dirty: int) -> None:
+        """Recompute prefix arrays and DP from ``dirty`` onwards."""
+        L = len(self._specs)
+        appended_only = dirty >= len(self._ready)
+        del self._ready[dirty:]
+        del self._pre[dirty + 1:]
+        acc_t = self._ready[dirty - 1] if dirty else 0.0
+        for s in self._specs[dirty:]:
+            acc_t += s.t_b
+            self._ready.append(acc_t)
+            self._pre.append(self._pre[-1] + s.nbytes)
+        del self._f[dirty:]
+        del self._parent[dirty:]
+        del self._F[dirty + 1:]
+        del self._g[dirty + 1:]
+        self._plan = None
+        if not appended_only:
+            # rebuild the frontier (two-pointer + deque) at position dirty
+            if dirty == 0:
+                self._p, self._dq = 0, collections.deque()
+            else:
+                # dirty == L after a bare truncate; ready[L-1] is a valid
+                # lower bound for the next tensor's ready time (the pointer
+                # only ever needs to start at or below its true position).
+                r = self._ready[dirty] if dirty < L else self._ready[-1]
+                self._p = bisect.bisect_right(self._F, r, 0, dirty + 1) - 1
+                self._dq = collections.deque()
+                g = self._g
+                for m in range(self._p + 1, dirty):
+                    while self._dq and g[self._dq[-1]] > g[m]:
+                        self._dq.pop()
+                    self._dq.append(m)
+        self._run_dp(dirty)
+
+    def _run_dp(self, start: int) -> None:
+        """The vectorized-recurrence DP loop over tensors [start, L)."""
+        L = len(self._specs)
+        if start >= L:
+            return
+        a, b = self._model.a, self._model.b
+        ready, pre = self._ready, self._pre
+        F, g, f, parent = self._F, self._g, self._f, self._parent
+        dq, p = self._dq, self._p
+        for i in range(start, L):
+            # new candidate m = i (bucket opens after tensor i-1)
+            gi = g[i]
+            while dq and g[dq[-1]] > gi:
+                dq.pop()
+            dq.append(i)
+            r = ready[i]
+            # two-pointer split: F[m] <= ready[i]  <=>  m <= p
+            while p < i and F[p + 1] <= r:
+                p += 1
+            while dq and dq[0] <= p:
+                dq.popleft()
+            pre_i1 = pre[i + 1]
+            # overlapped side: start at ready[i], maximize pre[m] -> m = p
+            d = pre_i1 - pre[p]
+            best = r + (a + b * d if d > 0 else 0.0)
+            best_m = p
+            # queued side: start at F[m], minimize g[m] over the window
+            if dq:
+                m = dq[0]
+                d = pre_i1 - pre[m]
+                cand = F[m] + (a + b * d if d > 0 else 0.0)
+                if cand < best:
+                    best, best_m = cand, m
+            # zero-byte tail: an empty trailing bucket costs exactly 0, not
+            # a — the g-ranking above overcharges it, so handle explicitly.
+            if pre[i] == pre_i1:
+                m = bisect.bisect_left(pre, pre_i1, 0, i + 1)
+                cand = F[m] if F[m] > r else r
+                if cand < best:
+                    best, best_m = cand, m
+            f.append(best)
+            parent.append(best_m - 1)
+            F.append(best)
+            g.append(best - b * pre_i1)
+        self._p = p
+
+
+def plan_incremental(specs: Sequence[TensorSpec],
+                     model: AllReduceModel) -> MergePlan:
+    """One-shot use of the fast planner (same optimum as plan_dp_optimal)."""
+    return Planner(specs, model).plan()
+
+
+# ---------------------------------------------------------------------------
+# Contention-aware planning: plan -> simulate -> refit -> replan fixpoint.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FixpointRound:
+    """One iteration of the plan/simulate/refit loop."""
+
+    plan: MergePlan
+    model: AllReduceModel       # effective (a, b) AFTER this round's refit
+    observed_t: float           # environment-measured iteration time
+    predicted_t: float          # closed-form t_iter under the refit model
+    planned_under: AllReduceModel | None = None   # model the plan came from
+
+
+@dataclasses.dataclass(frozen=True)
+class FixpointResult:
+    plan: MergePlan             # best observed plan
+    # the best round's post-refit effective (a, b): the loop's current best
+    # estimate of the contended fabric — the model to carry forward into
+    # future replans.  The model the plan was *computed from* is the
+    # round's ``planned_under``.
+    model: AllReduceModel
+    rounds: tuple[FixpointRound, ...]
+    converged: bool             # plan reached a fixed point (or exact cycle)
+    best_round: int
+
+    @property
+    def observed_t(self) -> float:
+        return self.rounds[self.best_round].observed_t
+
+
+def effective_model(samples: Sequence[tuple[int, float]],
+                    base: AllReduceModel) -> AllReduceModel:
+    """Effective (a, b) from observed (nbytes, duration) collectives.
+
+    Least-squares when the samples span >= 2 distinct sizes; otherwise the
+    observed *stretch* (duration / exclusive-link prediction) scales the
+    base model — the single-bucket plan's degenerate case.
+    """
+    sized = [(float(n), float(t)) for n, t in samples if n > 0]
+    if len({n for n, _ in sized}) >= 2:
+        return cost_model.fit([n for n, _ in sized], [t for _, t in sized],
+                              "effective")
+    stretches = [t / base.time(n) for n, t in sized if base.time(n) > 0]
+    if not stretches:
+        return base
+    return base.scaled(sum(stretches) / len(stretches))
+
+
+def plan_contention_aware(
+        specs: Sequence[TensorSpec],
+        model: AllReduceModel,
+        evaluate: Callable[[MergePlan],
+                           tuple[float, Sequence[tuple[int, float]]]],
+        *,
+        t_f: float = 0.0,
+        max_rounds: int = 5,
+        damping: float = 0.5,
+        seed_plans: Sequence[MergePlan] = (),
+) -> FixpointResult:
+    """Close the loop the static planners leave open.
+
+    The exclusive-link model underlying :func:`plan_mgwfbp` /
+    :func:`plan_dp_optimal` mispredicts on shared fabrics: concurrent
+    collectives (other jobs, background bursts) stretch each other via
+    processor sharing, so the *effective* (a, b) a plan experiences differs
+    from the hardware model it was computed for (cf. DeAR,
+    arXiv:2302.12445).  This fixpoint iterates:
+
+      1. plan under the current effective model (exclusive-link at round 0);
+      2. ``evaluate(plan)`` — simulate (or measure) the plan in its real,
+         contended environment, returning the achieved iteration time and
+         the observed per-bucket (nbytes, duration) samples;
+      3. refit the effective (a, b) from the observations
+         (:func:`effective_model`), damped against the previous estimate;
+      4. replan incrementally (:meth:`Planner.replan`) and repeat until the
+         plan stops changing or ``max_rounds`` is hit.
+
+    Returns the *best observed* plan across rounds.  The candidate set
+    always contains the exclusive-link DP plan (round 0) plus any
+    ``seed_plans`` (callers pass the static baselines they must not
+    regress below — e.g. the exclusive-link Algorithm-1 plan), so the
+    result never loses to them on the evaluated environment.  ``damping``
+    is the weight of the new fit against the previous effective model; 0.5
+    suppresses the two-cycle oscillation a full-step update can fall into.
+    """
+    from repro.core.simulator import simulate   # local import: no cycle
+
+    if not 0.0 < damping <= 1.0:
+        raise ValueError(f"damping must be in (0, 1], got {damping}")
+    if max_rounds < 1:
+        raise ValueError("need >= 1 round")
+    planner = Planner(specs, model)
+    plan = planner.plan()
+    eff = model
+    rounds: list[FixpointRound] = []
+    best_round = 0
+    # evaluations are deterministic in the plan, so never pay for the same
+    # plan twice (a seed plan often IS the round-0 plan)
+    cache: dict[tuple, tuple] = {}
+
+    def observe(p: MergePlan) -> tuple:
+        if p.buckets not in cache:
+            cache[p.buckets] = evaluate(p)
+        return cache[p.buckets]
+
+    def push(round_: FixpointRound) -> None:
+        nonlocal best_round
+        rounds.append(round_)
+        if round_.observed_t < rounds[best_round].observed_t:
+            best_round = len(rounds) - 1
+
+    for sp in seed_plans:               # static baselines: evaluate only
+        observed, _ = observe(sp)
+        push(FixpointRound(sp, eff, observed,
+                           simulate(specs, sp, eff, t_f).t_iter,
+                           planned_under=eff))
+    seen: set[tuple] = {plan.buckets}
+    converged = False
+    for _ in range(max_rounds):
+        planned_under = eff
+        observed, samples = observe(plan)
+        fitted = effective_model(samples, eff)
+        eff = cost_model.blend(eff, fitted, damping)
+        predicted = simulate(specs, plan, eff, t_f).t_iter
+        push(FixpointRound(plan, eff, observed, predicted,
+                           planned_under=planned_under))
+        new_plan = planner.replan(eff)
+        if new_plan.buckets == plan.buckets:
+            converged = True
+            break
+        if new_plan.buckets in seen:
+            # exact revisit: the deterministic loop can only cycle from
+            # here — stop and keep the best observed plan.
+            converged = True
+            break
+        seen.add(new_plan.buckets)
+        plan = new_plan
+    best = rounds[best_round]
+    return FixpointResult(plan=best.plan, model=best.model,
+                          rounds=tuple(rounds), converged=converged,
+                          best_round=best_round)
+
+
 def plan_brute_force(specs: Sequence[TensorSpec], model: AllReduceModel) -> MergePlan:
     """Exhaustive search over all 2^(L-1) contiguous partitions (tests only)."""
     from repro.core.simulator import simulate  # local import to avoid cycle
@@ -277,7 +680,8 @@ def make_plan(strategy: str, specs: Sequence[TensorSpec],
               model: AllReduceModel | None = None) -> MergePlan:
     """Build a plan from a strategy string.
 
-    ``wfbp`` | ``single`` | ``mgwfbp`` | ``dp_optimal`` | ``fixed:<bytes>``.
+    ``wfbp`` | ``single`` | ``mgwfbp`` | ``dp_optimal`` | ``dp_incremental``
+    | ``fixed:<bytes>``.
     """
     if strategy == "wfbp":
         return plan_wfbp(specs)
@@ -291,6 +695,8 @@ def make_plan(strategy: str, specs: Sequence[TensorSpec],
         return plan_mgwfbp(specs, model)
     if strategy == "dp_optimal":
         return plan_dp_optimal(specs, model)
+    if strategy == "dp_incremental":
+        return plan_incremental(specs, model)
     raise ValueError(f"unknown merge strategy {strategy!r}")
 
 

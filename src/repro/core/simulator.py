@@ -21,6 +21,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
+import numpy as np
+
 from repro.core.cost_model import AllReduceModel
 from repro.core.planner import MergePlan, TensorSpec
 
@@ -86,6 +88,28 @@ def simulate(specs: Sequence[TensorSpec], plan: MergePlan,
         t_c_no=comm_end - t_b_total,
         events=tuple(events),
     )
+
+
+def batched_comm_end(bucket_t: np.ndarray, ready: np.ndarray,
+                     bwd_end: np.ndarray | float = 0.0) -> np.ndarray:
+    """Vectorized Eq. 7/8 recurrence over arbitrary leading grid axes.
+
+    ``ready[..., k]`` is when bucket k's last gradient is produced (relative
+    to iteration start) and ``bucket_t[..., k]`` its all-reduce duration;
+    both broadcast over the leading axes (scenario grid: worker counts ×
+    jitter seeds × bandwidth levels).  Returns the iteration end —
+    ``max(last comm end, bwd_end)`` — per grid point.  This is the batched
+    fast path behind ``repro.sim.sweep``: one numpy pass per *bucket*
+    instead of one event loop per *scenario*, exact on the closed form's
+    domain (sequential comm, no link contention).
+    """
+    bucket_t, ready = np.broadcast_arrays(
+        np.asarray(bucket_t, dtype=np.float64),
+        np.asarray(ready, dtype=np.float64))
+    end = np.zeros(bucket_t.shape[:-1], dtype=np.float64)
+    for k in range(bucket_t.shape[-1]):
+        end = np.maximum(end, ready[..., k]) + bucket_t[..., k]
+    return np.maximum(end, np.asarray(bwd_end, dtype=np.float64))
 
 
 def cross_validate(specs: Sequence[TensorSpec], plan: MergePlan,

@@ -25,9 +25,19 @@ from repro.sim.network import (
     HierarchicalTopology,
     Phase,
     Topology,
+    invert_double_binary_trees,
+    invert_halving_doubling,
+    invert_model,
     invert_ring,
+    predicted_model,
     predicted_ring,
     topology_for_cluster,
+)
+from repro.sim.sweep import (
+    SweepGrid,
+    SweepResult,
+    closed_form_valid,
+    run_sweep,
 )
 from repro.sim.trace import (
     Span,
@@ -50,7 +60,10 @@ __all__ = [
     "IterationResult", "JobResult", "JobSpec", "Link",
     "event_driven_t_iter",
     "Burst", "FlatTopology", "HierarchicalTopology", "Phase", "Topology",
-    "invert_ring", "predicted_ring", "topology_for_cluster",
+    "invert_double_binary_trees", "invert_halving_doubling", "invert_model",
+    "invert_ring", "predicted_model", "predicted_ring",
+    "topology_for_cluster",
+    "SweepGrid", "SweepResult", "closed_form_valid", "run_sweep",
     "Span", "from_chrome_trace", "read_chrome_trace", "refit_model",
     "replan_from_samples", "specs_from_json", "specs_from_rows",
     "specs_to_json", "synthetic_specs", "to_chrome_trace",

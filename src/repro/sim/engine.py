@@ -24,6 +24,7 @@ says about the scenarios the closed form cannot express.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, Mapping, Sequence
 
 import numpy as np
@@ -68,38 +69,50 @@ class Engine:
 
 @dataclasses.dataclass
 class _Flow:
-    remaining: float          # seconds of transfer at full link rate
-    on_done: Callable[[], None]
+    target: float             # cumulative link service at which flow drains
+    seq: int                  # deterministic tie-break (insertion order)
+    on_done: Callable[[], None] = dataclasses.field(compare=False)
+
+    def __lt__(self, other: "_Flow") -> bool:
+        return (self.target, self.seq) < (other.target, other.seq)
 
 
 class Link:
     """Shared link with egalitarian processor sharing.
 
     Each active flow drains at ``1/claimants`` of full rate, where
-    claimants = live flows + background flows (bursty neighbours).  On any
-    membership change the remaining work is advanced and the next
-    completion re-scheduled; stale completions are invalidated by a
-    generation counter.
+    claimants = live flows + background flows (bursty neighbours).  Because
+    every flow drains at the *same* rate, per-flow residuals never reorder —
+    so instead of rescanning all flows on each membership change (the old
+    O(flows) ``_advance``/``_reschedule`` hot loop), the link keeps one
+    cumulative *service* clock ``S(t) = ∫ dt / claimants(t)`` and each flow
+    a fixed completion target ``S_admit + volume``.  Advancing time is O(1),
+    the next completion is a heap peek, and a membership change costs
+    O(log flows) — stale completion events are invalidated by a generation
+    counter exactly as before.
     """
 
     def __init__(self, engine: Engine, name: str):
         self.engine = engine
         self.name = name
-        self.flows: list[_Flow] = []
+        self._heap: list[_Flow] = []
         self.background = 0
+        self._service = 0.0       # cumulative per-flow service received
         self._last = 0.0
         self._gen = 0
+        self._seq = 0
+
+    @property
+    def n_flows(self) -> int:
+        return len(self._heap)
 
     def _claimants(self) -> int:
-        return len(self.flows) + self.background
+        return len(self._heap) + self.background
 
     def _advance(self) -> None:
         now = self.engine.now
-        if self.flows and now > self._last:
-            rate = 1.0 / self._claimants()
-            dt = now - self._last
-            for f in self.flows:
-                f.remaining -= dt * rate
+        if self._heap and now > self._last:
+            self._service += (now - self._last) / self._claimants()
         self._last = now
 
     def add_flow(self, volume: float, on_done: Callable[[], None]) -> None:
@@ -107,7 +120,9 @@ class Link:
             on_done()
             return
         self._advance()
-        self.flows.append(_Flow(volume, on_done))
+        heapq.heappush(self._heap,
+                       _Flow(self._service + volume, self._seq, on_done))
+        self._seq += 1
         self._reschedule()
 
     def add_background(self, count: int = 1) -> None:
@@ -122,10 +137,10 @@ class Link:
 
     def _reschedule(self) -> None:
         self._gen += 1
-        if not self.flows:
+        if not self._heap:
             return
         gen = self._gen
-        t_next = min(f.remaining for f in self.flows) * self._claimants()
+        t_next = (self._heap[0].target - self._service) * self._claimants()
         self.engine.after(max(t_next, 0.0), lambda: self._complete(gen))
 
     def _complete(self, gen: int) -> None:
@@ -134,15 +149,16 @@ class Link:
         self._advance()
         now = self.engine.now
         c = max(self._claimants(), 1)
-
-        def finished(f: _Flow) -> bool:
+        done: list[_Flow] = []
+        while self._heap:
+            remaining = self._heap[0].target - self._service
             # absolute epsilon, plus: a remainder too small for `now + dt`
             # to advance the clock can never drain — count it done (the
             # error is below one float ulp of the current timestamp).
-            return f.remaining <= _EPS or now + f.remaining * c <= now
-
-        done = [f for f in self.flows if finished(f)]
-        self.flows = [f for f in self.flows if not finished(f)]
+            if remaining <= _EPS or now + remaining * c <= now:
+                done.append(heapq.heappop(self._heap))
+            else:
+                break
         self._reschedule()
         for f in done:
             f.on_done()
@@ -172,6 +188,9 @@ class IterationResult:
     end: float
     backward_end: float                     # max over workers
     buckets: tuple[BucketTiming, ...]
+    # per-worker compute (forward+backward) seconds this iteration — the
+    # per-host step times a StragglerMonitor consumes (name, seconds)
+    worker_compute: tuple[tuple[str, float], ...] = ()
 
     @property
     def t_iter(self) -> float:
@@ -249,6 +268,7 @@ class _JobRun:
         self._done_buckets: list[BucketTiming] = []
         self._bwd_end = 0.0
         self._iter_start = 0.0
+        self._worker_compute: tuple[tuple[str, float], ...] = ()
 
     # -- iteration lifecycle --------------------------------------------
 
@@ -270,6 +290,9 @@ class _JobRun:
         fwd_end = T + spec.t_f * scales
         bwd_end = fwd_end + (prefix[-1] if len(prefix) else 0.0) * scales
         self._bwd_end = float(bwd_end.max())
+        self._worker_compute = tuple(
+            (w.name, float(bwd_end[wi] - T))
+            for wi, w in enumerate(self.workers))
 
         for wi, w in enumerate(self.workers):
             self.sim.record(Span(
@@ -369,7 +392,7 @@ class _JobRun:
         self.result.iterations.append(IterationResult(
             index=self.it, start=self._iter_start,
             end=self.sim.engine.now, backward_end=self._bwd_end,
-            buckets=buckets))
+            buckets=buckets, worker_compute=self._worker_compute))
         hook = self.spec.hooks.get(self.it)
         if hook is not None:
             hook(self.sim, self, self.it)

@@ -19,6 +19,7 @@ identity.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Sequence
 
 from repro.core import cost_model
@@ -179,11 +180,68 @@ def invert_ring(a: float, b: float, n: int,
     return alpha, beta
 
 
+def invert_double_binary_trees(a: float, b: float, n: int,
+                               gamma_ratio: float = 0.0
+                               ) -> tuple[float, float]:
+    """Invert the Table-2 double-binary-trees model (NCCL >= 2.4 default).
+
+    a = 2*alpha*log2(N), b = beta + gamma, gamma = gamma_ratio * beta.
+    """
+    if n < 2:
+        raise ValueError("double-binary-trees inversion needs N >= 2")
+    alpha = a / (2 * math.log2(n))
+    beta = b / (1.0 + gamma_ratio)
+    return alpha, beta
+
+
+def invert_halving_doubling(a: float, b: float, n: int,
+                            gamma_ratio: float = 0.0) -> tuple[float, float]:
+    """Invert the Table-2 recursive-halving-doubling model.
+
+    a = 2*alpha*log2(N); b = 2*beta - (2*beta + gamma)/N + gamma collapses,
+    with gamma = gamma_ratio * beta, to beta * (2 + r) * (N-1)/N.
+    """
+    if n < 2:
+        raise ValueError("halving-doubling inversion needs N >= 2")
+    alpha = a / (2 * math.log2(n))
+    beta = b * n / ((2.0 + gamma_ratio) * (n - 1))
+    return alpha, beta
+
+
+INVERSIONS = {
+    "ring": invert_ring,
+    "double_binary_trees": invert_double_binary_trees,
+    "recursive_halving_doubling": invert_halving_doubling,
+}
+
+
+def invert_model(algorithm: str, a: float, b: float, n: int,
+                 gamma_ratio: float = 0.0) -> tuple[float, float]:
+    """Recover (alpha, beta) from a fitted (a, b) for any invertible
+    collective algorithm (the online-refit leg of the elastic loop)."""
+    try:
+        fn = INVERSIONS[algorithm]
+    except KeyError:
+        raise ValueError(
+            f"no (a, b) inversion for algorithm {algorithm!r}; "
+            f"choose from {sorted(INVERSIONS)}") from None
+    return fn(a, b, n, gamma_ratio)
+
+
+def predicted_model(algorithm: str, a: float, b: float, n_old: int,
+                    n_new: int,
+                    gamma_ratio: float = 0.0) -> cost_model.AllReduceModel:
+    """Project a fitted (a, b) from N_old membership to N_new by inverting
+    to point-to-point constants and re-applying the Table-2 formula."""
+    alpha, beta = invert_model(algorithm, a, b, n_old, gamma_ratio)
+    return cost_model.make_model(algorithm, n_new, alpha, beta,
+                                 gamma_ratio * beta)
+
+
 def predicted_ring(a: float, b: float, n_old: int, n_new: int,
                    gamma_ratio: float = 0.0) -> cost_model.AllReduceModel:
     """Project a fitted ring model from N_old membership to N_new."""
-    alpha, beta = invert_ring(a, b, n_old, gamma_ratio)
-    return cost_model.ring(n_new, alpha, beta, gamma_ratio * beta)
+    return predicted_model("ring", a, b, n_old, n_new, gamma_ratio)
 
 
 def topology_for_cluster(name: str, n_workers: int) -> Topology:

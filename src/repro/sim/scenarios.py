@@ -6,11 +6,19 @@ Each builder assembles a ready-to-run :class:`ClusterSim`:
   Table-2 collective over the paper's fitted cluster constants);
 * ``straggler``        — one (or more) persistently slow workers, the
   sweep the closed form cannot express;
+* ``straggler_eviction`` — the mitigation loop: a ``StragglerMonitor``
+  watches per-worker step times and the scenario hook evicts flagged
+  workers mid-run (membership change -> topology rescale -> replan);
 * ``elastic_resize``   — mid-run membership change with ONLINE (a, b)
-  refit from observed bucket timings -> ``planner.replan`` (the loop from
-  ``examples/elastic_replan.py``, now closed inside the simulator);
+  refit from observed bucket timings -> replan (the loop from
+  ``examples/elastic_replan.py``, now closed inside the simulator; any
+  invertible collective algorithm, optionally contention-aware);
 * ``bursty``           — background traffic bursts contending on the link;
-* ``two_jobs``         — two training jobs sharing one network.
+* ``two_jobs``         — two training jobs sharing one network;
+* ``contended_two_jobs_plan`` — the contention-aware planning fixpoint
+  (``planner.plan_contention_aware``) evaluated against the two-job
+  scenario: plan under the exclusive-link model, simulate with contention,
+  refit the effective (a, b) from the observed stretch, replan.
 
 Builders take ``(specs, t_f)`` so callers choose the profile source
 (``benchmarks/paper_profiles.py``, ``core/profiler.py`` measurements, or
@@ -24,7 +32,7 @@ import dataclasses
 from typing import Callable, Sequence
 
 from repro.core import cost_model, planner
-from repro.core.planner import MergePlan, TensorSpec
+from repro.core.planner import MergePlan, Planner, TensorSpec
 from repro.sim import network, trace
 from repro.sim.engine import ClusterSim, JobSpec
 from repro.sim.network import Burst, FlatTopology, HierarchicalTopology
@@ -36,6 +44,22 @@ from repro.sim.workers import make_workers
 PAPER_ALPHA = 9.72e-4 / 14
 PAPER_BETA = 1.97e-9 / (2 * 7 / 8)
 PAPER_GAMMA = PAPER_BETA / 10
+
+
+def _strategy_planner(strategy: str, specs: Sequence[TensorSpec],
+                      model: cost_model.AllReduceModel):
+    """(initial plan, replan(model) -> plan, Planner | None).
+
+    The in-loop scenarios (elastic resize, straggler eviction) replan on
+    every membership change; ``dp_incremental`` shares one
+    :class:`Planner` across those replans so each is a DP-frontier reuse,
+    while the reference strategies go through ``make_plan`` from scratch.
+    """
+    if strategy == "dp_incremental":
+        inc = Planner(specs, model)
+        return inc.plan(), inc.replan, inc
+    return (planner.make_plan(strategy, specs, model),
+            lambda m: planner.replan(strategy, specs, m), None)
 
 
 def paper_scaling(specs: Sequence[TensorSpec], t_f: float, n_workers: int,
@@ -87,54 +111,91 @@ class ElasticReport:
     fitted: cost_model.AllReduceModel | None = None
     predicted: cost_model.AllReduceModel | None = None
     used_fallback: bool = False
+    fixpoint: "planner.FixpointResult | None" = None
+    planner_scratch: int = 0            # incremental-planner counters
+    planner_incremental: int = 0
 
 
 def elastic_resize(specs: Sequence[TensorSpec], t_f: float, *,
                    n_before: int = 8, n_after: int = 32,
                    resize_at: int = 1, iters: int = 4,
-                   strategy: str = "mgwfbp", alpha: float = PAPER_ALPHA,
+                   strategy: str = "mgwfbp", algorithm: str = "ring",
+                   alpha: float = PAPER_ALPHA,
                    beta: float = PAPER_BETA, gamma: float = PAPER_GAMMA,
                    compute_mode: str = "analytic", seed: int = 0,
+                   contention_aware: bool = False,
+                   bursts: Sequence[Burst] = (),
                    ) -> tuple[ClusterSim, ElasticReport]:
     """Mid-run resize N_before -> N_after with online refit + replan.
 
     After iteration ``resize_at`` the hook (1) least-squares-fits (a, b)
     from the bucket timings observed so far (trace.refit_model), (2)
-    inverts the ring formulas to point-to-point (alpha, beta) and predicts
-    the post-resize model (network.predicted_ring), (3) reruns the planner
-    for the new model, and (4) swaps workers/topology/plan.  Ring only —
-    the inversion is algorithm-specific.
+    inverts the collective's Table-2 formulas to point-to-point
+    (alpha, beta) and predicts the post-resize model
+    (network.predicted_model — ring, double binary trees, or
+    halving-doubling), (3) replans for the new model, and (4) swaps
+    workers/topology/plan.  With ``strategy="dp_incremental"`` the replan
+    reuses the planner's DP frontier instead of starting from scratch.
+
+    With ``contention_aware=True`` the hook goes one step further and runs
+    the plan->simulate->refit fixpoint (planner.plan_contention_aware)
+    against a post-resize probe simulation that includes ``bursts`` — so
+    the plan the job resumes with is fitted to the *contended* fabric, not
+    the exclusive-link model.
     """
-    topo = FlatTopology("ring", n_before, alpha, beta, gamma)
-    plan = planner.make_plan(strategy, specs, topo.linear_model())
+    topo = FlatTopology(algorithm, n_before, alpha, beta, gamma)
+    plan, replan, inc = _strategy_planner(strategy, specs,
+                                          topo.linear_model())
     report = ElasticReport(plan_before=plan)
+
+    def probe(candidate: MergePlan):
+        """Evaluate a candidate plan on the post-resize contended fabric."""
+        job = JobSpec(name="probe", specs=list(specs), plan=candidate,
+                      t_f=t_f, workers=make_workers(n_after),
+                      topology=topo.rescale(n_after), iters=1,
+                      compute_mode=compute_mode)
+        res = ClusterSim([job], seed=seed, bursts=list(bursts)).run()
+        jr = res.job("probe")
+        return jr.iterations[-1].t_iter, jr.bucket_samples
 
     def hook(sim: ClusterSim, run, it: int) -> None:
         samples = run.result.bucket_samples
+        gamma_ratio = gamma / beta if beta else 0.0
         try:
             fitted = trace.refit_model(samples)
-            predicted = network.predicted_ring(
-                fitted.a, fitted.b, n_before, n_after,
-                gamma_ratio=gamma / beta if beta else 0.0)
+            predicted = network.predicted_model(
+                algorithm, fitted.a, fitted.b, n_before, n_after,
+                gamma_ratio=gamma_ratio)
         except ValueError:
             # degenerate observation (e.g. plan merged to one bucket) —
             # fall back to the topology's own rescaled model
             fitted = None
             predicted = topo.rescale(n_after).linear_model()
             report.used_fallback = True
-        new_plan = planner.replan(strategy, specs, predicted)
+        if contention_aware:
+            fix = planner.plan_contention_aware(specs, predicted, probe,
+                                                t_f=t_f)
+            report.fixpoint = fix
+            new_plan, predicted = fix.plan, fix.model
+            if inc is not None:     # keep the shared planner's model fresh
+                replan(fix.model)
+        else:
+            new_plan = replan(predicted)
         run.workers = make_workers(n_after)
         run.topology = run.topology.rescale(n_after)
         run.plan = new_plan
         sim.ensure_links(run.topology)
         report.fitted, report.predicted = fitted, predicted
         report.plan_after = new_plan
+        if inc is not None:
+            report.planner_scratch = inc.scratch_plans
+            report.planner_incremental = inc.incremental_updates
 
     job = JobSpec(name="train", specs=list(specs), plan=plan, t_f=t_f,
                   workers=make_workers(n_before), topology=topo,
                   iters=iters, compute_mode=compute_mode,
                   hooks={resize_at: hook})
-    return ClusterSim([job], seed=seed), report
+    return ClusterSim([job], seed=seed, bursts=list(bursts)), report
 
 
 def bursty(specs: Sequence[TensorSpec], t_f: float, n_workers: int = 16,
@@ -168,21 +229,141 @@ def two_jobs(specs_a: Sequence[TensorSpec], t_f_a: float,
              strategy: str = "mgwfbp", algorithm: str = "ring",
              alpha: float = PAPER_ALPHA, beta: float = PAPER_BETA,
              gamma: float = PAPER_GAMMA, iters: int = 2,
-             compute_mode: str = "analytic", seed: int = 0) -> ClusterSim:
+             compute_mode: str = "analytic", seed: int = 0,
+             plan_a: MergePlan | None = None,
+             plan_b: MergePlan | None = None) -> ClusterSim:
     """Two independent jobs time-sharing one network — their all-reduces
-    contend via processor sharing on the common link."""
+    contend via processor sharing on the common link.  Pass ``plan_a`` /
+    ``plan_b`` to pin a job's merge plan (the contention-aware fixpoint
+    evaluates candidate plans this way); otherwise both jobs plan with
+    ``strategy`` under the exclusive-link model."""
     topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
     model = topo.linear_model()
     jobs = []
-    for name, specs, t_f, start in (("job_a", specs_a, t_f_a, 0.0),
-                                    ("job_b", specs_b, t_f_b, stagger)):
-        plan = planner.make_plan(strategy, specs, model)
+    for name, specs, t_f, start, plan in (
+            ("job_a", specs_a, t_f_a, 0.0, plan_a),
+            ("job_b", specs_b, t_f_b, stagger, plan_b)):
+        if plan is None:
+            plan = planner.make_plan(strategy, specs, model)
         jobs.append(JobSpec(name=name, specs=list(specs), plan=plan,
                             t_f=t_f, workers=make_workers(n_workers,
                                                           prefix=name + ".w"),
                             topology=topo, iters=iters, start_time=start,
                             compute_mode=compute_mode))
     return ClusterSim(jobs, seed=seed)
+
+
+def contended_two_jobs_plan(specs_a: Sequence[TensorSpec], t_f_a: float,
+                            specs_b: Sequence[TensorSpec], t_f_b: float, *,
+                            n_workers: int = 8, stagger: float = 0.0,
+                            baseline_strategy: str = "mgwfbp",
+                            algorithm: str = "ring",
+                            alpha: float = PAPER_ALPHA,
+                            beta: float = PAPER_BETA,
+                            gamma: float = PAPER_GAMMA, iters: int = 2,
+                            compute_mode: str = "analytic", seed: int = 0,
+                            max_rounds: int = 5, damping: float = 0.5,
+                            ) -> "planner.FixpointResult":
+    """Contention-aware plan for job_a sharing the fabric with job_b.
+
+    The neighbour job_b keeps its exclusive-link ``baseline_strategy`` plan
+    (you control your own job, not the neighbour's); job_a's plan iterates
+    through ``planner.plan_contention_aware`` with the two-job engine
+    scenario as the evaluation environment.  The fixpoint's objective is
+    job_a's mean iteration time; observed per-bucket (bytes, duration)
+    samples — which embed the processor-sharing stretch — drive the
+    effective (a, b) refit.
+    """
+    model = cost_model.make_model(algorithm, n_workers, alpha, beta, gamma)
+    plan_b = planner.make_plan(baseline_strategy, specs_b, model)
+
+    def evaluate(candidate: MergePlan):
+        sim = two_jobs(specs_a, t_f_a, specs_b, t_f_b,
+                       n_workers=n_workers, stagger=stagger,
+                       algorithm=algorithm, alpha=alpha, beta=beta,
+                       gamma=gamma, iters=iters, compute_mode=compute_mode,
+                       seed=seed, plan_a=candidate, plan_b=plan_b)
+        job = sim.run().job("job_a")
+        return sum(job.t_iters) / len(job.t_iters), job.bucket_samples
+
+    # the exclusive-link baseline plan rides along as a seed candidate, so
+    # the contention-aware result can never lose to the static planner on
+    # this scenario — the fixpoint only has to find something better.
+    return planner.plan_contention_aware(
+        specs_a, model, evaluate, t_f=t_f_a, max_rounds=max_rounds,
+        damping=damping,
+        seed_plans=(planner.make_plan(baseline_strategy, specs_a, model),))
+
+
+@dataclasses.dataclass
+class EvictionReport:
+    """What the straggler-mitigation loop did (filled in by the hooks)."""
+
+    monitor: object                     # train.fault.StragglerMonitor
+    evictions: list[tuple[int, tuple[str, ...]]] = \
+        dataclasses.field(default_factory=list)
+    plans: list[MergePlan] = dataclasses.field(default_factory=list)
+
+    @property
+    def evicted_workers(self) -> list[str]:
+        return [w for _, names in self.evictions for w in names]
+
+
+def straggler_eviction(specs: Sequence[TensorSpec], t_f: float,
+                       n_workers: int = 8, *, slow_factor: float = 3.0,
+                       slow_workers: int = 1, jitter_sigma: float = 0.0,
+                       threshold: float = 1.5, warmup: int = 2,
+                       min_workers: int = 2, iters: int = 6,
+                       strategy: str = "dp_incremental",
+                       algorithm: str = "ring",
+                       alpha: float = PAPER_ALPHA, beta: float = PAPER_BETA,
+                       gamma: float = PAPER_GAMMA,
+                       compute_mode: str = "analytic", seed: int = 0,
+                       ) -> tuple[ClusterSim, EvictionReport]:
+    """Straggler mitigation in the loop: monitor -> evict -> replan.
+
+    ``train.fault.StragglerMonitor`` consumes the engine's per-worker
+    compute times after every iteration; once a host's EWMA exceeds the
+    fleet median by ``threshold`` (and ``warmup`` samples have arrived),
+    the hook evicts it through the engine's membership-change machinery —
+    shrink the worker set, rescale the topology, and replan for the new
+    (a, b).  Synchronous SGD's step time is a max over workers, so evicting
+    a 3x straggler immediately recovers the fleet's pace (the sim twin of
+    what ``fault.StragglerMonitor`` + the launcher do in production).
+    """
+    from repro.train.fault import StragglerMonitor  # lazy: keeps sim light
+
+    topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
+    plan, replan, _ = _strategy_planner(strategy, specs,
+                                        topo.linear_model())
+    monitor = StragglerMonitor(threshold=threshold, warmup=warmup)
+    report = EvictionReport(monitor=monitor, plans=[plan])
+    slow = {i: slow_factor for i in range(min(slow_workers, n_workers))}
+
+    def hook(sim: ClusterSim, run, it: int) -> None:
+        for name, seconds in run.result.iterations[-1].worker_compute:
+            monitor.record(name, seconds)
+        alive = {w.name for w in run.workers}
+        flagged = [h for h in monitor.stragglers() if h in alive]
+        if not flagged or len(run.workers) - len(flagged) < min_workers:
+            return
+        keep = [w for w in run.workers if w.name not in flagged]
+        for name in flagged:            # forget the evicted hosts' stats
+            monitor.ewma.pop(name, None)
+            monitor.counts.pop(name, None)
+        run.workers = keep
+        run.topology = run.topology.rescale(len(keep))
+        run.plan = replan(run.topology.linear_model())
+        sim.ensure_links(run.topology)
+        report.evictions.append((it, tuple(flagged)))
+        report.plans.append(run.plan)
+
+    job = JobSpec(name="train", specs=list(specs), plan=plan, t_f=t_f,
+                  workers=make_workers(n_workers, slow=slow,
+                                       jitter_sigma=jitter_sigma),
+                  topology=topo, iters=iters, compute_mode=compute_mode,
+                  hooks={i: hook for i in range(iters)})
+    return ClusterSim([job], seed=seed), report
 
 
 def hierarchical_pods(specs: Sequence[TensorSpec], t_f: float, *,
@@ -212,9 +393,17 @@ CATALOG: dict[str, Callable[[], ClusterSim]] = {
     "paper_dbt_64": lambda: paper_scaling(*_syn(), 64,
                                           algorithm="double_binary_trees"),
     "straggler_2x": lambda: straggler(*_syn(), 16, slow_factor=2.0),
+    "straggler_evict": lambda: straggler_eviction(*_syn(), 8,
+                                                  slow_factor=3.0)[0],
     "jittery": lambda: straggler(*_syn(), 16, slow_factor=1.0,
                                  jitter_sigma=0.2, iters=4),
     "elastic_8_to_32": lambda: elastic_resize(*_syn())[0],
+    "elastic_dbt": lambda: elastic_resize(
+        *_syn(), algorithm="double_binary_trees",
+        strategy="dp_incremental")[0],
+    "elastic_contended": lambda: elastic_resize(
+        *_syn(), contention_aware=True,
+        bursts=(Burst("net", 0.0, 60.0, flows=2),))[0],
     "bursty": lambda: bursty(*_syn()),
     "two_jobs": lambda: two_jobs(*_syn(), *trace.synthetic_specs(32, seed=9)),
     "pods_2x16": lambda: hierarchical_pods(*_syn()),

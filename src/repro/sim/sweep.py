@@ -1,0 +1,184 @@
+"""Batched scenario sweeps: closed form where valid, engine where not.
+
+The 4→2048-worker studies (``benchmarks/scaling_sim.py`` /
+``benchmarks/cluster_sim.py``) and the elastic replan loop both need many
+(worker count × jitter seed × bandwidth level) evaluations of the same
+profile.  Driving the event engine for each point is overkill: on every
+scenario a single job owns the link and issues collectives in order, the
+engine provably reproduces the closed form (``core/simulator``
+cross-validation), so the whole grid collapses to one vectorized
+per-bucket recurrence (``core.simulator.batched_comm_end``) — including
+heterogeneous/jittery workers, because with one compute scale per worker
+per iteration the synchronous ready time is just the nominal ready time
+times the fleet's max scale.
+
+The closed form is *invalid* — and this module falls back to the event
+engine, per point — exactly when collectives can contend for link
+bandwidth: background ``Burst`` traffic, ``comm_mode="concurrent"``, or
+multiple jobs (multi-job sweeps should drive ``ClusterSim`` directly).
+``SweepResult.used_engine`` records which path produced each point.
+
+Planning across the grid goes through ONE incremental
+:class:`repro.core.planner.Planner` — each (N, bandwidth) point is a
+cost-model delta, not a from-scratch O(L^2) replan; the planner's counters
+are surfaced on the result so benchmarks can assert the fast path was
+actually taken.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core import planner
+from repro.core.planner import MergePlan, Planner, TensorSpec
+from repro.core.simulator import batched_comm_end
+from repro.sim.engine import ClusterSim, JobSpec
+from repro.sim.network import Burst, FlatTopology
+from repro.sim.workers import make_workers
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGrid:
+    """The cartesian scenario grid a sweep evaluates."""
+
+    n_workers: tuple[int, ...]
+    bandwidth_scales: tuple[float, ...] = (1.0,)   # link speed multipliers
+    seeds: tuple[int, ...] = (0,)                  # jitter seeds
+
+    def __post_init__(self):
+        if not self.n_workers or not self.bandwidth_scales or not self.seeds:
+            raise ValueError(f"empty sweep axis: {self}")
+        if any(n < 1 for n in self.n_workers):
+            raise ValueError(f"need >= 1 worker: {self.n_workers}")
+        if any(s <= 0 for s in self.bandwidth_scales):
+            raise ValueError(
+                f"bandwidth scales must be positive: {self.bandwidth_scales}")
+
+    @property
+    def shape(self) -> tuple[int, int, int]:
+        return (len(self.n_workers), len(self.bandwidth_scales),
+                len(self.seeds))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """``t_iter[n_idx, bw_idx, seed_idx, iter]`` plus provenance."""
+
+    grid: SweepGrid
+    iters: int
+    t_iter: np.ndarray                  # seconds, shape grid.shape + (iters,)
+    used_engine: np.ndarray             # bool, shape (len(n), len(bw))
+    plans: dict[tuple[int, float], MergePlan]   # (n, bw_scale) -> plan
+    planner_scratch: int                # Planner state rebuilds (1 == ideal)
+    planner_incremental: int            # incremental replans taken
+
+    def point(self, n: int, bandwidth_scale: float = 1.0,
+              seed: int = 0) -> np.ndarray:
+        """Per-iteration times for one grid point."""
+        return self.t_iter[self.grid.n_workers.index(n),
+                           self.grid.bandwidth_scales.index(bandwidth_scale),
+                           self.grid.seeds.index(seed)]
+
+
+def closed_form_valid(*, comm_mode: str = "sequential",
+                      bursts: Sequence[Burst] = ()) -> bool:
+    """True iff no link contention is possible: a single job issuing
+    collectives in order with no background traffic.  Heterogeneity and
+    jitter do NOT invalidate the closed form (scales factor out of the
+    synchronous max); contention does."""
+    return comm_mode == "sequential" and not bursts
+
+
+def _max_scales(workers, seeds: Sequence[int], iters: int,
+                job: str) -> np.ndarray:
+    """Fleet-max compute scale per (seed, iteration) — the one number the
+    synchronous closed form needs from the whole worker population."""
+    out = np.empty((len(seeds), iters), dtype=np.float64)
+    for si, seed in enumerate(seeds):
+        for it in range(iters):
+            out[si, it] = max(w.scale(seed, job, wi, it)
+                              for wi, w in enumerate(workers))
+    return out
+
+
+def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
+              algorithm: str = "ring", strategy: str = "dp_incremental",
+              alpha: float, beta: float, gamma: float = 0.0,
+              iters: int = 1, jitter_sigma: float = 0.0,
+              slow: Mapping[int, float] | None = None,
+              bursts: Sequence[Burst] = (),
+              comm_mode: str = "sequential",
+              force_engine: bool = False,
+              job_name: str = "train") -> SweepResult:
+    """Evaluate one profile over a scenario grid.
+
+    ``bandwidth_scales`` multiply link speed (scale 2.0 = twice the
+    bandwidth, i.e. half the per-byte cost); startup latency ``alpha`` and
+    reduction ``gamma`` are unaffected.  Each (N, bandwidth) point gets its
+    own merge plan; with the default ``dp_incremental`` strategy all points
+    share one :class:`Planner` and replan incrementally.
+    """
+    if iters < 1:
+        raise ValueError("need >= 1 iteration")
+    slow = dict(slow or {})
+    fast = closed_form_valid(comm_mode=comm_mode, bursts=bursts) \
+        and not force_engine
+
+    L = len(specs)
+    prefix_t = np.cumsum([s.t_b for s in specs]) if L else np.zeros(0)
+    t_b_total = float(prefix_t[-1]) if L else 0.0
+
+    shared: Planner | None = None
+    t_iter = np.zeros(grid.shape + (iters,), dtype=np.float64)
+    used_engine = np.zeros(grid.shape[:2], dtype=bool)
+    plans: dict[tuple[int, float], MergePlan] = {}
+
+    for ni, n in enumerate(grid.n_workers):
+        workers = make_workers(
+            n, slow={i: f for i, f in slow.items() if 0 <= i < n},
+            jitter_sigma=jitter_sigma)
+        s_max = _max_scales(workers, grid.seeds, iters, job_name)
+        for bi, bw in enumerate(grid.bandwidth_scales):
+            topo = FlatTopology(algorithm, n, alpha, beta / bw, gamma)
+            model = topo.linear_model()
+            if strategy == "dp_incremental":
+                if shared is None:
+                    shared = Planner(specs, model)
+                    plan = shared.plan()
+                else:
+                    plan = shared.replan(model)
+            else:
+                plan = planner.make_plan(strategy, specs, model)
+            plans[(n, bw)] = plan
+
+            if fast:
+                bucket_t = np.array(
+                    [model.time(b) for b in plan.bucket_bytes(specs)],
+                    dtype=np.float64)
+                last = np.array([b[-1] for b in plan.buckets], dtype=int)
+                # ready[seed, iter, k] = s_max * (t_f + prefix_t[last_k])
+                nominal = t_f + (prefix_t[last] if L else np.zeros(0))
+                ready = s_max[..., None] * nominal[None, None, :]
+                bwd_end = s_max * (t_f + t_b_total)
+                t_iter[ni, bi] = batched_comm_end(
+                    bucket_t[None, None, :], ready, bwd_end)
+            else:
+                used_engine[ni, bi] = True
+                for si, seed in enumerate(grid.seeds):
+                    job = JobSpec(name=job_name, specs=list(specs),
+                                  plan=plan, t_f=t_f, workers=workers,
+                                  topology=topo, iters=iters,
+                                  comm_mode=comm_mode,
+                                  compute_mode="analytic")
+                    res = ClusterSim([job], seed=seed,
+                                     bursts=bursts).run()
+                    t_iter[ni, bi, si] = res.job(job_name).t_iters
+
+    return SweepResult(
+        grid=grid, iters=iters, t_iter=t_iter, used_engine=used_engine,
+        plans=plans,
+        planner_scratch=shared.scratch_plans if shared else 0,
+        planner_incremental=shared.incremental_updates if shared else 0)

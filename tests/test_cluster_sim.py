@@ -254,6 +254,52 @@ def test_ring_inversion_roundtrip():
     assert m32.b == pytest.approx(ref.b, rel=1e-12)
 
 
+@pytest.mark.parametrize("algorithm", ["ring", "double_binary_trees",
+                                       "recursive_halving_doubling"])
+@pytest.mark.parametrize("gamma_ratio", [0.0, 0.1])
+def test_inversion_roundtrip_all_algorithms(algorithm, gamma_ratio):
+    """Fit (a, b) at N=8, invert to (alpha, beta), re-predict N=64: must
+    reproduce the Table-2 model exactly for every invertible collective."""
+    from repro.core import cost_model
+    from repro.sim.network import invert_model, predicted_model
+    alpha, beta = 4e-5, 1.5e-9
+    gamma = gamma_ratio * beta
+    m8 = cost_model.make_model(algorithm, 8, alpha, beta, gamma)
+    a_hat, b_hat = invert_model(algorithm, m8.a, m8.b, 8, gamma_ratio)
+    assert a_hat == pytest.approx(alpha, rel=1e-12)
+    assert b_hat == pytest.approx(beta, rel=1e-12)
+    m64 = predicted_model(algorithm, m8.a, m8.b, 8, 64, gamma_ratio)
+    ref = cost_model.make_model(algorithm, 64, alpha, beta, gamma)
+    assert m64.a == pytest.approx(ref.a, rel=1e-12)
+    assert m64.b == pytest.approx(ref.b, rel=1e-12)
+
+
+def test_inversion_unknown_algorithm():
+    from repro.sim.network import invert_model
+    with pytest.raises(ValueError):
+        invert_model("binary_tree", 1e-3, 1e-9, 8)
+
+
+def test_elastic_resize_double_binary_trees():
+    """The online refit loop now closes for non-ring collectives too."""
+    specs, t_f = trace.synthetic_specs(24, seed=21)
+    sim, report = scenarios.elastic_resize(
+        specs, t_f, n_before=8, n_after=32, resize_at=1, iters=3,
+        algorithm="double_binary_trees", strategy="dp_incremental")
+    job = sim.run().job("train")
+    assert report.plan_after is not None
+    t_after = job.iterations[-1].t_iter
+    fresh = scenarios.paper_scaling(specs, t_f, 32,
+                                    algorithm="double_binary_trees",
+                                    strategy="dp_incremental") \
+        .run().job("train").t_iters[-1]
+    if not report.used_fallback:
+        assert t_after == pytest.approx(fresh, abs=1e-9)
+    # the replan went through the incremental planner, not from scratch
+    assert report.planner_scratch == 1
+    assert report.planner_incremental >= 1
+
+
 def test_elastic_resize_closes_replanning_loop():
     specs, t_f = trace.synthetic_specs(32, seed=13)
     n_after = 32
@@ -273,6 +319,117 @@ def test_elastic_resize_closes_replanning_loop():
         assert report.fitted is not None
         assert t_after == pytest.approx(fresh, abs=1e-9)
     assert job.iterations[2].t_iter == pytest.approx(t_after, abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation loop + contention-aware fixpoint.
+# ---------------------------------------------------------------------------
+
+def test_straggler_eviction_recovers_fleet():
+    """Monitor -> evict -> replan: after the flagged 3x host leaves, the
+    iteration time drops to (nearly) the homogeneous fleet's pace."""
+    specs, t_f = trace.synthetic_specs(20, seed=17)
+    sim, report = scenarios.straggler_eviction(specs, t_f, 8,
+                                               slow_factor=3.0, iters=6)
+    job = sim.run().job("train")
+    assert report.evictions, "straggler never evicted"
+    evict_at, names = report.evictions[0]
+    assert names == ("w0",)
+    assert "w0" not in report.monitor.ewma       # forgotten after eviction
+    before = job.iterations[evict_at].t_iter
+    after = job.iterations[-1].t_iter
+    assert after < before / 1.5
+    # remaining fleet is one short of the original, replanned for N-1
+    ref = scenarios.straggler(specs, t_f, 7, slow_factor=1.0,
+                              strategy="dp_incremental") \
+        .run().job("train").t_iters[-1]
+    assert after == pytest.approx(ref, abs=1e-9)
+
+
+def test_straggler_eviction_keeps_min_workers():
+    """With everyone slow, the monitor finds no outlier (median moves) and
+    nothing is evicted — the loop must not shrink a healthy fleet."""
+    specs, t_f = trace.synthetic_specs(12, seed=18)
+    sim, report = scenarios.straggler_eviction(
+        specs, t_f, 4, slow_factor=1.0, slow_workers=0, iters=4)
+    sim.run()
+    assert not report.evictions
+
+
+def test_fixpoint_uncontended_is_exact():
+    """No contention -> samples are exact a + b*M draws -> the refit
+    reproduces the model, the loop converges immediately, and the
+    closed-form prediction equals the engine observation."""
+    from repro.core.planner import plan_contention_aware
+    specs, t_f = trace.synthetic_specs(24, seed=19)
+    model = AllReduceModel(5e-4, 2e-9)
+
+    def evaluate(plan):
+        job = JobSpec(name="j", specs=list(specs), plan=plan, t_f=t_f,
+                      workers=make_workers(4), topology=Topology(model))
+        jr = ClusterSim([job]).run().job("j")
+        return jr.iterations[-1].t_iter, jr.bucket_samples
+
+    fix = plan_contention_aware(specs, model, evaluate, t_f=t_f)
+    assert fix.converged
+    assert len(fix.rounds) <= 2
+    last = fix.rounds[-1]
+    assert last.predicted_t == pytest.approx(last.observed_t, abs=1e-9)
+    assert fix.plan.buckets == make_plan("dp_incremental", specs,
+                                         model).buckets
+
+
+def test_fixpoint_converges_and_beats_baselines_on_two_jobs():
+    """The satellite acceptance test: <= 5 fixpoint iterations on the
+    multi-job scenario, contended iteration time <= the exclusive-link
+    plan's (and WFBP's)."""
+    specs, t_f = trace.synthetic_specs(40, seed=20)
+    n, iters = 32, 2
+    fix = scenarios.contended_two_jobs_plan(specs, t_f, specs, t_f,
+                                            n_workers=n, iters=iters,
+                                            damping=0.3)
+    assert fix.converged
+    assert len(fix.rounds) <= 6          # 1 seed eval + <= 5 fixpoint rounds
+    model = FlatTopology("ring", n, scenarios.PAPER_ALPHA,
+                         scenarios.PAPER_BETA,
+                         scenarios.PAPER_GAMMA).linear_model()
+    plan_b = make_plan("mgwfbp", specs, model)
+
+    def measure(plan_a):
+        sim = scenarios.two_jobs(specs, t_f, specs, t_f, n_workers=n,
+                                 iters=iters, plan_a=plan_a, plan_b=plan_b)
+        job = sim.run().job("job_a")
+        return sum(job.t_iters) / len(job.t_iters)
+
+    t_excl = measure(plan_b)
+    t_wfbp = measure(make_plan("wfbp", specs))
+    assert fix.observed_t <= t_excl + 1e-12
+    assert fix.observed_t <= t_wfbp + 1e-12
+
+
+def test_fixpoint_never_worse_than_seed_plans():
+    """Seed plans are part of the candidate set, so the returned plan's
+    observed time is <= every seed's."""
+    from repro.core.planner import plan_contention_aware
+    specs, t_f = trace.synthetic_specs(16, seed=22)
+    model = AllReduceModel(8e-4, 3e-9)
+    seeds = [make_plan("wfbp", specs), make_plan("single", specs),
+             make_plan("mgwfbp", specs, model)]
+    calls = []
+
+    def evaluate(plan):
+        job = JobSpec(name="j", specs=list(specs), plan=plan, t_f=t_f,
+                      workers=make_workers(2), topology=Topology(model))
+        jr = ClusterSim([job]).run().job("j")
+        calls.append((plan.buckets, jr.iterations[-1].t_iter))
+        return jr.iterations[-1].t_iter, jr.bucket_samples
+
+    fix = plan_contention_aware(specs, model, evaluate, t_f=t_f,
+                                seed_plans=seeds)
+    # every distinct plan is evaluated exactly once (results are cached)
+    assert len(calls) == len({b for b, _ in calls})
+    assert len(fix.rounds) >= len(seeds)
+    assert fix.observed_t <= min(t for _, t in calls) + 1e-15
 
 
 def test_specs_json_roundtrip(tmp_path):

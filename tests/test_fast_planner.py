@@ -1,0 +1,167 @@
+"""Incremental planner (core.planner.Planner) correctness.
+
+The anchor property: on every random instance — and after every random
+update stream (cost-model swaps, point edits, appends, truncations) — the
+incremental planner's plan achieves the same simulated iteration time as
+the O(L^2) reference ``plan_dp_optimal``, which is itself certified
+against brute force in test_planner.py.  Exact bucket equality is NOT
+asserted (the fast recurrence reassociates floating-point arithmetic, so
+knife-edge ties may resolve differently); time-equality is the meaningful
+optimality statement.
+"""
+
+import random
+
+import pytest
+from _hypothesis_compat import hypothesis, st
+
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import (Planner, SpecDelta, TensorSpec, make_plan,
+                                plan_dp_optimal, plan_incremental)
+from repro.core.simulator import simulate
+
+specs_strategy = st.integers(1, 24).flatmap(
+    lambda n: st.tuples(
+        st.lists(st.integers(0, 1 << 22), min_size=n, max_size=n),
+        st.lists(st.floats(0, 5e-3), min_size=n, max_size=n)))
+
+model_strategy = st.tuples(st.floats(0, 2e-3), st.floats(1e-11, 1e-8))
+
+
+def _mk_specs(sizes, times):
+    return [TensorSpec(f"t{i}", s, t) for i, (s, t) in
+            enumerate(zip(sizes, times))]
+
+
+def _assert_matches_reference(planner: Planner, plan=None):
+    specs, model = list(planner.specs), planner.model
+    plan = plan if plan is not None else planner.plan()
+    t_fast = simulate(specs, plan, model).t_iter
+    t_ref = simulate(specs, plan_dp_optimal(specs, model), model).t_iter
+    assert t_fast == pytest.approx(t_ref, rel=1e-9, abs=1e-15)
+
+
+@hypothesis.given(specs_strategy, model_strategy)
+@hypothesis.settings(max_examples=120, deadline=None)
+def test_matches_dp_optimal_from_scratch(sizes_times, ab):
+    specs = _mk_specs(*sizes_times)
+    _assert_matches_reference(Planner(specs, AllReduceModel(*ab)))
+
+
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_matches_dp_optimal_on_update_streams(seed):
+    """Random spec streams: after every delta the incremental plan still
+    matches a from-scratch reference plan — while never rebuilding."""
+    rng = random.Random(seed)
+    L = rng.randint(1, 20)
+    specs = [TensorSpec(f"t{i}", rng.randint(0, 1 << 22),
+                        rng.uniform(0, 5e-3)) for i in range(L)]
+    model = AllReduceModel(rng.uniform(0, 2e-3), rng.uniform(1e-11, 1e-8))
+    planner = Planner(specs, model)
+    _assert_matches_reference(planner)
+    for k in range(8):
+        kind = rng.choice(["model", "point", "append", "truncate"])
+        if kind == "model":
+            model = AllReduceModel(rng.uniform(0, 2e-3),
+                                   rng.uniform(1e-11, 1e-8))
+            plan = planner.update(SpecDelta(model=model))
+        elif kind == "point" and planner.num_tensors:
+            idx = rng.randrange(planner.num_tensors)
+            plan = planner.update(SpecDelta(updates={idx: TensorSpec(
+                f"u{k}", rng.randint(0, 1 << 22), rng.uniform(0, 5e-3))}))
+        elif kind == "truncate" and planner.num_tensors > 1:
+            plan = planner.update(SpecDelta(
+                truncate=rng.randint(1, planner.num_tensors)))
+        else:
+            plan = planner.update(SpecDelta(append=tuple(
+                TensorSpec(f"a{k}.{j}", rng.randint(0, 1 << 20),
+                           rng.uniform(0, 1e-3))
+                for j in range(rng.randint(1, 3)))))
+        _assert_matches_reference(planner, plan)
+    assert planner.scratch_plans == 1
+    assert planner.incremental_updates == 8
+
+
+def test_counters_track_incremental_path():
+    specs = [TensorSpec(f"t{i}", 1 << 18, 1e-4) for i in range(32)]
+    model = AllReduceModel(1e-4, 1e-9)
+    p = Planner(specs, model)
+    assert (p.scratch_plans, p.incremental_updates) == (1, 0)
+    for k in range(5):
+        p.replan(AllReduceModel(1e-4 * (k + 2), 1e-9))
+    p.append(TensorSpec("x", 123, 1e-5))
+    assert (p.scratch_plans, p.incremental_updates) == (1, 6)
+
+
+def test_empty_and_single():
+    model = AllReduceModel(1e-4, 1e-9)
+    p = Planner([], model)
+    assert p.plan().num_tensors == 0
+    assert p.finish_time == 0.0
+    p.append(TensorSpec("t0", 100, 1e-3))
+    assert p.plan().buckets == ((0,),)
+    assert p.finish_time == pytest.approx(1e-3 + model.time(100))
+
+
+def test_zero_byte_tensors():
+    """Empty buckets cost 0, not a — the DP must exploit that exactly."""
+    specs = [TensorSpec("t0", 1 << 20, 1e-3),
+             TensorSpec("t1", 0, 1e-3),
+             TensorSpec("t2", 0, 1e-3)]
+    model = AllReduceModel(1e-2, 1e-9)   # huge startup
+    _assert_matches_reference(Planner(specs, model))
+
+
+def test_incremental_strategy_dispatch():
+    specs = [TensorSpec("t0", 100, 1e-3), TensorSpec("t1", 200, 1e-3)]
+    model = AllReduceModel(1e-3, 1e-9)
+    plan = make_plan("dp_incremental", specs, model)
+    assert plan.strategy == "dp_incremental"
+    assert plan.num_tensors == 2
+    assert plan.buckets == plan_incremental(specs, model).buckets
+
+
+def test_finish_time_matches_simulator():
+    specs = [TensorSpec(f"t{i}", (i + 1) << 16, 1e-4) for i in range(10)]
+    model = AllReduceModel(5e-4, 2e-9)
+    p = Planner(specs, model)
+    res = simulate(specs, p.plan(), model)
+    assert res.comm_end == pytest.approx(
+        max(p.finish_time, res.t_b_total), abs=1e-15)
+
+
+def test_delta_validation():
+    p = Planner([TensorSpec("t0", 100, 1e-3)], AllReduceModel(1e-3, 1e-9))
+    with pytest.raises(IndexError):
+        p.update(SpecDelta(updates={5: TensorSpec("x", 1, 1e-3)}))
+    with pytest.raises(IndexError):
+        p.update(SpecDelta(truncate=7))
+
+
+def test_failed_update_leaves_state_intact():
+    """A delta that is partially valid must be rejected atomically — no
+    spec mutation, no stale DP frontier, no counter bump."""
+    specs = [TensorSpec(f"t{i}", (i + 1) * 1000, 1e-4) for i in range(6)]
+    p = Planner(specs, AllReduceModel(1e-3, 1e-9))
+    before_plan = p.plan().buckets
+    before_finish = p.finish_time
+    with pytest.raises(IndexError):
+        p.update(SpecDelta(updates={0: TensorSpec("big", 1 << 26, 1e-2),
+                                    9: TensorSpec("x", 1, 1e-3)}))
+    assert p.specs == tuple(specs)
+    assert p.plan().buckets == before_plan
+    assert p.finish_time == before_finish
+    assert p.incremental_updates == 0
+    _assert_matches_reference(p)
+
+
+def test_truncate_then_append_roundtrip():
+    specs = [TensorSpec(f"t{i}", (i + 1) * 1000, 1e-4) for i in range(12)]
+    model = AllReduceModel(1e-4, 1e-9)
+    p = Planner(specs, model)
+    before = p.plan().buckets
+    p.update(SpecDelta(truncate=6))
+    p.update(SpecDelta(append=tuple(specs[6:])))
+    assert p.plan().buckets == before
+    assert p.scratch_plans == 1

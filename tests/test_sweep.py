@@ -1,0 +1,111 @@
+"""Batched sweep runner (repro.sim.sweep) correctness.
+
+The contract: on the closed form's valid domain (single job, sequential
+comm, no background traffic — heterogeneity and jitter included) the
+batched recurrence equals the event engine per point to 1e-9; off that
+domain the sweep transparently falls back to the engine and says so.
+"""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import hypothesis, st
+
+from repro.core.simulator import batched_comm_end, simulate
+from repro.core.planner import TensorSpec, make_plan
+from repro.core.cost_model import AllReduceModel
+from repro.sim import scenarios, trace
+from repro.sim.engine import ClusterSim, JobSpec
+from repro.sim.network import Burst, FlatTopology
+from repro.sim.sweep import SweepGrid, closed_form_valid, run_sweep
+from repro.sim.workers import make_workers
+
+A, B, G = scenarios.PAPER_ALPHA, scenarios.PAPER_BETA, scenarios.PAPER_GAMMA
+
+
+def test_grid_validation():
+    with pytest.raises(ValueError):
+        SweepGrid(n_workers=())
+    with pytest.raises(ValueError):
+        SweepGrid(n_workers=(4,), bandwidth_scales=(0.0,))
+    with pytest.raises(ValueError):
+        SweepGrid(n_workers=(0,))
+
+
+def test_closed_form_valid_conditions():
+    assert closed_form_valid()
+    assert not closed_form_valid(comm_mode="concurrent")
+    assert not closed_form_valid(bursts=[Burst("net", 0.0, 1.0)])
+
+
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_batched_comm_end_matches_simulate(seed):
+    """The vectorized recurrence degenerates to simulate() at one point."""
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(1, 16))
+    specs = [TensorSpec(f"t{i}", int(rng.integers(0, 1 << 22)),
+                        float(rng.uniform(0, 5e-3))) for i in range(L)]
+    model = AllReduceModel(float(rng.uniform(0, 2e-3)),
+                           float(rng.uniform(1e-11, 1e-8)))
+    t_f = float(rng.uniform(0, 0.01))
+    plan = make_plan("mgwfbp", specs, model)
+    res = simulate(specs, plan, model, t_f)
+    prefix = np.cumsum([s.t_b for s in specs])
+    ready = t_f + prefix[[b[-1] for b in plan.buckets]]
+    bucket_t = np.array([model.time(b) for b in plan.bucket_bytes(specs)])
+    end = batched_comm_end(bucket_t, ready, t_f + prefix[-1])
+    assert float(end) == pytest.approx(t_f + res.comm_end, abs=1e-12)
+
+
+def test_sweep_matches_engine_heterogeneous():
+    """Jitter + straggler stay on the fast path and match the engine."""
+    specs, t_f = trace.synthetic_specs(20, seed=5)
+    grid = SweepGrid(n_workers=(4, 32), bandwidth_scales=(0.5, 2.0),
+                     seeds=(0, 3))
+    res = run_sweep(specs, t_f, grid, alpha=A, beta=B, gamma=G, iters=3,
+                    jitter_sigma=0.25, slow={0: 2.0})
+    assert not res.used_engine.any()
+    assert res.planner_scratch == 1
+    assert res.planner_incremental == 3   # 4 grid points, 1 initial plan
+    for ni, n in enumerate(grid.n_workers):
+        for bi, bw in enumerate(grid.bandwidth_scales):
+            topo = FlatTopology("ring", n, A, B / bw, G)
+            for si, seed in enumerate(grid.seeds):
+                job = JobSpec(name="train", specs=list(specs),
+                              plan=res.plans[(n, bw)], t_f=t_f,
+                              workers=make_workers(n, slow={0: 2.0},
+                                                   jitter_sigma=0.25),
+                              topology=topo, iters=3,
+                              compute_mode="events")
+                t_eng = ClusterSim([job], seed=seed).run().job("train") \
+                    .t_iters
+                np.testing.assert_allclose(res.t_iter[ni, bi, si], t_eng,
+                                           atol=1e-9)
+
+
+def test_sweep_engine_fallback_on_bursts():
+    specs, t_f = trace.synthetic_specs(16, seed=6)
+    grid = SweepGrid(n_workers=(8,))
+    bursts = [Burst("net", 0.0, 10.0, flows=3)]
+    noisy = run_sweep(specs, t_f, grid, alpha=A, beta=B, gamma=G, iters=2,
+                      bursts=bursts)
+    quiet = run_sweep(specs, t_f, grid, alpha=A, beta=B, gamma=G, iters=2)
+    assert noisy.used_engine.all()
+    assert not quiet.used_engine.any()
+    assert (noisy.t_iter > quiet.t_iter + 1e-12).all()
+    # the quiet fast-path point equals driving the engine directly
+    job = JobSpec(name="train", specs=list(specs), plan=quiet.plans[(8, 1.0)],
+                  t_f=t_f, workers=make_workers(8),
+                  topology=FlatTopology("ring", 8, A, B, G), iters=2)
+    t_eng = ClusterSim([job]).run().job("train").t_iters
+    np.testing.assert_allclose(quiet.t_iter[0, 0, 0], t_eng, atol=1e-9)
+
+
+def test_sweep_force_engine_agrees_with_fast_path():
+    specs, t_f = trace.synthetic_specs(12, seed=8)
+    grid = SweepGrid(n_workers=(4, 16), seeds=(0, 1))
+    kw = dict(alpha=A, beta=B, gamma=G, iters=2, jitter_sigma=0.1)
+    fast = run_sweep(specs, t_f, grid, **kw)
+    slow = run_sweep(specs, t_f, grid, force_engine=True, **kw)
+    assert slow.used_engine.all() and not fast.used_engine.any()
+    np.testing.assert_allclose(fast.t_iter, slow.t_iter, atol=1e-9)
