@@ -14,9 +14,15 @@ runs the scenarios only an event engine can express:
     beat both WFBP and the exclusive-link MG-WFBP plan under contention)
   * batched sweep          (vectorized closed form vs the engine, point by
     point, plus the wall-time ratio between the two paths)
+  * schedule crossover     (the paper cluster under BSP vs pipelined
+    all-reduce vs 1F1B vs local SGD: merged-gradient bucketing must help
+    strictly LESS under PipelinedAllReduce and LocalSGD than under BSP —
+    the DeAR-style structural result)
 
 Every scenario's timeline round-trips through Chrome-trace JSON
-(``repro.sim.trace``), which is also asserted here.
+(``repro.sim.trace``), which is also asserted here.  ``python
+benchmarks/cluster_sim.py --schedules`` runs just the schedule rows (the
+CI smoke step).
 """
 
 from __future__ import annotations
@@ -32,6 +38,7 @@ from repro.core.simulator import simulate
 from repro.sim import scenarios, trace
 from repro.sim.engine import ClusterSim, JobSpec
 from repro.sim.network import FlatTopology
+from repro.sim.schedules import BSP, LocalSGD, OneFoneB, PipelinedAllReduce
 from repro.sim.sweep import SweepGrid, run_sweep
 from repro.sim.workers import make_workers
 
@@ -296,6 +303,49 @@ def _sweep_rows(rows: list) -> None:
                  f"engine {t_slow*1e3:.0f}ms / batched {t_fast*1e3:.0f}ms"))
 
 
+def _schedule_rows(rows: list) -> None:
+    """Schedule-crossed paper cluster: per-schedule steady-state times and
+    the bucketing-gain crossover (the acceptance bar: merged-gradient
+    bucketing helps less under pipelined all-reduce than under BSP)."""
+    specs, t_f = tensor_profile("resnet50")
+    schedules = [BSP(), PipelinedAllReduce(0.5), OneFoneB(4), LocalSGD(4)]
+    iters = 6
+    for n in (16, 64):
+        topo = FlatTopology("ring", n, scenarios.PAPER_ALPHA,
+                            scenarios.PAPER_BETA, scenarios.PAPER_GAMMA)
+        model = topo.linear_model()
+        plans = {s: make_plan(s, specs, model) for s in ("wfbp", "mgwfbp")}
+        gains = {}
+        for sched in schedules:
+            ts = {}
+            for strat, plan in plans.items():
+                job = JobSpec(name="t", specs=list(specs), plan=plan,
+                              t_f=t_f, workers=make_workers(n),
+                              topology=topo, iters=iters,
+                              compute_mode="analytic", schedule=sched)
+                jr = ClusterSim([job]).run().job("t")
+                # pipeline-fill-inclusive average: comparable across
+                # barrier and frontier schedules
+                ts[strat] = (jr.iterations[-1].end -
+                             jr.iterations[0].start) / iters
+            gains[sched.label] = ts["wfbp"] / ts["mgwfbp"]
+            rows.append((f"cluster_sim.schedules.{sched.label}.N{n}",
+                         ts["mgwfbp"] * 1e3,
+                         f"ms/iter mgwfbp (wfbp={ts['wfbp']*1e3:.1f}ms, "
+                         f"gain={gains[sched.label]:.3f})"))
+        g_bsp = gains["bsp"]
+        for label in ("pipelined0.5", "localsgd4"):
+            # the crossover: these schedules already hide/skip
+            # communication, so merging buys strictly less than under BSP
+            assert gains[label] < g_bsp - EPS, (n, label, gains, g_bsp)
+        rows.append((f"cluster_sim.schedules.gain_ratio_pipelined.N{n}",
+                     gains["pipelined0.5"] / g_bsp,
+                     "bucketing gain vs BSP's (<1 = merging helps less)"))
+        rows.append((f"cluster_sim.schedules.gain_ratio_localsgd.N{n}",
+                     gains["localsgd4"] / g_bsp,
+                     "bucketing gain vs BSP's (<1 = merging helps less)"))
+
+
 def run() -> list[tuple[str, float, str]]:
     rows: list[tuple[str, float, str]] = []
     _scaling_rows(rows)
@@ -305,4 +355,21 @@ def run() -> list[tuple[str, float, str]]:
     _contention_rows(rows)
     _fixpoint_rows(rows)
     _sweep_rows(rows)
+    _schedule_rows(rows)
     return rows
+
+
+def run_schedules_smoke() -> list[tuple[str, float, str]]:
+    """Just the per-schedule rows — the fast CI smoke step."""
+    rows: list[tuple[str, float, str]] = []
+    _schedule_rows(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+
+    smoke = "--schedules" in sys.argv
+    print("name,us_per_call,derived")
+    for name, value, derived in (run_schedules_smoke() if smoke else run()):
+        print(f"{name},{value:.3f},{derived}")

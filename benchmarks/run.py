@@ -8,7 +8,11 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
   scaling_sim      — Figs 10-11 (4..2048-worker closed-form fast path)
   cluster_sim      — §7 via the event engine + beyond-paper scenarios
                      (stragglers, eviction, elastic refit+replan, bursts,
-                     contention fixpoint, batched sweeps)
+                     contention fixpoint, batched sweeps, and the
+                     schedule crossover: per-schedule rows for BSP vs
+                     pipelined all-reduce vs 1F1B vs local SGD, asserting
+                     merged bucketing helps less off-BSP; CI also runs
+                     `cluster_sim.py --schedules` as a fast smoke step)
   planner_bench    — §4.2 one-time O(L^2) cost + the incremental planner
                      fast path (>= 10x replan speedup enforced)
   kernels_bench    — kernels  (structural tile/bandwidth notes)

@@ -568,6 +568,7 @@ def plan_contention_aware(
         max_rounds: int = 5,
         damping: float = 0.5,
         seed_plans: Sequence[MergePlan] = (),
+        schedule=None,
 ) -> FixpointResult:
     """Close the loop the static planners leave open.
 
@@ -594,6 +595,16 @@ def plan_contention_aware(
     result never loses to them on the evaluated environment.  ``damping``
     is the weight of the new fit against the previous effective model; 0.5
     suppresses the two-cycle oscillation a full-step update can fall into.
+
+    ``schedule`` (a ``repro.sim.schedules.Schedule``) tells the loop which
+    iteration discipline the evaluated environment actually runs: the
+    per-round prediction then uses the schedule's own closed form
+    (``Schedule.predict_t_iter``) instead of the BSP Eq. 7/8 replay, so
+    the refit is judged — and the bucketing optimized — under that
+    schedule.  The DP recurrence itself keeps minimizing the last
+    collective's finish time, which remains the right objective for every
+    in-order schedule (only the effective (a, b) and the prediction
+    change); ``None`` means BSP, exactly as before.
     """
     from repro.core.simulator import simulate   # local import: no cycle
 
@@ -601,6 +612,11 @@ def plan_contention_aware(
         raise ValueError(f"damping must be in (0, 1], got {damping}")
     if max_rounds < 1:
         raise ValueError("need >= 1 round")
+
+    def predict(p: MergePlan, m: AllReduceModel) -> float:
+        if schedule is not None:
+            return schedule.predict_t_iter(specs, p, m, t_f)
+        return simulate(specs, p, m, t_f).t_iter
     planner = Planner(specs, model)
     plan = planner.plan()
     eff = model
@@ -623,8 +639,7 @@ def plan_contention_aware(
 
     for sp in seed_plans:               # static baselines: evaluate only
         observed, _ = observe(sp)
-        push(FixpointRound(sp, eff, observed,
-                           simulate(specs, sp, eff, t_f).t_iter,
+        push(FixpointRound(sp, eff, observed, predict(sp, eff),
                            planned_under=eff))
     seen: set[tuple] = {plan.buckets}
     converged = False
@@ -633,8 +648,7 @@ def plan_contention_aware(
         observed, samples = observe(plan)
         fitted = effective_model(samples, eff)
         eff = cost_model.blend(eff, fitted, damping)
-        predicted = simulate(specs, plan, eff, t_f).t_iter
-        push(FixpointRound(plan, eff, observed, predicted,
+        push(FixpointRound(plan, eff, observed, predict(plan, eff),
                            planned_under=planned_under))
         new_plan = planner.replan(eff)
         if new_plan.buckets == plan.buckets:

@@ -33,6 +33,16 @@ from repro.sim.network import (
     predicted_ring,
     topology_for_cluster,
 )
+from repro.sim.schedules import (
+    BSP,
+    DAGSchedule,
+    DAGTask,
+    LocalSGD,
+    OneFoneB,
+    PipelinedAllReduce,
+    SCHEDULES,
+    Schedule,
+)
 from repro.sim.sweep import (
     SweepGrid,
     SweepResult,
@@ -42,6 +52,7 @@ from repro.sim.sweep import (
 from repro.sim.trace import (
     Span,
     from_chrome_trace,
+    frontier_spans,
     read_chrome_trace,
     refit_model,
     replan_from_samples,
@@ -52,7 +63,7 @@ from repro.sim.trace import (
     to_chrome_trace,
     write_chrome_trace,
 )
-from repro.sim.workers import WorkerProfile, make_workers
+from repro.sim.workers import WorkerProfile, make_workers, scale_array
 from repro.sim import scenarios
 
 __all__ = [
@@ -63,10 +74,12 @@ __all__ = [
     "invert_double_binary_trees", "invert_halving_doubling", "invert_model",
     "invert_ring", "predicted_model", "predicted_ring",
     "topology_for_cluster",
+    "BSP", "DAGSchedule", "DAGTask", "LocalSGD", "OneFoneB",
+    "PipelinedAllReduce", "SCHEDULES", "Schedule",
     "SweepGrid", "SweepResult", "closed_form_valid", "run_sweep",
-    "Span", "from_chrome_trace", "read_chrome_trace", "refit_model",
-    "replan_from_samples", "specs_from_json", "specs_from_rows",
-    "specs_to_json", "synthetic_specs", "to_chrome_trace",
-    "write_chrome_trace",
-    "WorkerProfile", "make_workers", "scenarios",
+    "Span", "from_chrome_trace", "frontier_spans", "read_chrome_trace",
+    "refit_model", "replan_from_samples", "specs_from_json",
+    "specs_from_rows", "specs_to_json", "synthetic_specs",
+    "to_chrome_trace", "write_chrome_trace",
+    "WorkerProfile", "make_workers", "scale_array", "scenarios",
 ]

@@ -12,13 +12,20 @@ closed form (paper Eqs. 6-8), this engine simulates a *cluster*:
   bursts) split link bandwidth, startup latency is paid per collective;
 * topology-aware collectives (``network.py``) — a collective is a sequence
   of phases over links (e.g. ICI reduce-scatter/all-gather then a DCN leg);
-* multi-iteration BSP loops with per-iteration hooks for elastic resize /
-  replanning (``scenarios.py`` closes the refit -> replan loop).
+* multi-iteration loops driven by a :class:`~repro.sim.schedules.Schedule`
+  — BSP (the paper's global barrier), DeAR-style pipelined all-reduce,
+  micro-batched 1F1B, local SGD — with per-iteration hooks for elastic
+  resize / replanning (``scenarios.py`` closes the refit -> replan loop).
 
-On a homogeneous single-job sequential setup the engine's iteration time
-equals the closed form to ~1e-12 (see ``core/simulator.cross_validate`` and
-tests/test_cluster_sim.py) — that identity anchors everything the engine
-says about the scenarios the closed form cannot express.
+The iteration loop itself lives in ``schedules.py``: a ``_JobRun`` here is
+only the shared context (plan/workers/topology/result + the collective
+launcher), and the job's schedule advances each worker's **iteration
+frontier**.  Under the default BSP schedule every worker's frontier is the
+global barrier at the last all-reduce — on a homogeneous single-job
+sequential setup that equals the closed form to ~1e-12 (see
+``core/simulator.cross_validate`` and tests/test_cluster_sim.py) — and that
+identity anchors everything the engine says about the scenarios the closed
+form cannot express.
 """
 
 from __future__ import annotations
@@ -31,9 +38,9 @@ import numpy as np
 
 from repro.core.planner import MergePlan, TensorSpec
 from repro.sim.events import EventQueue
-from repro.sim.network import Burst, Topology
+from repro.sim.network import Burst, Phase, Topology
 from repro.sim.trace import Span
-from repro.sim.workers import WorkerProfile
+from repro.sim.workers import WorkerProfile, scale_array
 
 _EPS = 1e-15
 
@@ -170,8 +177,8 @@ class Link:
 
 @dataclasses.dataclass(frozen=True)
 class BucketTiming:
-    """One bucket's all-reduce in one iteration (engine analogue of
-    ``simulator.BucketEvent``, plus the iteration index)."""
+    """One bucket's gradient synchronization in one iteration (engine
+    analogue of ``simulator.BucketEvent``, plus the iteration index)."""
 
     iteration: int
     bucket: int
@@ -179,6 +186,17 @@ class BucketTiming:
     ready: float        # all workers produced the bucket's last gradient
     start: float        # collective issued (first phase startup begins)
     end: float          # last phase completed
+    # actual link-occupancy seconds.  For BSP this equals end - start; for
+    # split collectives (pipelined reduce-scatter + deferred all-gather)
+    # end - start also contains the idle gap while the all-gather waits for
+    # the next iteration's forward, which must NOT pollute (a, b) refits —
+    # drivers record the occupancy explicitly.  < 0 means "use end - start".
+    comm_s: float = -1.0
+
+    @property
+    def duration(self) -> float:
+        """Communication time this bucket actually occupied the fabric."""
+        return self.comm_s if self.comm_s >= 0 else self.end - self.start
 
 
 @dataclasses.dataclass(frozen=True)
@@ -191,6 +209,15 @@ class IterationResult:
     # per-worker compute (forward+backward) seconds this iteration — the
     # per-host step times a StragglerMonitor consumes (name, seconds)
     worker_compute: tuple[tuple[str, float], ...] = ()
+    # per-worker iteration frontier: when each worker began / finished its
+    # compute for this iteration.  Under BSP all starts coincide (the global
+    # barrier); non-BSP schedules let them drift.
+    worker_start: tuple[tuple[str, float], ...] = ()
+    worker_end: tuple[tuple[str, float], ...] = ()
+    # local steps accumulated since the last global gradient synchronization
+    # at the end of this iteration: 0 for every synchronous schedule, s for
+    # the s-th unsynced step of a LocalSGD(H) round.
+    staleness: int = 0
 
     @property
     def t_iter(self) -> float:
@@ -211,6 +238,9 @@ class JobSpec:
     start_time: float = 0.0
     comm_mode: str = "sequential"           # "sequential" | "concurrent"
     compute_mode: str = "events"            # "events" | "analytic"
+    # how iterations advance: None means BSP (the paper's global barrier).
+    # See repro.sim.schedules for PipelinedAllReduce / OneFoneB / LocalSGD.
+    schedule: "object | None" = None
     # hook(sim, jobrun, finished_iter_index) runs after that iteration;
     # it may replace the run's workers / plan / topology (elastic resize).
     hooks: Mapping[int, Callable] = dataclasses.field(default_factory=dict)
@@ -226,12 +256,23 @@ class JobSpec:
             raise ValueError(f"unknown compute_mode {self.compute_mode!r}")
         if self.iters < 1 or not self.workers:
             raise ValueError("need >= 1 iteration and >= 1 worker")
+        if self.schedule is not None:
+            from repro.sim.schedules import Schedule  # lazy: no cycle
+            if not isinstance(self.schedule, Schedule):
+                raise TypeError(
+                    f"schedule must be a repro.sim.schedules.Schedule, "
+                    f"got {type(self.schedule).__name__}")
+            self.schedule.validate_spec(self)
 
 
 @dataclasses.dataclass
 class JobResult:
     name: str
     iterations: list[IterationResult]
+    # bytes actually moved through collectives (fraction-weighted for split
+    # collectives): for synchronous schedules this is plan bytes x iters —
+    # schedule-invariant — while LocalSGD(H) moves 1/H of it.
+    bytes_communicated: float = 0.0
 
     @property
     def t_iters(self) -> list[float]:
@@ -243,13 +284,25 @@ class JobResult:
 
     @property
     def bucket_samples(self) -> list[tuple[int, float]]:
-        """(nbytes, duration) per observed collective — refit fodder."""
-        return [(b.nbytes, b.end - b.start)
+        """(nbytes, duration) per observed collective — refit fodder.
+
+        ``duration`` is the fabric-occupancy time (``BucketTiming.duration``)
+        so split-collective schedules don't leak their deliberate all-gather
+        deferral into the (a, b) fit."""
+        return [(b.nbytes, b.duration)
                 for it in self.iterations for b in it.buckets]
 
 
 class _JobRun:
-    """Engine-side state machine for one job."""
+    """Engine-side context for one job.
+
+    The iteration state machine lives in the job's schedule driver
+    (``repro.sim.schedules``); this class holds what every schedule shares —
+    the mutable plan/workers/topology (iteration hooks may swap them
+    mid-run), the accumulating result, per-iteration jitter scales, and the
+    collective launcher that turns a bucket into topology phases on shared
+    links.
+    """
 
     def __init__(self, sim: "ClusterSim", spec: JobSpec):
         self.sim = sim
@@ -261,99 +314,49 @@ class _JobRun:
         self.topology = spec.topology
         self.result = JobResult(spec.name, [])
         self.it = 0
-        # per-iteration transient state
-        self._ready: dict[int, float] = {}
-        self._issued = 0
-        self._in_flight = 0
-        self._done_buckets: list[BucketTiming] = []
-        self._bwd_end = 0.0
-        self._iter_start = 0.0
-        self._worker_compute: tuple[tuple[str, float], ...] = ()
-
-    # -- iteration lifecycle --------------------------------------------
-
-    def start_iteration(self) -> None:
-        eng = self.sim.engine
-        spec = self.spec
-        it = self.it
-        T = self._iter_start = eng.now
-        self._ready = {}
-        self._issued = 0
-        self._in_flight = 0
-        self._done_buckets = []
-
-        t_b = np.array([s.t_b for s in spec.specs], dtype=np.float64)
-        prefix = np.cumsum(t_b) if len(t_b) else np.zeros(0)
-        scales = np.array(
-            [w.scale(self.sim.seed, self.name, wi, it)
-             for wi, w in enumerate(self.workers)], dtype=np.float64)
-        fwd_end = T + spec.t_f * scales
-        bwd_end = fwd_end + (prefix[-1] if len(prefix) else 0.0) * scales
-        self._bwd_end = float(bwd_end.max())
-        self._worker_compute = tuple(
-            (w.name, float(bwd_end[wi] - T))
-            for wi, w in enumerate(self.workers))
-
-        for wi, w in enumerate(self.workers):
-            self.sim.record(Span(
-                name="forward", cat="compute", pid=self.name, tid=w.name,
-                start=T, end=float(fwd_end[wi]), args={"iter": it}))
-            self.sim.record(Span(
-                name="backward", cat="compute", pid=self.name, tid=w.name,
-                start=float(fwd_end[wi]), end=float(bwd_end[wi]),
-                args={"iter": it}))
-
-        buckets = self.plan.buckets
-        if not buckets:
-            eng.at(self._bwd_end, self._finish_iteration)
-            return
-
-        if spec.compute_mode == "analytic":
-            # bucket ready == max over workers; compute directly.
-            for k, bucket in enumerate(buckets):
-                r = float((fwd_end + prefix[bucket[-1]] * scales).max())
-                eng.at(r, lambda k=k: self._bucket_ready(k))
+        if spec.schedule is None:
+            from repro.sim.schedules import BSP  # lazy: no import cycle
+            self.schedule = BSP()
         else:
-            # faithful per-worker streams: each tensor completion is an
-            # event; the Nth arrival of a bucket's last tensor marks ready.
-            last_of = {b[-1]: k for k, b in enumerate(buckets)}
-            arrivals = {k: 0 for k in range(len(buckets))}
-            n = len(self.workers)
+            self.schedule = spec.schedule
+        self.driver = self.schedule.driver(self)
 
-            def arrive(k: int) -> None:
-                arrivals[k] += 1
-                if arrivals[k] == n:
-                    self._bucket_ready(k)
+    def start(self) -> None:
+        self.driver.start()
 
-            for wi in range(len(self.workers)):
-                for j, k in last_of.items():
-                    t = float(fwd_end[wi] + prefix[j] * scales[wi])
-                    eng.at(t, lambda k=k: arrive(k))
+    # -- primitives shared by all schedule drivers ----------------------
 
-    def _bucket_ready(self, k: int) -> None:
-        self._ready[k] = self.sim.engine.now
-        if self.spec.comm_mode == "concurrent":
-            self._launch(k)
-        else:
-            self._try_issue()
+    def scales(self, it: int) -> np.ndarray:
+        """Per-worker compute-scale vector for iteration ``it``."""
+        return scale_array(self.workers, self.sim.seed, self.name, it)
 
-    def _try_issue(self) -> None:
-        if self._in_flight or self._issued >= self.plan.num_buckets:
-            return
-        if self._issued in self._ready:
-            self._launch(self._issued)
+    def backward_prefix(self) -> np.ndarray:
+        """Prefix sums of per-tensor backward times (gradient-ready
+        offsets from a worker's backward start, before scaling)."""
+        t_b = np.array([s.t_b for s in self.spec.specs], dtype=np.float64)
+        return np.cumsum(t_b) if len(t_b) else np.zeros(0)
 
-    def _launch(self, k: int) -> None:
-        self._in_flight += 1
-        self._issued = max(self._issued, k + 1)
-        nbytes = sum(self.spec.specs[i].nbytes for i in self.plan.buckets[k])
+    def bucket_nbytes(self, k: int) -> int:
+        return sum(self.spec.specs[i].nbytes for i in self.plan.buckets[k])
+
+    def launch_collective(self, k: int, nbytes: int, *, it: int,
+                          fraction: float = 1.0, tag: str = "allreduce",
+                          on_done: Callable[[float], None]) -> None:
+        """Run one collective (or a ``fraction`` of one — e.g. the
+        reduce-scatter half) through the topology's phases on shared links;
+        ``on_done(start_time)`` fires when the last phase completes."""
         start = self.sim.engine.now
         # closed-form convention: T(0) == 0 — an empty message is free
-        phases = self.topology.phases(nbytes) if nbytes > 0 else []
+        phases = self.topology.phases(nbytes) \
+            if nbytes > 0 and fraction > 0 else []
+        if fraction != 1.0 and phases:
+            phases = [Phase(p.link, p.startup * fraction,
+                            p.seconds_per_byte * fraction) for p in phases]
 
         def next_phase(idx: int) -> None:
             if idx == len(phases):
-                self._collective_done(k, nbytes, start)
+                self.result.bytes_communicated += nbytes * fraction
+                on_done(start)
                 return
             ph = phases[idx]
             phase_start = self.sim.engine.now
@@ -363,42 +366,29 @@ class _JobRun:
                 link.add_flow(ph.volume(nbytes), lambda: finish())
 
             def finish() -> None:
+                args = {"iter": it, "bucket": k, "bytes": nbytes,
+                        "phase": idx}
+                if fraction != 1.0:
+                    args["fraction"] = fraction
                 self.sim.record(Span(
-                    name=f"allreduce:b{k}", cat="comm", pid=self.name,
+                    name=f"{tag}:b{k}", cat="comm", pid=self.name,
                     tid=f"link:{ph.link}", start=phase_start,
-                    end=self.sim.engine.now,
-                    args={"iter": self.it, "bucket": k, "bytes": nbytes,
-                          "phase": idx}))
+                    end=self.sim.engine.now, args=args))
                 next_phase(idx + 1)
 
             self.sim.engine.after(ph.startup, transfer)
 
         next_phase(0)
 
-    def _collective_done(self, k: int, nbytes: int, start: float) -> None:
-        self._in_flight -= 1
-        self._done_buckets.append(BucketTiming(
-            iteration=self.it, bucket=k, nbytes=nbytes,
-            ready=self._ready[k], start=start, end=self.sim.engine.now))
-        if self.spec.comm_mode == "sequential":
-            self._try_issue()
-        if len(self._done_buckets) == self.plan.num_buckets:
-            end = max(self.sim.engine.now, self._bwd_end)
-            self.sim.engine.at(end, self._finish_iteration)
-
-    def _finish_iteration(self) -> None:
-        buckets = tuple(sorted(self._done_buckets,
-                               key=lambda b: b.bucket))
-        self.result.iterations.append(IterationResult(
-            index=self.it, start=self._iter_start,
-            end=self.sim.engine.now, backward_end=self._bwd_end,
-            buckets=buckets, worker_compute=self._worker_compute))
-        hook = self.spec.hooks.get(self.it)
+    def finish_iteration(self, result: IterationResult) -> bool:
+        """Record one finished iteration, fire its hook, advance the
+        iteration counter.  Returns True while more iterations remain."""
+        self.result.iterations.append(result)
+        hook = self.spec.hooks.get(result.index)
         if hook is not None:
-            hook(self.sim, self, self.it)
-        self.it += 1
-        if self.it < self.spec.iters:
-            self.start_iteration()
+            hook(self.sim, self, result.index)
+        self.it = result.index + 1
+        return self.it < self.spec.iters
 
 
 # ---------------------------------------------------------------------------
@@ -457,7 +447,7 @@ class ClusterSim:
 
     def run(self) -> ClusterResult:
         for r in self._runs:
-            self.engine.at(r.spec.start_time, r.start_iteration)
+            self.engine.at(r.spec.start_time, r.start)
         self.engine.run()
         return ClusterResult(
             jobs={r.name: r.result for r in self._runs},
@@ -471,19 +461,21 @@ class ClusterSim:
 
 def event_driven_t_iter(specs: Sequence[TensorSpec], plan: MergePlan,
                         model, t_f: float = 0.0, *, n_workers: int = 1,
-                        iters: int = 1,
-                        compute_mode: str = "events") -> float:
+                        iters: int = 1, compute_mode: str = "events",
+                        schedule=None) -> float:
     """Iteration time of the homogeneous single-job case via the engine.
 
     This is the configuration in which the engine must agree with
     ``core/simulator.simulate`` (identical semantics, independent
-    mechanics) — the cross-validation oracle.
+    mechanics) — the cross-validation oracle.  Pass ``schedule`` to run the
+    same configuration under a non-BSP schedule (then the reference is the
+    schedule's own closed form, ``Schedule.predict_t_iter``).
     """
     from repro.sim.workers import make_workers
 
     topo = Topology(model, n_workers=n_workers)
     job = JobSpec(name="job", specs=list(specs), plan=plan, t_f=t_f,
                   workers=make_workers(n_workers), topology=topo,
-                  iters=iters, compute_mode=compute_mode)
+                  iters=iters, compute_mode=compute_mode, schedule=schedule)
     res = ClusterSim([job]).run()
     return res.job("job").iterations[-1].t_iter

@@ -27,6 +27,29 @@ class Event:
         return (self.time, self.seq) < (other.time, other.seq)
 
 
+class Latch:
+    """Counts arrivals and fires ``on_done`` on the ``n``-th.
+
+    The schedule drivers use one latch per synchronization point (e.g. "all
+    workers produced bucket k's last gradient"): every per-worker event calls
+    :meth:`arrive`, and the callback fires exactly once, inside the event
+    that completed the count — so the firing time inherits the event queue's
+    deterministic (time, seq) order.
+    """
+
+    def __init__(self, n: int, on_done: Callable[[], None]) -> None:
+        if n < 1:
+            raise ValueError(f"latch needs n >= 1, got {n}")
+        self.n = n
+        self.count = 0
+        self._on_done = on_done
+
+    def arrive(self) -> None:
+        self.count += 1
+        if self.count == self.n:
+            self._on_done()
+
+
 class EventQueue:
     """Min-heap of :class:`Event` with deterministic tie-breaking."""
 

@@ -24,6 +24,11 @@ Builders take ``(specs, t_f)`` so callers choose the profile source
 (``benchmarks/paper_profiles.py``, ``core/profiler.py`` measurements, or
 ``trace.synthetic_specs``); the zero-argument ``CATALOG`` entries use small
 synthetic profiles and exist for docs, smoke tests and quick looks.
+
+Most builders also take ``schedule=`` (``repro.sim.schedules``) to cross a
+scenario with a non-BSP iteration discipline — pipelined all-reduce,
+micro-batched 1F1B, local SGD — and the catalog carries the crossed
+variants (``*_pipelined`` / ``*_1f1b`` / ``*_localsgd``).
 """
 
 from __future__ import annotations
@@ -36,6 +41,8 @@ from repro.core.planner import MergePlan, Planner, TensorSpec
 from repro.sim import network, trace
 from repro.sim.engine import ClusterSim, JobSpec
 from repro.sim.network import Burst, FlatTopology, HierarchicalTopology
+from repro.sim.schedules import (LocalSGD, OneFoneB, PipelinedAllReduce,
+                                 Schedule)
 from repro.sim.workers import make_workers
 
 # Point-to-point constants matching the paper's fitted cluster 1 at N=8
@@ -67,18 +74,20 @@ def paper_scaling(specs: Sequence[TensorSpec], t_f: float, n_workers: int,
                   alpha: float = PAPER_ALPHA, beta: float = PAPER_BETA,
                   gamma: float = PAPER_GAMMA, iters: int = 1,
                   compute_mode: str = "analytic", seed: int = 0,
-                  name: str = "train",
-                  plan: MergePlan | None = None) -> ClusterSim:
+                  name: str = "train", plan: MergePlan | None = None,
+                  schedule: Schedule | None = None) -> ClusterSim:
     """Homogeneous N-worker job — the paper's Figs. 10-11 setting.
 
     Pass ``plan`` to skip the O(L^2) planner when the caller already built
-    one for the identical cost model (benchmarks sweep many N points)."""
+    one for the identical cost model (benchmarks sweep many N points), and
+    ``schedule`` to run the same cluster under a non-BSP iteration
+    discipline (the schedule-crossed variants of the paper study)."""
     topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
     if plan is None:
         plan = planner.make_plan(strategy, specs, topo.linear_model())
     job = JobSpec(name=name, specs=list(specs), plan=plan, t_f=t_f,
                   workers=make_workers(n_workers), topology=topo,
-                  iters=iters, compute_mode=compute_mode)
+                  iters=iters, compute_mode=compute_mode, schedule=schedule)
     return ClusterSim([job], seed=seed)
 
 
@@ -88,17 +97,21 @@ def straggler(specs: Sequence[TensorSpec], t_f: float, n_workers: int,
               strategy: str = "mgwfbp", alpha: float = PAPER_ALPHA,
               beta: float = PAPER_BETA, gamma: float = PAPER_GAMMA,
               iters: int = 2, compute_mode: str = "analytic",
-              seed: int = 0) -> ClusterSim:
+              seed: int = 0,
+              schedule: Schedule | None = None) -> ClusterSim:
     """Synchronous SGD with persistent stragglers: the step time is the max
     over workers, so one slow host drags the fleet (fault.py's
-    StragglerMonitor exists to evict exactly these)."""
+    StragglerMonitor exists to evict exactly these).  Under ``schedule=
+    LocalSGD(H)`` the straggler only hurts at sync steps — the contrast
+    scenario for straggler-tolerant schedules."""
     topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
     plan = planner.make_plan(strategy, specs, topo.linear_model())
     slow = {i: slow_factor for i in range(min(slow_workers, n_workers))}
     job = JobSpec(name="train", specs=list(specs), plan=plan, t_f=t_f,
                   workers=make_workers(n_workers, slow=slow,
                                        jitter_sigma=jitter_sigma),
-                  topology=topo, iters=iters, compute_mode=compute_mode)
+                  topology=topo, iters=iters, compute_mode=compute_mode,
+                  schedule=schedule)
     return ClusterSim([job], seed=seed)
 
 
@@ -203,7 +216,8 @@ def bursty(specs: Sequence[TensorSpec], t_f: float, n_workers: int = 16,
            horizon_iters: int = 4, strategy: str = "mgwfbp",
            algorithm: str = "ring", alpha: float = PAPER_ALPHA,
            beta: float = PAPER_BETA, gamma: float = PAPER_GAMMA,
-           compute_mode: str = "analytic", seed: int = 0) -> ClusterSim:
+           compute_mode: str = "analytic", seed: int = 0,
+           schedule: Schedule | None = None) -> ClusterSim:
     """Periodic background traffic steals link bandwidth during bursts."""
     topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
     plan = planner.make_plan(strategy, specs, topo.linear_model())
@@ -219,7 +233,8 @@ def bursty(specs: Sequence[TensorSpec], t_f: float, n_workers: int = 16,
         t += period
     job = JobSpec(name="train", specs=list(specs), plan=plan, t_f=t_f,
                   workers=make_workers(n_workers), topology=topo,
-                  iters=horizon_iters, compute_mode=compute_mode)
+                  iters=horizon_iters, compute_mode=compute_mode,
+                  schedule=schedule)
     return ClusterSim([job], seed=seed, bursts=bursts)
 
 
@@ -231,12 +246,15 @@ def two_jobs(specs_a: Sequence[TensorSpec], t_f_a: float,
              gamma: float = PAPER_GAMMA, iters: int = 2,
              compute_mode: str = "analytic", seed: int = 0,
              plan_a: MergePlan | None = None,
-             plan_b: MergePlan | None = None) -> ClusterSim:
+             plan_b: MergePlan | None = None,
+             schedule: Schedule | None = None) -> ClusterSim:
     """Two independent jobs time-sharing one network — their all-reduces
     contend via processor sharing on the common link.  Pass ``plan_a`` /
     ``plan_b`` to pin a job's merge plan (the contention-aware fixpoint
     evaluates candidate plans this way); otherwise both jobs plan with
-    ``strategy`` under the exclusive-link model."""
+    ``strategy`` under the exclusive-link model.  ``schedule`` applies to
+    both jobs (the contention regime changes with the discipline —
+    pipelined jobs spread their traffic, local-SGD jobs burst at syncs)."""
     topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
     model = topo.linear_model()
     jobs = []
@@ -249,7 +267,7 @@ def two_jobs(specs_a: Sequence[TensorSpec], t_f_a: float,
                             t_f=t_f, workers=make_workers(n_workers,
                                                           prefix=name + ".w"),
                             topology=topo, iters=iters, start_time=start,
-                            compute_mode=compute_mode))
+                            compute_mode=compute_mode, schedule=schedule))
     return ClusterSim(jobs, seed=seed)
 
 
@@ -263,6 +281,7 @@ def contended_two_jobs_plan(specs_a: Sequence[TensorSpec], t_f_a: float,
                             gamma: float = PAPER_GAMMA, iters: int = 2,
                             compute_mode: str = "analytic", seed: int = 0,
                             max_rounds: int = 5, damping: float = 0.5,
+                            schedule: Schedule | None = None,
                             ) -> "planner.FixpointResult":
     """Contention-aware plan for job_a sharing the fabric with job_b.
 
@@ -273,6 +292,13 @@ def contended_two_jobs_plan(specs_a: Sequence[TensorSpec], t_f_a: float,
     job_a's mean iteration time; observed per-bucket (bytes, duration)
     samples — which embed the processor-sharing stretch — drive the
     effective (a, b) refit.
+
+    With ``schedule`` both jobs run under that iteration discipline and
+    the fixpoint replans for it: the observed samples come from the
+    schedule's actual collectives (e.g. reduce-scatter + deferred
+    all-gather occupancy) and the round predictions use the schedule's own
+    closed form, so the bucketing is optimized for the regime being run —
+    not for the BSP barrier the paper assumes.
     """
     model = cost_model.make_model(algorithm, n_workers, alpha, beta, gamma)
     plan_b = planner.make_plan(baseline_strategy, specs_b, model)
@@ -282,9 +308,15 @@ def contended_two_jobs_plan(specs_a: Sequence[TensorSpec], t_f_a: float,
                        n_workers=n_workers, stagger=stagger,
                        algorithm=algorithm, alpha=alpha, beta=beta,
                        gamma=gamma, iters=iters, compute_mode=compute_mode,
-                       seed=seed, plan_a=candidate, plan_b=plan_b)
+                       seed=seed, plan_a=candidate, plan_b=plan_b,
+                       schedule=schedule)
         job = sim.run().job("job_a")
-        return sum(job.t_iters) / len(job.t_iters), job.bucket_samples
+        # span-based rate, not mean(end - start): pipelined iterations
+        # overlap (the deferred all-gather tail runs under the next
+        # forward), so per-iteration windows double-count hidden comm.
+        # For barrier schedules the two are identical (iterations abut).
+        span = job.iterations[-1].end - job.iterations[0].start
+        return span / len(job.iterations), job.bucket_samples
 
     # the exclusive-link baseline plan rides along as a seed candidate, so
     # the contention-aware result can never lose to the static planner on
@@ -292,7 +324,8 @@ def contended_two_jobs_plan(specs_a: Sequence[TensorSpec], t_f_a: float,
     return planner.plan_contention_aware(
         specs_a, model, evaluate, t_f=t_f_a, max_rounds=max_rounds,
         damping=damping,
-        seed_plans=(planner.make_plan(baseline_strategy, specs_a, model),))
+        seed_plans=(planner.make_plan(baseline_strategy, specs_a, model),),
+        schedule=schedule)
 
 
 @dataclasses.dataclass
@@ -407,4 +440,19 @@ CATALOG: dict[str, Callable[[], ClusterSim]] = {
     "bursty": lambda: bursty(*_syn()),
     "two_jobs": lambda: two_jobs(*_syn(), *trace.synthetic_specs(32, seed=9)),
     "pods_2x16": lambda: hierarchical_pods(*_syn()),
+    # schedule-crossed variants: the paper cluster and the contention
+    # scenarios under non-BSP iteration disciplines
+    "paper_ring_16_pipelined": lambda: paper_scaling(
+        *_syn(), 16, iters=4, schedule=PipelinedAllReduce()),
+    "paper_ring_16_1f1b": lambda: paper_scaling(
+        *_syn(), 16, iters=4, schedule=OneFoneB(4)),
+    "paper_ring_16_localsgd": lambda: paper_scaling(
+        *_syn(), 16, iters=8, schedule=LocalSGD(4)),
+    "straggler_localsgd": lambda: straggler(
+        *_syn(), 16, slow_factor=2.0, iters=8, schedule=LocalSGD(4)),
+    "bursty_pipelined": lambda: bursty(
+        *_syn(), schedule=PipelinedAllReduce()),
+    "two_jobs_pipelined": lambda: two_jobs(
+        *_syn(), *trace.synthetic_specs(32, seed=9),
+        schedule=PipelinedAllReduce()),
 }

@@ -137,6 +137,35 @@ def read_chrome_trace(path: str) -> list[Span]:
 
 
 # ---------------------------------------------------------------------------
+# Frontier lanes: per-worker iteration windows as Chrome-trace rows.
+# ---------------------------------------------------------------------------
+
+def frontier_spans(job_result, pid: str | None = None) -> list[Span]:
+    """Render a job's per-worker iteration frontiers as trace lanes.
+
+    One ``X`` span per (worker, iteration): ``[worker_start, worker_end)``
+    with the iteration index and staleness in ``args``.  Under BSP every
+    worker's spans start together (the global barrier); non-BSP schedules
+    (``repro.sim.schedules``) show the drift — local-SGD workers running
+    free between syncs, pipelined workers restarting at
+    ``max(own backward end, reduce-scatter end)``.  The lanes live in
+    their own ``pid`` group (default ``"<job>/frontier"``) so they sit
+    next to, not inside, the compute rows in Perfetto.
+    """
+    name = getattr(job_result, "name", "job")
+    group = pid if pid is not None else f"{name}/frontier"
+    spans = []
+    for it in job_result.iterations:
+        ends = dict(it.worker_end)
+        for worker, start in it.worker_start:
+            spans.append(Span(
+                name=f"iter{it.index}", cat="frontier", pid=group,
+                tid=worker, start=start, end=ends[worker],
+                args={"iter": it.index, "staleness": it.staleness}))
+    return spans
+
+
+# ---------------------------------------------------------------------------
 # Online (a, b) refit -> replan.
 # ---------------------------------------------------------------------------
 

@@ -49,6 +49,18 @@ class WorkerProfile:
         return self.slowdown * float(draw)
 
 
+def scale_array(workers: "list[WorkerProfile]", seed: int, job: str,
+                iteration: int) -> np.ndarray:
+    """Per-worker compute-scale vector for one iteration (float64).
+
+    The one array every schedule driver needs per iteration; kept here so
+    all schedules draw jitter through the identical keying (engine BSP,
+    pipelined frontiers, local-SGD rounds all replay the same scales for
+    the same (seed, job, worker, iteration))."""
+    return np.array([w.scale(seed, job, wi, iteration)
+                     for wi, w in enumerate(workers)], dtype=np.float64)
+
+
 def make_workers(n: int, *, slow: dict[int, float] | None = None,
                  jitter_sigma: float = 0.0,
                  prefix: str = "w") -> list[WorkerProfile]:

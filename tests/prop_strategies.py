@@ -1,0 +1,31 @@
+"""Shared hypothesis strategies for the property-test modules.
+
+Only imported from ``tests/test_*_props.py`` modules, each of which runs
+``pytest.importorskip("hypothesis")`` before importing this file — so a
+missing hypothesis package skips the property tests cleanly (the real
+package is installed on every CI leg; one leg exercises this skip path).
+"""
+
+import hypothesis.strategies as st
+
+from repro.core.planner import TensorSpec
+
+
+def mk_specs(sizes, times):
+    return [TensorSpec(f"t{i}", s, t) for i, (s, t) in
+            enumerate(zip(sizes, times))]
+
+
+def specs_strategy(min_n=1, max_n=8, min_bytes=1, max_bytes=1 << 22,
+                   min_t=1e-6, max_t=5e-3):
+    """(sizes, times) pairs in backward order."""
+    return st.integers(min_n, max_n).flatmap(
+        lambda n: st.tuples(
+            st.lists(st.integers(min_bytes, max_bytes),
+                     min_size=n, max_size=n),
+            st.lists(st.floats(min_t, max_t), min_size=n, max_size=n)))
+
+
+def model_strategy(min_a=0.0, max_a=2e-3, min_b=1e-11, max_b=1e-8):
+    """(a, b) all-reduce cost-model parameters."""
+    return st.tuples(st.floats(min_a, max_a), st.floats(min_b, max_b))

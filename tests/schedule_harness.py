@@ -1,0 +1,138 @@
+"""Shared conformance harness for :mod:`repro.sim.schedules`.
+
+Every :class:`~repro.sim.schedules.Schedule` implementation goes through
+one parametrized suite (tests/test_schedules.py): degenerate-case
+equivalence to BSP (exact, no tolerance — 1 worker of pipelining, H=1,
+1 micro-batch), frontier monotonicity, no-lost-gradient accounting, and a
+Chrome-trace round trip.  **Adding a schedule to the codebase means adding
+one fixture line to** ``SCHEDULE_FIXTURES`` — the suite does the rest.
+"""
+
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import MergePlan, make_plan
+from repro.sim import trace
+from repro.sim.engine import ClusterSim, JobResult, JobSpec, Topology
+from repro.sim.schedules import (BSP, LocalSGD, OneFoneB,
+                                 PipelinedAllReduce, Schedule)
+from repro.sim.workers import make_workers
+
+# One line per schedule under conformance test.  BSP rides along so the
+# suite also checks the trivial degenerate (BSP == BSP).
+SCHEDULE_FIXTURES: tuple[Schedule, ...] = (
+    BSP(),
+    PipelinedAllReduce(),                   # ag_fraction = 0.5
+    PipelinedAllReduce(ag_fraction=0.25),
+    OneFoneB(4),
+    OneFoneB(2),
+    LocalSGD(4),
+    LocalSGD(3),
+)
+
+MODEL = AllReduceModel(5e-4, 2e-9)
+
+
+def run_job(schedule: Schedule | None, *, n_tensors: int = 20,
+            seed: int = 3, n_workers: int = 4, iters: int = 6,
+            strategy: str = "mgwfbp", compute_mode: str = "events",
+            jitter_sigma: float = 0.0, sim_seed: int = 0,
+            ) -> tuple[JobResult, list, MergePlan]:
+    """One single-job cluster under ``schedule``; returns
+    (job result, spans, plan)."""
+    specs, t_f = trace.synthetic_specs(n_tensors, seed=seed)
+    plan = make_plan(strategy, specs, MODEL)
+    job = JobSpec(name="job", specs=specs, plan=plan, t_f=t_f,
+                  workers=make_workers(n_workers,
+                                       jitter_sigma=jitter_sigma),
+                  topology=Topology(MODEL, n_workers=n_workers),
+                  iters=iters, compute_mode=compute_mode,
+                  schedule=schedule)
+    res = ClusterSim([job], seed=sim_seed).run()
+    return res.job("job"), res.spans, plan
+
+
+def assert_degenerate_equals_bsp(schedule: Schedule, **kw) -> None:
+    """``schedule.degenerate()`` must reproduce BSP EXACTLY — same floats,
+    not approximately: the degenerate parameter point shares BSP's
+    arithmetic expression for expression."""
+    deg = schedule.degenerate()
+    got, _, _ = run_job(deg, **kw)
+    ref, _, _ = run_job(BSP(), **kw)
+    assert got.t_iters == ref.t_iters, (deg, got.t_iters, ref.t_iters)
+    assert got.bytes_communicated == ref.bytes_communicated
+    for a, b in zip(ref.iterations, got.iterations):
+        assert a.index == b.index
+        assert a.start == b.start and a.end == b.end
+        assert a.worker_start == b.worker_start
+        assert a.worker_end == b.worker_end
+        assert a.worker_compute == b.worker_compute
+        assert b.staleness == 0
+        assert len(a.buckets) == len(b.buckets)
+        for x, y in zip(a.buckets, b.buckets):
+            assert (x.bucket, x.nbytes) == (y.bucket, y.nbytes)
+            assert x.ready == y.ready
+            assert x.start == y.start
+            # compare fabric occupancy, not `end`: a degenerate pipelined
+            # schedule finishes its zero-cost all-gathers at the barrier,
+            # which moves `end` but not the communication time
+            assert x.duration == y.duration
+
+
+def assert_frontier_monotone(job: JobResult) -> None:
+    """Per-worker clocks never go backwards: each iteration's end is at or
+    after its start, consecutive iterations of one worker don't overlap,
+    and iteration indices/starts are ordered."""
+    prev_end: dict[str, float] = {}
+    prev_idx = -1
+    prev_start = float("-inf")
+    for it in job.iterations:
+        assert it.index == prev_idx + 1
+        prev_idx = it.index
+        assert it.start >= prev_start
+        prev_start = it.start
+        assert it.end >= it.start
+        ends = dict(it.worker_end)
+        assert set(ends) == {w for w, _ in it.worker_start}
+        for w, s in it.worker_start:
+            assert ends[w] >= s, (it.index, w)
+            if w in prev_end:
+                assert s >= prev_end[w], (it.index, w, s, prev_end[w])
+        prev_end.update(ends)
+
+
+def assert_no_lost_gradients(job: JobResult, plan: MergePlan,
+                             schedule: Schedule) -> None:
+    """Every gradient is synchronized exactly once per sync point, and no
+    gradient outlives a round: synchronous schedules sync all buckets every
+    iteration; LocalSGD(H) syncs all buckets at staleness-0 iterations, at
+    most H-1 apart, with nothing in between — and the run always ends on a
+    sync (the flush)."""
+    full = list(range(plan.num_buckets))
+    since_sync = 0
+    for it in job.iterations:
+        if schedule.synchronous:
+            assert it.staleness == 0
+        if it.staleness == 0:
+            since_sync = 0
+            assert sorted(b.bucket for b in it.buckets) == full
+        else:
+            since_sync += 1
+            assert not it.buckets, it
+            h = getattr(schedule, "h", 1)
+            assert it.staleness == since_sync < h
+    assert job.iterations[-1].staleness == 0, "run must end on a sync"
+    # fraction-weighted byte accounting agrees with the bucket records
+    # (split halves sum back to exactly one plan's worth per sync)
+    recorded = sum(b.nbytes for it in job.iterations for b in it.buckets)
+    assert abs(job.bytes_communicated - recorded) < 1e-6
+
+
+def assert_trace_roundtrips(job: JobResult, spans: list,
+                            tmp_path) -> None:
+    """Engine spans plus the per-worker frontier lanes survive a Chrome
+    trace export/import losslessly."""
+    lanes = trace.frontier_spans(job)
+    assert len(lanes) == sum(len(it.worker_start) for it in job.iterations)
+    path = str(tmp_path / "schedule_trace.json")
+    all_spans = list(spans) + lanes
+    trace.write_chrome_trace(path, all_spans)
+    assert trace.read_chrome_trace(path) == all_spans

@@ -12,60 +12,24 @@ closed form predicts at the boundary plus engine-specific invariants
 import json
 
 import pytest
-from _hypothesis_compat import hypothesis, st
 
 from repro.core.cost_model import AllReduceModel
-from repro.core.planner import (TensorSpec, make_plan, plan_brute_force,
-                                replan)
-from repro.core.simulator import cross_validate, simulate
-from repro.sim import (ClusterSim, JobSpec, Topology, event_driven_t_iter,
-                       make_workers, scenarios, trace)
+from repro.core.planner import make_plan, replan
+from repro.core.simulator import simulate
+from repro.sim import (ClusterSim, JobSpec, Topology, make_workers,
+                       scenarios, trace)
 from repro.sim.network import (FlatTopology, HierarchicalTopology,
                                invert_ring, predicted_ring)
 
 STRATEGIES = ("wfbp", "single", "mgwfbp", "dp_optimal")
 
-
-def _mk_specs(sizes, times):
-    return [TensorSpec(f"t{i}", s, t) for i, (s, t) in
-            enumerate(zip(sizes, times))]
-
-
-specs_strategy = st.integers(1, 8).flatmap(
-    lambda n: st.tuples(
-        st.lists(st.integers(1, 1 << 22), min_size=n, max_size=n),
-        st.lists(st.floats(1e-6, 5e-3), min_size=n, max_size=n)))
-
-model_strategy = st.tuples(st.floats(0, 2e-3), st.floats(1e-11, 1e-8))
+# The randomized engine == closed-form cross-validation and the straggler
+# monotonicity sweep live in tests/test_cluster_sim_props.py (hypothesis).
 
 
 # ---------------------------------------------------------------------------
 # Cross-validation against the closed form.
 # ---------------------------------------------------------------------------
-
-@hypothesis.given(specs_strategy, model_strategy, st.floats(0, 0.01),
-                  st.sampled_from(["events", "analytic"]))
-@hypothesis.settings(max_examples=60, deadline=None)
-def test_engine_matches_closed_form(sizes_times, ab, t_f, compute_mode):
-    specs = _mk_specs(*sizes_times)
-    model = AllReduceModel(*ab)
-    for strat in STRATEGIES:
-        plan = make_plan(strat, specs, model)
-        t_cf = simulate(specs, plan, model, t_f).t_iter
-        t_eng = event_driven_t_iter(specs, plan, model, t_f,
-                                    n_workers=4, compute_mode=compute_mode)
-        assert t_eng == pytest.approx(t_cf, abs=1e-9)
-
-
-@hypothesis.given(specs_strategy, model_strategy)
-@hypothesis.settings(max_examples=25, deadline=None)
-def test_engine_matches_closed_form_on_optimal_plan(sizes_times, ab):
-    """Same identity on the certified-optimal brute-force plan."""
-    specs = _mk_specs(*sizes_times)
-    model = AllReduceModel(*ab)
-    plan = plan_brute_force(specs, model)
-    cross_validate(specs, plan, model, t_f=1e-3, atol=1e-9, n_workers=3)
-
 
 def test_multi_iteration_steady_state():
     """Homogeneous BSP: every iteration takes exactly as long as the first."""
@@ -123,19 +87,6 @@ def test_deterministic_under_seed():
     other = scenarios.straggler(specs, t_f, 8, jitter_sigma=0.25, iters=4,
                                 seed=124).run()
     assert other.job("train").t_iters != runs[0].job("train").t_iters
-
-
-@hypothesis.given(st.floats(1.0, 4.0), st.floats(0.0, 2.0))
-@hypothesis.settings(max_examples=20, deadline=None)
-def test_straggler_monotonicity(factor, extra):
-    """Sequential-comm sync SGD: slowing a worker down more never makes
-    the iteration faster."""
-    specs, t_f = trace.synthetic_specs(12, seed=4)
-    t1 = scenarios.straggler(specs, t_f, 6, slow_factor=factor) \
-        .run().job("train").t_iters[-1]
-    t2 = scenarios.straggler(specs, t_f, 6, slow_factor=factor + extra) \
-        .run().job("train").t_iters[-1]
-    assert t2 >= t1 - 1e-12
 
 
 def test_straggler_slows_whole_fleet():

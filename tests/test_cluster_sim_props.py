@@ -1,0 +1,57 @@
+"""Cluster-engine property tests: engine == closed form on the shared
+domain, straggler monotonicity; skipped without the real hypothesis
+package."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+import hypothesis  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+from prop_strategies import mk_specs, model_strategy, specs_strategy  # noqa: E402
+
+from repro.core.cost_model import AllReduceModel  # noqa: E402
+from repro.core.planner import make_plan, plan_brute_force  # noqa: E402
+from repro.core.simulator import cross_validate, simulate  # noqa: E402
+from repro.sim import event_driven_t_iter, scenarios, trace  # noqa: E402
+
+STRATEGIES = ("wfbp", "single", "mgwfbp", "dp_optimal")
+SPECS = specs_strategy()
+MODELS = model_strategy()
+
+
+@hypothesis.given(SPECS, MODELS, st.floats(0, 0.01),
+                  st.sampled_from(["events", "analytic"]))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_engine_matches_closed_form(sizes_times, ab, t_f, compute_mode):
+    specs = mk_specs(*sizes_times)
+    model = AllReduceModel(*ab)
+    for strat in STRATEGIES:
+        plan = make_plan(strat, specs, model)
+        t_cf = simulate(specs, plan, model, t_f).t_iter
+        t_eng = event_driven_t_iter(specs, plan, model, t_f,
+                                    n_workers=4, compute_mode=compute_mode)
+        assert t_eng == pytest.approx(t_cf, abs=1e-9)
+
+
+@hypothesis.given(SPECS, MODELS)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_engine_matches_closed_form_on_optimal_plan(sizes_times, ab):
+    """Same identity on the certified-optimal brute-force plan."""
+    specs = mk_specs(*sizes_times)
+    model = AllReduceModel(*ab)
+    plan = plan_brute_force(specs, model)
+    cross_validate(specs, plan, model, t_f=1e-3, atol=1e-9, n_workers=3)
+
+
+@hypothesis.given(st.floats(1.0, 4.0), st.floats(0.0, 2.0))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_straggler_monotonicity(factor, extra):
+    """Sequential-comm sync SGD: slowing a worker down more never makes
+    the iteration faster."""
+    specs, t_f = trace.synthetic_specs(12, seed=4)
+    t1 = scenarios.straggler(specs, t_f, 6, slow_factor=factor) \
+        .run().job("train").t_iters[-1]
+    t2 = scenarios.straggler(specs, t_f, 6, slow_factor=factor + extra) \
+        .run().job("train").t_iters[-1]
+    assert t2 >= t1 - 1e-12

@@ -1,8 +1,10 @@
-"""All-reduce cost models (paper Table 2 / Eq. 10-11) + fitting."""
+"""All-reduce cost models (paper Table 2 / Eq. 10-11) + fitting.
+
+The randomized Eq. 11 merge-gain property lives in
+tests/test_cost_model_props.py (hypothesis)."""
 
 import numpy as np
 import pytest
-from _hypothesis_compat import hypothesis, st
 
 from repro.core import cost_model as cm
 
@@ -24,15 +26,6 @@ def test_ring_linear_startup_vs_tree_log():
     dbt128 = cm.double_binary_trees(128, 1e-5, 1e-9, 0).a
     assert ring128 / ring64 > 1.9
     assert dbt128 / dbt64 < 1.3
-
-
-@hypothesis.given(st.floats(1e-6, 1e-2), st.floats(1e-11, 1e-8),
-                  st.integers(1, 1 << 26), st.integers(1, 1 << 26))
-@hypothesis.settings(max_examples=100, deadline=None)
-def test_merge_gain_is_startup(a, b, m1, m2):
-    """Eq. 11: T(M1) + T(M2) - T(M1+M2) == a (super-additivity)."""
-    m = cm.AllReduceModel(a, b)
-    assert m.merge_gain(m1, m2) == pytest.approx(a, rel=1e-9)
 
 
 def test_fit_recovers_parameters():

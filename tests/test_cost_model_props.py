@@ -1,0 +1,20 @@
+"""Cost-model property tests (paper Eq. 11); skipped without the real
+hypothesis package."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+import hypothesis  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+
+from repro.core import cost_model as cm  # noqa: E402
+
+
+@hypothesis.given(st.floats(1e-6, 1e-2), st.floats(1e-11, 1e-8),
+                  st.integers(1, 1 << 26), st.integers(1, 1 << 26))
+@hypothesis.settings(max_examples=100, deadline=None)
+def test_merge_gain_is_startup(a, b, m1, m2):
+    """Eq. 11: T(M1) + T(M2) - T(M1+M2) == a (super-additivity)."""
+    m = cm.AllReduceModel(a, b)
+    assert m.merge_gain(m1, m2) == pytest.approx(a, rel=1e-9)

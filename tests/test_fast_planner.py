@@ -1,36 +1,17 @@
 """Incremental planner (core.planner.Planner) correctness.
 
-The anchor property: on every random instance — and after every random
-update stream (cost-model swaps, point edits, appends, truncations) — the
-incremental planner's plan achieves the same simulated iteration time as
-the O(L^2) reference ``plan_dp_optimal``, which is itself certified
-against brute force in test_planner.py.  Exact bucket equality is NOT
-asserted (the fast recurrence reassociates floating-point arithmetic, so
-knife-edge ties may resolve differently); time-equality is the meaningful
-optimality statement.
+The anchor property — on every random instance and after every random
+update stream the incremental planner matches the O(L^2) reference
+``plan_dp_optimal`` — lives in tests/test_fast_planner_props.py
+(hypothesis).  This module keeps the deterministic unit coverage.
 """
 
-import random
-
 import pytest
-from _hypothesis_compat import hypothesis, st
 
 from repro.core.cost_model import AllReduceModel
 from repro.core.planner import (Planner, SpecDelta, TensorSpec, make_plan,
                                 plan_dp_optimal, plan_incremental)
 from repro.core.simulator import simulate
-
-specs_strategy = st.integers(1, 24).flatmap(
-    lambda n: st.tuples(
-        st.lists(st.integers(0, 1 << 22), min_size=n, max_size=n),
-        st.lists(st.floats(0, 5e-3), min_size=n, max_size=n)))
-
-model_strategy = st.tuples(st.floats(0, 2e-3), st.floats(1e-11, 1e-8))
-
-
-def _mk_specs(sizes, times):
-    return [TensorSpec(f"t{i}", s, t) for i, (s, t) in
-            enumerate(zip(sizes, times))]
 
 
 def _assert_matches_reference(planner: Planner, plan=None):
@@ -39,48 +20,6 @@ def _assert_matches_reference(planner: Planner, plan=None):
     t_fast = simulate(specs, plan, model).t_iter
     t_ref = simulate(specs, plan_dp_optimal(specs, model), model).t_iter
     assert t_fast == pytest.approx(t_ref, rel=1e-9, abs=1e-15)
-
-
-@hypothesis.given(specs_strategy, model_strategy)
-@hypothesis.settings(max_examples=120, deadline=None)
-def test_matches_dp_optimal_from_scratch(sizes_times, ab):
-    specs = _mk_specs(*sizes_times)
-    _assert_matches_reference(Planner(specs, AllReduceModel(*ab)))
-
-
-@hypothesis.given(st.integers(0, 10_000))
-@hypothesis.settings(max_examples=60, deadline=None)
-def test_matches_dp_optimal_on_update_streams(seed):
-    """Random spec streams: after every delta the incremental plan still
-    matches a from-scratch reference plan — while never rebuilding."""
-    rng = random.Random(seed)
-    L = rng.randint(1, 20)
-    specs = [TensorSpec(f"t{i}", rng.randint(0, 1 << 22),
-                        rng.uniform(0, 5e-3)) for i in range(L)]
-    model = AllReduceModel(rng.uniform(0, 2e-3), rng.uniform(1e-11, 1e-8))
-    planner = Planner(specs, model)
-    _assert_matches_reference(planner)
-    for k in range(8):
-        kind = rng.choice(["model", "point", "append", "truncate"])
-        if kind == "model":
-            model = AllReduceModel(rng.uniform(0, 2e-3),
-                                   rng.uniform(1e-11, 1e-8))
-            plan = planner.update(SpecDelta(model=model))
-        elif kind == "point" and planner.num_tensors:
-            idx = rng.randrange(planner.num_tensors)
-            plan = planner.update(SpecDelta(updates={idx: TensorSpec(
-                f"u{k}", rng.randint(0, 1 << 22), rng.uniform(0, 5e-3))}))
-        elif kind == "truncate" and planner.num_tensors > 1:
-            plan = planner.update(SpecDelta(
-                truncate=rng.randint(1, planner.num_tensors)))
-        else:
-            plan = planner.update(SpecDelta(append=tuple(
-                TensorSpec(f"a{k}.{j}", rng.randint(0, 1 << 20),
-                           rng.uniform(0, 1e-3))
-                for j in range(rng.randint(1, 3)))))
-        _assert_matches_reference(planner, plan)
-    assert planner.scratch_plans == 1
-    assert planner.incremental_updates == 8
 
 
 def test_counters_track_incremental_path():

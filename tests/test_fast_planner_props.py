@@ -1,0 +1,69 @@
+"""Incremental-planner property tests: the fast DP equals the O(L^2)
+reference on random instances and after random update streams; skipped
+without the real hypothesis package."""
+
+import random
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+import hypothesis  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+from prop_strategies import mk_specs, model_strategy, specs_strategy  # noqa: E402
+
+from repro.core.cost_model import AllReduceModel  # noqa: E402
+from repro.core.planner import (Planner, SpecDelta, TensorSpec,  # noqa: E402
+                                plan_dp_optimal)
+from repro.core.simulator import simulate  # noqa: E402
+
+
+def _assert_matches_reference(planner: Planner, plan=None):
+    specs, model = list(planner.specs), planner.model
+    plan = plan if plan is not None else planner.plan()
+    t_fast = simulate(specs, plan, model).t_iter
+    t_ref = simulate(specs, plan_dp_optimal(specs, model), model).t_iter
+    assert t_fast == pytest.approx(t_ref, rel=1e-9, abs=1e-15)
+
+
+@hypothesis.given(specs_strategy(max_n=24, min_bytes=0, min_t=0),
+                  model_strategy())
+@hypothesis.settings(max_examples=120, deadline=None)
+def test_matches_dp_optimal_from_scratch(sizes_times, ab):
+    specs = mk_specs(*sizes_times)
+    _assert_matches_reference(Planner(specs, AllReduceModel(*ab)))
+
+
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=60, deadline=None)
+def test_matches_dp_optimal_on_update_streams(seed):
+    """Random spec streams: after every delta the incremental plan still
+    matches a from-scratch reference plan — while never rebuilding."""
+    rng = random.Random(seed)
+    L = rng.randint(1, 20)
+    specs = [TensorSpec(f"t{i}", rng.randint(0, 1 << 22),
+                        rng.uniform(0, 5e-3)) for i in range(L)]
+    model = AllReduceModel(rng.uniform(0, 2e-3), rng.uniform(1e-11, 1e-8))
+    planner = Planner(specs, model)
+    _assert_matches_reference(planner)
+    for k in range(8):
+        kind = rng.choice(["model", "point", "append", "truncate"])
+        if kind == "model":
+            model = AllReduceModel(rng.uniform(0, 2e-3),
+                                   rng.uniform(1e-11, 1e-8))
+            plan = planner.update(SpecDelta(model=model))
+        elif kind == "point" and planner.num_tensors:
+            idx = rng.randrange(planner.num_tensors)
+            plan = planner.update(SpecDelta(updates={idx: TensorSpec(
+                f"u{k}", rng.randint(0, 1 << 22), rng.uniform(0, 5e-3))}))
+        elif kind == "truncate" and planner.num_tensors > 1:
+            plan = planner.update(SpecDelta(
+                truncate=rng.randint(1, planner.num_tensors)))
+        else:
+            plan = planner.update(SpecDelta(append=tuple(
+                TensorSpec(f"a{k}.{j}", rng.randint(0, 1 << 20),
+                           rng.uniform(0, 1e-3))
+                for j in range(rng.randint(1, 3)))))
+        _assert_matches_reference(planner, plan)
+    assert planner.scratch_plans == 1
+    assert planner.incremental_updates == 8

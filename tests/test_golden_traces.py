@@ -1,0 +1,100 @@
+"""Golden-trace regression tests.
+
+Two small canonical scenarios — one BSP, one pipelined, fixed seed — have
+their full Chrome-trace JSON checked into ``tests/golden/``.  The tests
+re-run the scenarios and assert **exact** JSON equality (every span, every
+timestamp, bit for bit), so an engine or schedule refactor that silently
+changes timing fails loudly in review instead of drifting.
+
+If a change is *intentional*, regenerate with::
+
+    PYTHONPATH=src python tests/test_golden_traces.py --regen
+
+and commit the diff (which then documents the timing change).
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import make_plan
+from repro.sim import trace
+from repro.sim.engine import ClusterSim, JobSpec, Topology
+from repro.sim.schedules import PipelinedAllReduce
+from repro.sim.workers import make_workers
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+MODEL = AllReduceModel(4e-4, 1.5e-9)
+
+
+def _run(schedule):
+    specs, t_f = trace.synthetic_specs(10, seed=21)
+    plan = make_plan("mgwfbp", specs, MODEL)
+    job = JobSpec(name="golden", specs=specs, plan=plan, t_f=t_f,
+                  workers=make_workers(3, slow={0: 1.5},
+                                       jitter_sigma=0.1),
+                  topology=Topology(MODEL, n_workers=3), iters=3,
+                  compute_mode="events", schedule=schedule)
+    res = ClusterSim([job], seed=77).run()
+    # frontier lanes ride along so their timing is pinned too
+    spans = list(res.spans) + trace.frontier_spans(res.job("golden"))
+    return trace.to_chrome_trace(spans)
+
+
+SCENARIOS = {
+    "bsp_canonical": lambda: _run(None),
+    "pipelined_canonical": lambda: _run(PipelinedAllReduce(0.5)),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_golden_trace_exact(name):
+    path = GOLDEN_DIR / f"{name}.trace.json"
+    assert path.exists(), \
+        f"{path} missing — run `python tests/test_golden_traces.py --regen`"
+    with open(path) as f:
+        golden = json.load(f)
+    current = SCENARIOS[name]()
+    # exact equality, float for float: json round-trips Python floats
+    # losslessly (repr), so == here means the timeline is unchanged
+    if current != golden:
+        cur, gold = current["traceEvents"], golden["traceEvents"]
+        assert len(cur) == len(gold), \
+            f"{name}: {len(cur)} spans vs golden {len(gold)}"
+        for i, (a, b) in enumerate(zip(cur, gold)):
+            assert a == b, f"{name}: span {i} drifted:\n  now: {a}\n  was: {b}"
+        raise AssertionError(f"{name}: trace metadata drifted")
+
+
+def test_golden_traces_are_loadable_chrome_json():
+    """The checked-in artifacts stay valid Chrome traces (viewers load
+    them) and round-trip through the reader."""
+    for name in SCENARIOS:
+        path = GOLDEN_DIR / f"{name}.trace.json"
+        spans = trace.read_chrome_trace(str(path))
+        assert spans, name
+        with open(path) as f:
+            obj = json.load(f)
+        assert all(ev["ph"] == "X" and ev["dur"] >= 0
+                   for ev in obj["traceEvents"])
+        assert trace.to_chrome_trace(spans) == obj
+
+
+def _regen() -> None:
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for name, build in SCENARIOS.items():
+        path = GOLDEN_DIR / f"{name}.trace.json"
+        with open(path, "w") as f:
+            json.dump(build(), f, indent=1)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--regen" in sys.argv:
+        _regen()
+    else:
+        print(__doc__)

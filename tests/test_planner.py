@@ -12,65 +12,20 @@ Key property results (also reported in EXPERIMENTS.md):
 """
 
 import pytest
-from _hypothesis_compat import hypothesis, st
 
 from repro.core.cost_model import AllReduceModel
 from repro.core.planner import (MergePlan, TensorSpec, make_plan,
-                                plan_brute_force, plan_dp_optimal,
-                                plan_fixed_size, plan_mgwfbp, plan_single,
-                                plan_wfbp)
+                                plan_dp_optimal, plan_fixed_size,
+                                plan_mgwfbp, plan_single, plan_wfbp)
 from repro.core.simulator import simulate
+
+# The hypothesis property tests (DP optimality vs brute force, MG-WFBP
+# dominance, near-optimality) live in tests/test_planner_props.py.
 
 
 def _mk_specs(sizes, times):
     return [TensorSpec(f"t{i}", s, t) for i, (s, t) in
             enumerate(zip(sizes, times))]
-
-
-specs_strategy = st.integers(1, 8).flatmap(
-    lambda n: st.tuples(
-        st.lists(st.integers(1, 1 << 22), min_size=n, max_size=n),
-        st.lists(st.floats(1e-6, 5e-3), min_size=n, max_size=n),
-    ))
-
-model_strategy = st.tuples(st.floats(0, 2e-3), st.floats(1e-11, 1e-8))
-
-
-@hypothesis.given(specs_strategy, model_strategy)
-@hypothesis.settings(max_examples=150, deadline=None)
-def test_dp_optimal_is_optimal(sizes_times, ab):
-    sizes, times = sizes_times
-    specs = _mk_specs(sizes, times)
-    model = AllReduceModel(*ab)
-    t_dp = simulate(specs, plan_dp_optimal(specs, model), model).t_iter
-    t_bf = simulate(specs, plan_brute_force(specs, model), model).t_iter
-    assert t_dp <= t_bf + 1e-12
-
-
-@hypothesis.given(specs_strategy, model_strategy)
-@hypothesis.settings(max_examples=150, deadline=None)
-def test_mgwfbp_beats_or_matches_baselines(sizes_times, ab):
-    """The paper's central claim: MG-WFBP <= min(WFBP, SyncEASGD)."""
-    sizes, times = sizes_times
-    specs = _mk_specs(sizes, times)
-    model = AllReduceModel(*ab)
-    t_mg = simulate(specs, plan_mgwfbp(specs, model), model).t_iter
-    t_wfbp = simulate(specs, plan_wfbp(specs), model).t_iter
-    t_single = simulate(specs, plan_single(specs), model).t_iter
-    assert t_mg <= min(t_wfbp, t_single) + 1e-12
-
-
-@hypothesis.given(specs_strategy, model_strategy)
-@hypothesis.settings(max_examples=100, deadline=None)
-def test_mgwfbp_near_optimal(sizes_times, ab):
-    """Algorithm 1 is within 10% of the certified optimum (empirically it
-    matches exactly in ~94% of instances; see module docstring)."""
-    sizes, times = sizes_times
-    specs = _mk_specs(sizes, times)
-    model = AllReduceModel(*ab)
-    t_mg = simulate(specs, plan_mgwfbp(specs, model), model).t_iter
-    t_dp = simulate(specs, plan_dp_optimal(specs, model), model).t_iter
-    assert t_mg <= 1.10 * t_dp + 1e-12
 
 
 def test_extremes():

@@ -1,0 +1,393 @@
+"""Non-BSP schedule correctness, via the shared conformance harness.
+
+Anchors:
+
+* the BSP schedule object is the engine default and cross-validates
+  against ``core.simulator.simulate`` to 1e-9 (the PR-1 identity, now
+  stated through the Schedule API);
+* every schedule's degenerate parameter point reduces to BSP **exactly**
+  (no tolerance) in both compute modes, with and without jitter;
+* every schedule keeps per-worker clocks monotone, loses no gradients,
+  and round-trips its trace — one parametrized suite over
+  ``schedule_harness.SCHEDULE_FIXTURES``, so a new schedule is tested by
+  adding one fixture line;
+* each schedule's homogeneous closed form (``Schedule.predict_t_iter``)
+  matches the engine to 1e-9 — the schedule-aware analogue of the
+  closed-form cross-validation.
+"""
+
+import pytest
+
+from schedule_harness import (MODEL, SCHEDULE_FIXTURES,
+                              assert_degenerate_equals_bsp,
+                              assert_frontier_monotone,
+                              assert_no_lost_gradients,
+                              assert_trace_roundtrips, run_job)
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import make_plan
+from repro.core.simulator import simulate
+from repro.sim import trace
+from repro.sim.engine import ClusterSim, JobSpec, Topology, \
+    event_driven_t_iter
+from repro.sim.schedules import (BSP, DAGSchedule, DAGTask, LocalSGD,
+                                 OneFoneB, PipelinedAllReduce)
+from repro.sim.workers import make_workers
+
+IDS = [s.label for s in SCHEDULE_FIXTURES]
+
+
+# ---------------------------------------------------------------------------
+# The conformance suite: one parametrized pass over every schedule.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("schedule", SCHEDULE_FIXTURES, ids=IDS)
+@pytest.mark.parametrize("compute_mode,jitter", [("events", 0.0),
+                                                 ("analytic", 0.0),
+                                                 ("events", 0.25)])
+def test_degenerate_reduces_to_bsp(schedule, compute_mode, jitter):
+    assert_degenerate_equals_bsp(schedule, compute_mode=compute_mode,
+                                 jitter_sigma=jitter, sim_seed=11)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULE_FIXTURES, ids=IDS)
+@pytest.mark.parametrize("jitter", [0.0, 0.3])
+def test_frontier_monotonicity(schedule, jitter):
+    job, _, _ = run_job(schedule, jitter_sigma=jitter, iters=7, sim_seed=5)
+    assert_frontier_monotone(job)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULE_FIXTURES, ids=IDS)
+@pytest.mark.parametrize("strategy", ["mgwfbp", "wfbp", "single"])
+def test_no_lost_gradients(schedule, strategy):
+    job, _, plan = run_job(schedule, strategy=strategy, iters=7)
+    assert_no_lost_gradients(job, plan, schedule)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULE_FIXTURES, ids=IDS)
+def test_trace_roundtrip(schedule, tmp_path):
+    job, spans, _ = run_job(schedule, jitter_sigma=0.1, iters=4)
+    assert_trace_roundtrips(job, spans, tmp_path)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULE_FIXTURES, ids=IDS)
+def test_predict_matches_engine(schedule):
+    """Homogeneous + uncontended: the schedule's closed form equals the
+    engine's steady state to 1e-9 (cross-validation per schedule)."""
+    specs, t_f = trace.synthetic_specs(24, seed=9)
+    plan = make_plan("mgwfbp", specs, MODEL)
+    iters = 12
+    job, _, _ = run_job(schedule, n_tensors=24, seed=9, iters=iters,
+                        compute_mode="analytic")
+    if isinstance(schedule, PipelinedAllReduce):
+        # steady-state period: consecutive frontier starts
+        engine = job.iterations[-1].start - job.iterations[-2].start
+    elif isinstance(schedule, LocalSGD):
+        # per-iteration average over the last full round
+        h = schedule.h
+        first = len(job.iterations) - h
+        engine = (job.iterations[-1].end - job.iterations[first].start) / h
+    else:
+        engine = job.iterations[-1].t_iter
+    predicted = schedule.predict_t_iter(specs, plan, MODEL, t_f)
+    assert engine == pytest.approx(predicted, abs=1e-9)
+
+
+@pytest.mark.parametrize("schedule", SCHEDULE_FIXTURES, ids=IDS)
+def test_dependencies_are_acyclic(schedule):
+    """The declared dependency edges form a DAG (next-iteration nodes,
+    marked ', are distinct): the frontier can always advance."""
+    edges = schedule.dependencies(num_buckets=3)
+    assert edges
+    nodes = {n for e in edges for n in e}
+    indeg = {n: 0 for n in nodes}
+    for _, dst in edges:
+        indeg[dst] += 1
+    frontier = [n for n, d in indeg.items() if d == 0]
+    seen = 0
+    while frontier:
+        n = frontier.pop()
+        seen += 1
+        for src, dst in edges:
+            if src == n:
+                indeg[dst] -= 1
+                if indeg[dst] == 0:
+                    frontier.append(dst)
+    assert seen == len(nodes), f"cycle in {schedule.label} dependencies"
+
+
+# ---------------------------------------------------------------------------
+# BSP: the schedule API restates the engine's founding identity.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy", ["wfbp", "single", "mgwfbp",
+                                      "dp_optimal"])
+def test_bsp_cross_validates_against_closed_form(strategy):
+    specs, t_f = trace.synthetic_specs(18, seed=4)
+    model = AllReduceModel(8e-4, 3e-9)
+    plan = make_plan(strategy, specs, model)
+    t_cf = simulate(specs, plan, model, t_f).t_iter
+    for compute_mode in ("events", "analytic"):
+        t_eng = event_driven_t_iter(specs, plan, model, t_f, n_workers=4,
+                                    compute_mode=compute_mode,
+                                    schedule=BSP())
+        assert t_eng == pytest.approx(t_cf, abs=1e-9)
+
+
+def test_default_schedule_is_bsp():
+    specs, t_f = trace.synthetic_specs(10, seed=1)
+    plan = make_plan("mgwfbp", specs, MODEL)
+    kw = dict(specs=specs, plan=plan, t_f=t_f, workers=make_workers(3),
+              topology=Topology(MODEL), iters=3)
+    implicit = ClusterSim([JobSpec(name="a", **kw)]).run().job("a")
+    explicit = ClusterSim([JobSpec(name="a", schedule=BSP(), **kw)]) \
+        .run().job("a")
+    assert implicit.t_iters == explicit.t_iters
+    assert [it.worker_start for it in implicit.iterations] == \
+        [it.worker_start for it in explicit.iterations]
+
+
+# ---------------------------------------------------------------------------
+# Schedule-specific behaviour.
+# ---------------------------------------------------------------------------
+
+def test_pipelined_overlap_beats_bsp_period():
+    """Deferring the all-gather helps whenever it fits under the next
+    forward (the DeAR regime); construct that regime and check the
+    steady-state period drops below BSP's iteration time."""
+    specs, t_f = trace.synthetic_specs(24, seed=9)
+    model = AllReduceModel(3e-4, 6e-10)     # light enough: f*comm < t_f
+    plan = make_plan("mgwfbp", specs, model)
+    comm = sum(model.time(b) for b in plan.bucket_bytes(specs))
+    assert 0.5 * comm < t_f, "fixture must sit in the DeAR regime"
+
+    def run(schedule):
+        job_spec = JobSpec(name="j", specs=specs, plan=plan, t_f=t_f,
+                           workers=make_workers(4),
+                           topology=Topology(model), iters=8,
+                           compute_mode="analytic", schedule=schedule)
+        return ClusterSim([job_spec]).run().job("j")
+
+    bsp = run(None)
+    pipe = run(PipelinedAllReduce(0.5))
+    period = pipe.iterations[-1].start - pipe.iterations[-2].start
+    assert period < bsp.t_iters[-1] - 1e-12
+
+
+def test_pipelined_bucket_occupancy_excludes_deferral_gap():
+    """BucketTiming.duration must be fabric occupancy (RS + AG), not the
+    whole ready->all-gather-end window — (a, b) refits depend on it."""
+    job, _, _ = run_job(PipelinedAllReduce(0.5), iters=3)
+    model_t = MODEL.time
+    for it in job.iterations:
+        for b in it.buckets:
+            assert b.duration <= b.end - b.start + 1e-12
+            assert b.duration == pytest.approx(model_t(b.nbytes), rel=1e-9)
+
+
+def test_pipelined_staleness_free_and_worker_frontiers_drift():
+    """With a straggler the pipelined frontier lets fast workers start the
+    next forward before the slow one finishes backward... is false under
+    synchronous RS (the last reduce-scatter gates everyone); what DOES
+    drift is the backward start, via the per-worker fwd_end vs ag_done
+    race.  Assert the frontier invariant that holds: every worker starts
+    at max(own bwd end, rs end) >= the slow worker's compute end only at
+    sync, and staleness stays 0."""
+    specs, t_f = trace.synthetic_specs(16, seed=6)
+    plan = make_plan("mgwfbp", specs, MODEL)
+    job_spec = JobSpec(name="j", specs=specs, plan=plan, t_f=t_f,
+                       workers=make_workers(3, slow={0: 2.0}),
+                       topology=Topology(MODEL), iters=4,
+                       compute_mode="analytic",
+                       schedule=PipelinedAllReduce(0.5))
+    job = ClusterSim([job_spec]).run().job("j")
+    for it in job.iterations:
+        assert it.staleness == 0
+    assert_frontier_monotone(job)
+
+
+def test_pipelined_worker_compute_excludes_ag_wait():
+    """worker_compute is the per-host forward+backward seconds a
+    StragglerMonitor consumes: the fleet-wide all-gather stall must not
+    leak into it, or a 2x straggler looks like noise under pipelining."""
+    specs, t_f = trace.synthetic_specs(16, seed=6)
+    model = AllReduceModel(5e-3, 2e-7)      # comm-heavy: big ag_wait
+    plan = make_plan("mgwfbp", specs, model)
+    job_spec = JobSpec(name="j", specs=specs, plan=plan, t_f=t_f,
+                       workers=make_workers(3, slow={0: 2.0}),
+                       topology=Topology(model), iters=4,
+                       compute_mode="analytic",
+                       schedule=PipelinedAllReduce(0.5))
+    job = ClusterSim([job_spec]).run().job("j")
+    for it in job.iterations:
+        compute = dict(it.worker_compute)
+        assert compute["w0"] / compute["w1"] == pytest.approx(2.0, rel=1e-9)
+
+
+def test_localsgd_staleness_and_traffic():
+    job, _, plan = run_job(LocalSGD(4), iters=8)
+    assert [it.staleness for it in job.iterations] == [1, 2, 3, 0] * 2
+    bsp, _, _ = run_job(BSP(), iters=8)
+    assert job.bytes_communicated == pytest.approx(
+        bsp.bytes_communicated / 4)
+    # only sync iterations carry buckets
+    assert all(bool(it.buckets) == (it.staleness == 0)
+               for it in job.iterations)
+
+
+def test_localsgd_truncated_final_round_flushes():
+    """iters not divisible by H: the run still ends on a sync."""
+    job, _, plan = run_job(LocalSGD(4), iters=6)
+    assert [it.staleness for it in job.iterations] == [1, 2, 3, 0, 1, 0]
+    assert_no_lost_gradients(job, plan, LocalSGD(4))
+
+
+def test_localsgd_absorbs_jitter_better_than_bsp():
+    """A barrier every step pays the fleet max of every draw
+    (sum-of-maxes); a barrier every H steps pays the max of each worker's
+    H-step sum (max-of-sums <=).  Compare on a comm-free model so only
+    the barrier discipline differs."""
+    specs, t_f = trace.synthetic_specs(16, seed=8)
+    model = AllReduceModel(0.0, 0.0)
+    plan = make_plan("single", specs, model)
+
+    def total(schedule):
+        job_spec = JobSpec(name="j", specs=specs, plan=plan, t_f=t_f,
+                           workers=make_workers(8, jitter_sigma=0.3),
+                           topology=Topology(model), iters=8,
+                           compute_mode="analytic", schedule=schedule)
+        job = ClusterSim([job_spec], seed=3).run().job("j")
+        return job.iterations[-1].end - job.iterations[0].start
+
+    assert total(LocalSGD(4)) < total(None) - 1e-12
+
+
+def test_onefoneb_compresses_overlap_window():
+    """Gradient accumulation pushes every bucket's readiness into the last
+    micro-batch's backward: less overlap, never a faster iteration than
+    BSP on the same plan."""
+    bsp, _, _ = run_job(BSP(), iters=3, compute_mode="analytic")
+    for m in (2, 4, 8):
+        f1b, _, _ = run_job(OneFoneB(m), iters=3, compute_mode="analytic")
+        assert f1b.t_iters[-1] >= bsp.t_iters[-1] - 1e-12
+        # compute totals unchanged: backward_end - start == t_f + t_b
+        for a, b in zip(bsp.iterations, f1b.iterations):
+            assert b.backward_end - b.start == \
+                pytest.approx(a.backward_end - a.start, rel=1e-9)
+
+
+def test_hooks_fire_under_schedules():
+    """Per-iteration hooks (the elastic machinery) still work off-BSP:
+    swap the plan mid-run under each schedule and check it takes effect."""
+    specs, t_f = trace.synthetic_specs(16, seed=12)
+    plan = make_plan("wfbp", specs, MODEL)
+    merged = make_plan("single", specs, MODEL)
+
+    def hook(sim, run, it):
+        run.plan = merged
+
+    for schedule in (None, PipelinedAllReduce(0.5), OneFoneB(2),
+                     LocalSGD(2)):
+        job_spec = JobSpec(name="j", specs=specs, plan=plan, t_f=t_f,
+                           workers=make_workers(2),
+                           topology=Topology(MODEL), iters=4,
+                           compute_mode="analytic", schedule=schedule,
+                           hooks={1: hook})
+        job = ClusterSim([job_spec]).run().job("j")
+        synced = [it for it in job.iterations if it.buckets]
+        assert len(synced[0].buckets) == plan.num_buckets
+        assert len(synced[-1].buckets) == 1
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError):
+        OneFoneB(0)
+    with pytest.raises(ValueError):
+        LocalSGD(0)
+    with pytest.raises(ValueError):
+        PipelinedAllReduce(1.0)
+    with pytest.raises(ValueError):
+        PipelinedAllReduce(-0.1)
+    specs, t_f = trace.synthetic_specs(4, seed=1)
+    plan = make_plan("single", specs, MODEL)
+    kw = dict(name="j", specs=specs, plan=plan, t_f=t_f,
+              workers=make_workers(2), topology=Topology(MODEL))
+    with pytest.raises(ValueError):
+        JobSpec(comm_mode="concurrent",
+                schedule=PipelinedAllReduce(0.5), **kw)
+    with pytest.raises(TypeError):
+        JobSpec(schedule="pipelined", **kw)
+
+
+def test_dag_schedule_executes_and_validates():
+    tasks = (
+        DAGTask("fwd", duration=1.0, worker="w0"),
+        DAGTask("bwd", duration=2.0, worker="w0", deps=("fwd",)),
+        DAGTask("ar", duration=0.5, link="net", deps=("bwd",)),
+        DAGTask("opt", duration=0.1, worker="w0", deps=("ar",)),
+    )
+    specs, t_f = trace.synthetic_specs(2, seed=1)
+    job_spec = JobSpec(name="dag", specs=[], plan=make_plan("wfbp", []),
+                       t_f=0.0, workers=make_workers(1),
+                       topology=Topology(MODEL),
+                       schedule=DAGSchedule(tasks))
+    res = ClusterSim([job_spec]).run()
+    job = res.job("dag")
+    assert job.iterations[0].end == pytest.approx(3.6)
+    assert {s.name for s in res.spans} == {"fwd", "bwd", "ar", "opt"}
+    with pytest.raises(ValueError):        # cycle
+        DAGSchedule((DAGTask("a", deps=("b",)), DAGTask("b", deps=("a",))))
+    with pytest.raises(ValueError):        # dangling dep
+        DAGSchedule((DAGTask("a", deps=("ghost",)),))
+    with pytest.raises(ValueError):        # multi-iteration graphs
+        JobSpec(name="dag", specs=[], plan=make_plan("wfbp", []), t_f=0.0,
+                workers=make_workers(1), topology=Topology(MODEL),
+                iters=2, schedule=DAGSchedule(tasks))
+
+
+def test_frontier_spans_render_lanes():
+    job, _, _ = run_job(LocalSGD(3), iters=6, jitter_sigma=0.2)
+    lanes = trace.frontier_spans(job)
+    assert all(s.cat == "frontier" and s.pid == "job/frontier"
+               for s in lanes)
+    by_iter = {}
+    for s in lanes:
+        by_iter.setdefault(s.args["iter"], []).append(s)
+    assert sorted(by_iter) == [it.index for it in job.iterations]
+    for it in job.iterations:
+        starts = dict(it.worker_start)
+        for s in by_iter[it.index]:
+            assert s.start == starts[s.tid]
+            assert s.args["staleness"] == it.staleness
+
+
+def test_contention_fixpoint_under_schedule():
+    """planner.plan_contention_aware(schedule=...) optimizes bucketing for
+    the schedule actually running and still never loses to its seeds."""
+    from repro.sim import scenarios
+    specs, t_f = trace.synthetic_specs(32, seed=20)
+    for schedule in (PipelinedAllReduce(0.5), LocalSGD(2)):
+        fix = scenarios.contended_two_jobs_plan(
+            specs, t_f, specs, t_f, n_workers=16, iters=2, damping=0.3,
+            schedule=schedule)
+        assert fix.converged
+        assert len(fix.rounds) <= 6
+        seed_round = fix.rounds[0]          # the mgwfbp seed plan
+        assert fix.observed_t <= seed_round.observed_t + 1e-12
+
+
+def test_merging_gains_less_under_pipelined():
+    """The headline structural claim (cf. DeAR): deferring all-gathers
+    already hides part of the communication, so merged-gradient bucketing
+    buys less than it does under BSP."""
+    specs, t_f = trace.synthetic_specs(40, seed=13, t_b_total=20e-3)
+
+    def gain(schedule):
+        ts = {}
+        for strategy in ("wfbp", "mgwfbp"):
+            job, _, _ = run_job(schedule, n_tensors=40, seed=13, iters=6,
+                                strategy=strategy, compute_mode="analytic")
+            ts[strategy] = (job.iterations[-1].end -
+                            job.iterations[0].start)
+        return ts["wfbp"] / ts["mgwfbp"]
+
+    assert gain(PipelinedAllReduce(0.5)) < gain(BSP()) - 1e-9

@@ -1,0 +1,38 @@
+"""Closed-form simulator property tests (paper Eqs. 6-8 invariants);
+skipped without the real hypothesis package."""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+import hypothesis  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+from prop_strategies import mk_specs, specs_strategy  # noqa: E402
+
+from repro.core.cost_model import AllReduceModel  # noqa: E402
+from repro.core.planner import make_plan  # noqa: E402
+from repro.core.simulator import simulate  # noqa: E402
+
+
+@hypothesis.given(specs_strategy(max_n=10, max_bytes=1 << 24, max_t=1e-2),
+                  st.floats(0, 1e-3), st.floats(1e-11, 1e-8),
+                  st.floats(0, 0.1))
+@hypothesis.settings(max_examples=150, deadline=None)
+def test_timeline_invariants(sizes_times, a, b, t_f):
+    specs = mk_specs(*sizes_times)
+    model = AllReduceModel(a, b)
+    for strategy in ("wfbp", "single", "mgwfbp"):
+        res = simulate(specs, make_plan(strategy, specs, model), model, t_f)
+        # Eq. 7: a bucket's comm starts no earlier than its readiness and
+        # no earlier than the previous bucket's end.
+        prev_end = 0.0
+        for ev in res.events:
+            assert ev.start >= ev.ready - 1e-12
+            assert ev.start >= prev_end - 1e-12
+            assert ev.end == pytest.approx(
+                ev.start + model.time(ev.nbytes), abs=1e-12)
+            prev_end = ev.end
+        assert res.comm_end >= res.t_b_total - 1e-12
+        assert res.t_iter == pytest.approx(t_f + res.comm_end, abs=1e-12)
+        assert res.t_c_no >= -1e-12
+        assert 0.0 <= res.overlap_ratio <= 1.0 + 1e-12

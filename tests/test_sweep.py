@@ -4,15 +4,14 @@ The contract: on the closed form's valid domain (single job, sequential
 comm, no background traffic — heterogeneity and jitter included) the
 batched recurrence equals the event engine per point to 1e-9; off that
 domain the sweep transparently falls back to the engine and says so.
+
+The randomized batched-recurrence == simulate() property lives in
+tests/test_sweep_props.py (hypothesis).
 """
 
 import numpy as np
 import pytest
-from _hypothesis_compat import hypothesis, st
 
-from repro.core.simulator import batched_comm_end, simulate
-from repro.core.planner import TensorSpec, make_plan
-from repro.core.cost_model import AllReduceModel
 from repro.sim import scenarios, trace
 from repro.sim.engine import ClusterSim, JobSpec
 from repro.sim.network import Burst, FlatTopology
@@ -35,26 +34,6 @@ def test_closed_form_valid_conditions():
     assert closed_form_valid()
     assert not closed_form_valid(comm_mode="concurrent")
     assert not closed_form_valid(bursts=[Burst("net", 0.0, 1.0)])
-
-
-@hypothesis.given(st.integers(0, 10_000))
-@hypothesis.settings(max_examples=15, deadline=None)
-def test_batched_comm_end_matches_simulate(seed):
-    """The vectorized recurrence degenerates to simulate() at one point."""
-    rng = np.random.default_rng(seed)
-    L = int(rng.integers(1, 16))
-    specs = [TensorSpec(f"t{i}", int(rng.integers(0, 1 << 22)),
-                        float(rng.uniform(0, 5e-3))) for i in range(L)]
-    model = AllReduceModel(float(rng.uniform(0, 2e-3)),
-                           float(rng.uniform(1e-11, 1e-8)))
-    t_f = float(rng.uniform(0, 0.01))
-    plan = make_plan("mgwfbp", specs, model)
-    res = simulate(specs, plan, model, t_f)
-    prefix = np.cumsum([s.t_b for s in specs])
-    ready = t_f + prefix[[b[-1] for b in plan.buckets]]
-    bucket_t = np.array([model.time(b) for b in plan.bucket_bytes(specs)])
-    end = batched_comm_end(bucket_t, ready, t_f + prefix[-1])
-    assert float(end) == pytest.approx(t_f + res.comm_end, abs=1e-12)
 
 
 def test_sweep_matches_engine_heterogeneous():

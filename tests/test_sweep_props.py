@@ -1,0 +1,34 @@
+"""Batched-sweep property tests; skipped without the real hypothesis
+package."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+import hypothesis  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+
+from repro.core.cost_model import AllReduceModel  # noqa: E402
+from repro.core.planner import TensorSpec, make_plan  # noqa: E402
+from repro.core.simulator import batched_comm_end, simulate  # noqa: E402
+
+
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_batched_comm_end_matches_simulate(seed):
+    """The vectorized recurrence degenerates to simulate() at one point."""
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(1, 16))
+    specs = [TensorSpec(f"t{i}", int(rng.integers(0, 1 << 22)),
+                        float(rng.uniform(0, 5e-3))) for i in range(L)]
+    model = AllReduceModel(float(rng.uniform(0, 2e-3)),
+                           float(rng.uniform(1e-11, 1e-8)))
+    t_f = float(rng.uniform(0, 0.01))
+    plan = make_plan("mgwfbp", specs, model)
+    res = simulate(specs, plan, model, t_f)
+    prefix = np.cumsum([s.t_b for s in specs])
+    ready = t_f + prefix[[b[-1] for b in plan.buckets]]
+    bucket_t = np.array([model.time(b) for b in plan.bucket_bytes(specs)])
+    end = batched_comm_end(bucket_t, ready, t_f + prefix[-1])
+    assert float(end) == pytest.approx(t_f + res.comm_end, abs=1e-12)
