@@ -13,6 +13,11 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
                      pipelined all-reduce vs 1F1B vs local SGD, asserting
                      merged bucketing helps less off-BSP; CI also runs
                      `cluster_sim.py --schedules` as a fast smoke step)
+  coplanner        — multi-job co-planning (repro.core.coplanner): joint
+                     makespan of co-planned vs one-sided-fixpoint vs
+                     independently-planned MG-WFBP vs WFBP on shared
+                     fabric, incl. a mixed-schedule 3-job fleet (CI also
+                     runs `cluster_sim.py --coplan` as a smoke step)
   planner_bench    — §4.2 one-time O(L^2) cost + the incremental planner
                      fast path (>= 10x replan speedup enforced)
   kernels_bench    — kernels  (structural tile/bandwidth notes)
@@ -36,6 +41,7 @@ import traceback
 BENCH_JSON = {
     "planner_bench": "BENCH_planner.json",
     "cluster_sim": "BENCH_cluster_sim.json",
+    "coplanner": "BENCH_coplanner.json",
 }
 
 
@@ -65,6 +71,7 @@ def main() -> None:
         ("nonoverlap", nonoverlap.run),
         ("scaling_sim", scaling_sim.run),
         ("cluster_sim", cluster_sim.run),
+        ("coplanner", cluster_sim.run_coplan),
         ("planner_bench", planner_bench.run),
         ("kernels_bench", kernels_bench.run),
         ("roofline", roofline.run),

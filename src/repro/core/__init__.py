@@ -19,7 +19,17 @@ from repro.core.planner import (
     plan_mgwfbp,
     plan_dp_optimal,
     plan_brute_force,
+    plan_contention_aware,
     replan,
+)
+from repro.core.coplanner import (
+    CoJob,
+    CoObservation,
+    CoPlanResult,
+    CoPlanner,
+    CoRound,
+    JobObservation,
+    coplan,
 )
 from repro.core.simulator import (simulate, speedup, compare_strategies,
                                   cross_validate, SimResult)
@@ -30,7 +40,10 @@ __all__ = [
     "production_comm_model", "PAPER_CLUSTERS",
     "TensorSpec", "MergePlan", "make_plan", "plan_wfbp", "plan_single",
     "plan_fixed_size", "plan_mgwfbp", "plan_dp_optimal", "plan_brute_force",
-    "replan", "simulate", "speedup", "compare_strategies", "cross_validate",
+    "plan_contention_aware", "replan",
+    "CoJob", "CoObservation", "CoPlanResult", "CoPlanner", "CoRound",
+    "JobObservation", "coplan",
+    "simulate", "speedup", "compare_strategies", "cross_validate",
     "SimResult",
     "bucketer", "comm", "profiler",
 ]

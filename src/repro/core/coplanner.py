@@ -1,0 +1,346 @@
+"""Multi-job co-planning: shared-link best-response over merge plans.
+
+MG-WFBP's optimal bucketing (and the DP fast path in ``planner.py``)
+assumes an exclusive link.  PR 2's contention fixpoint
+(:func:`repro.core.planner.plan_contention_aware`) corrected the *model*
+— plan, simulate in the contended environment, refit the effective
+(a, b), replan — but only for ONE job against a frozen neighbour.  On a
+shared fabric every job is somebody's neighbour: each job's plan shapes
+the contention every other job observes (the coupled task-graph view of
+S-SGD, arXiv:1805.03812), and the *shape* of that contention depends on
+each job's iteration schedule (DeAR's bursty reduce-scatter phases vs
+BSP's end-of-iteration wall, arXiv:2302.12445).
+
+:class:`CoPlanner` closes the loop jointly, with **alternating**
+best-response rounds — each round sweeps the jobs, and each sub-step:
+
+1. **simulates all jobs together** — one ``evaluate(plans)`` call
+   returns, per job, the achieved iteration time and the observed
+   per-collective (nbytes, occupancy) samples, plus the joint makespan.
+   The engine's per-flow-owner link accounting attributes every sample
+   to the job that owns the collective: job A's sample set never
+   contains job B's collectives or background ``Burst`` flows, while
+   each sample's *duration* deliberately embeds the processor-sharing
+   stretch those neighbours cause — that stretch is exactly what the
+   effective model must capture;
+2. **refits the sub-step's job's effective (a, b)** from its own samples
+   (:func:`planner.effective_model`), damped against the previous
+   estimate — each job is refit once per sweep, at its own sub-step,
+   from the freshest observation, so the damping strength means the
+   same thing for one job as for ten.  In *shared-effective-model* mode
+   the fit instead pools the samples of every job sharing the link into
+   ONE contended model per link;
+3. **replans that job** with its incremental :class:`~planner.Planner`
+   under its refit model, so the next sub-step's simulation shows the
+   remaining jobs their neighbour's *new* plan (simultaneous replanning
+   instead oscillates between mirror assignments on symmetric fleets);
+   each job's per-round prediction uses its own schedule's closed form
+   (``Schedule.predict_t_iter``), so a pipelined job and a local-SGD job
+   are each optimized for the discipline they actually run;
+4. **accept/reject**: the incumbent is the best *observed* assignment by
+   joint makespan; iteration stops when a full sweep leaves the
+   assignment fixed, the assignment revisits (deterministic cycle), or
+   ``max_rounds`` sweeps are exhausted — at most
+   ``len(jobs) * max_rounds`` evaluated response rounds.
+
+The result can never be worse than the seed assignment on the evaluated
+environment: the round-0 exclusive-link plans and every caller-supplied
+seed plan are in the evaluated candidate set, and the best observed
+assignment wins (the same guarantee the single-job fixpoint made, lifted
+to the joint objective).
+
+``plan_contention_aware`` is now literally the N=1 special case: it
+builds one :class:`CoJob`, adapts its ``evaluate`` to the joint
+signature, and converts the result back through
+:meth:`CoPlanResult.fixpoint` — reproducing the PR-2 loop round for
+round (pinned by tests/test_coplanner.py and the pre-existing fixpoint
+tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+from repro.core import cost_model
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import (FixpointResult, FixpointRound, MergePlan,
+                                Planner, TensorSpec, effective_model)
+
+
+@dataclasses.dataclass(frozen=True)
+class CoJob:
+    """The planning-side view of one job sharing the fabric.
+
+    ``model`` is the job's exclusive-link cost model (its round-0 plan and
+    the baseline its effective model is refit from); ``schedule`` (a
+    ``repro.sim.schedules.Schedule`` or None for BSP) selects the closed
+    form used for per-round predictions; ``seed_plans`` are static
+    baselines the co-plan must not lose to (evaluated with every other
+    job on its round-0 plan); ``links`` names the fabric links this job's
+    collectives occupy — used only by shared-effective-model mode to pool
+    occupancy samples per link (leave empty to keep the job on per-job
+    refit).
+    """
+
+    name: str
+    specs: tuple[TensorSpec, ...]
+    model: AllReduceModel
+    t_f: float = 0.0
+    schedule: object | None = None
+    seed_plans: tuple[MergePlan, ...] = ()
+    links: tuple[str, ...] = ()
+
+    def predict(self, plan: MergePlan, model: AllReduceModel) -> float:
+        """Closed-form iteration time under this job's schedule."""
+        if self.schedule is not None:
+            return self.schedule.predict_t_iter(self.specs, plan, model,
+                                                self.t_f)
+        from repro.core.simulator import simulate   # local import: no cycle
+        return simulate(self.specs, plan, model, self.t_f).t_iter
+
+
+@dataclasses.dataclass(frozen=True)
+class JobObservation:
+    """What one job experienced in one joint evaluation.
+
+    ``samples`` — the refit input — are this job's own collectives only
+    (the engine attributes each to its flow owner); their durations
+    embed the contention stretch the neighbours cause.  ``link_bytes`` /
+    ``link_busy`` carry the job's per-link byte/bandwidth-share totals
+    (background bursts accounted separately, never here) — diagnostic
+    telemetry for callers and round records, not a refit input.
+    """
+
+    t_iter: float                                # achieved s/iteration
+    samples: tuple[tuple[int, float], ...]       # (nbytes, occupancy s)
+    link_bytes: tuple[tuple[str, float], ...] = ()
+    link_busy: tuple[tuple[str, float], ...] = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class CoObservation:
+    """One joint simulation of every job under a candidate assignment."""
+
+    makespan: float                              # joint objective (s)
+    jobs: Mapping[str, JobObservation]
+
+
+# evaluate(plans: job name -> candidate MergePlan) -> CoObservation
+CoEvaluate = Callable[[Mapping[str, MergePlan]], CoObservation]
+
+
+@dataclasses.dataclass(frozen=True)
+class CoRound:
+    """One evaluated assignment: a seed candidate or a best-response round."""
+
+    kind: str                                    # "seed" | "response"
+    plans: Mapping[str, MergePlan]
+    models: Mapping[str, AllReduceModel]         # effective, AFTER refit
+    planned_under: Mapping[str, AllReduceModel]  # models the plans came from
+    observation: CoObservation
+    predicted: Mapping[str, float]               # per-job closed form
+
+    @property
+    def makespan(self) -> float:
+        return self.observation.makespan
+
+
+@dataclasses.dataclass(frozen=True)
+class CoPlanResult:
+    plans: Mapping[str, MergePlan]               # best observed assignment
+    models: Mapping[str, AllReduceModel]         # that round's refit models
+    rounds: tuple[CoRound, ...]
+    converged: bool                              # fixed point or exact cycle
+    best_round: int
+
+    @property
+    def makespan(self) -> float:
+        return self.rounds[self.best_round].observation.makespan
+
+    def observed_t(self, name: str) -> float:
+        """Best round's achieved iteration time for one job."""
+        return self.rounds[self.best_round].observation.jobs[name].t_iter
+
+    def fixpoint(self, name: str) -> FixpointResult:
+        """Single-job view of the joint run, in the PR-2 fixpoint types.
+
+        With one job this is a lossless conversion (the joint makespan IS
+        the job's observed time); with several it narrates the co-plan
+        from one job's perspective — note ``best_round`` is still chosen
+        by the JOINT objective.
+        """
+        rounds = tuple(
+            FixpointRound(plan=r.plans[name], model=r.models[name],
+                          observed_t=r.observation.jobs[name].t_iter,
+                          predicted_t=r.predicted[name],
+                          planned_under=r.planned_under[name])
+            for r in self.rounds)
+        return FixpointResult(plan=self.plans[name], model=self.models[name],
+                              rounds=rounds, converged=self.converged,
+                              best_round=self.best_round)
+
+
+class CoPlanner:
+    """Alternating best-response co-planner over N jobs on shared links.
+
+    ``evaluate`` simulates (or measures) ALL jobs together under a
+    candidate assignment; evaluations are deterministic in the assignment
+    and cached, so seed candidates and fixed-point revisits never pay for
+    the same simulation twice.  ``damping`` weights each refit against
+    the previous effective model (suppressing the two-cycle oscillation a
+    full-step update can fall into — now per job).  With
+    ``shared_model=True`` jobs that declare their ``links`` are refit
+    from the *aggregate* per-link sample pool instead of their own
+    samples only: one contended :class:`AllReduceModel` per link, the
+    right regime when co-located jobs run comparable collectives and the
+    per-job sample streams are too thin to fit alone.
+    """
+
+    def __init__(self, jobs: Sequence[CoJob], evaluate: CoEvaluate, *,
+                 max_rounds: int = 5, damping: float = 0.5,
+                 shared_model: bool = False):
+        if not 0.0 < damping <= 1.0:
+            raise ValueError(f"damping must be in (0, 1], got {damping}")
+        if max_rounds < 1:
+            raise ValueError("need >= 1 round")
+        names = [j.name for j in jobs]
+        if not names:
+            raise ValueError("need >= 1 job")
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate job names: {names}")
+        self.jobs = tuple(jobs)
+        self.evaluate = evaluate
+        self.max_rounds = max_rounds
+        self.damping = damping
+        self.shared_model = shared_model
+
+    # -- internals -------------------------------------------------------
+
+    def _key(self, plans: Mapping[str, MergePlan]) -> tuple:
+        return tuple((j.name, plans[j.name].buckets) for j in self.jobs)
+
+    def _refit(self, obs: CoObservation, eff: dict[str, AllReduceModel],
+               job: CoJob) -> None:
+        """One damped effective-model update for ``job`` (step 2).
+
+        Exactly one job per sub-step: refitting the whole fleet at every
+        sub-step would blend each model N times per sweep, silently
+        scaling the damping strength with fleet size."""
+        samples: Sequence[tuple[int, float]] = obs.jobs[job.name].samples
+        if self.shared_model and len(job.links) == 1:
+            # donors must live on exactly the same single link: a
+            # multi-link job's whole-collective durations embed time on
+            # its OTHER links and would bias the per-link fit
+            pooled: list[tuple[int, float]] = []
+            for j in self.jobs:
+                if j.links == job.links:
+                    pooled.extend(obs.jobs[j.name].samples)
+            if pooled:
+                samples = pooled
+        fitted = effective_model(samples, eff[job.name])
+        eff[job.name] = cost_model.blend(eff[job.name], fitted,
+                                         self.damping)
+
+    # -- the loop --------------------------------------------------------
+
+    def run(self) -> CoPlanResult:
+        jobs = self.jobs
+        planners = {j.name: Planner(list(j.specs), j.model) for j in jobs}
+        plans = {j.name: planners[j.name].plan() for j in jobs}
+        eff = {j.name: j.model for j in jobs}
+        rounds: list[CoRound] = []
+        best_round = 0
+        cache: dict[tuple, CoObservation] = {}
+
+        def observe(assignment: Mapping[str, MergePlan]) -> CoObservation:
+            k = self._key(assignment)
+            if k not in cache:
+                cache[k] = self.evaluate(dict(assignment))
+            return cache[k]
+
+        def predict_all(assignment: Mapping[str, MergePlan]
+                        ) -> dict[str, float]:
+            return {j.name: j.predict(assignment[j.name], eff[j.name])
+                    for j in jobs}
+
+        def push(round_: CoRound) -> None:
+            nonlocal best_round
+            rounds.append(round_)
+            if round_.makespan < rounds[best_round].makespan:
+                best_round = len(rounds) - 1
+
+        # seed candidates: each job's static baselines against everyone
+        # else's round-0 plan — evaluate only, no refit.
+        pushed: set[tuple] = set()
+        for j in jobs:
+            for sp in j.seed_plans:
+                assignment = {**plans, j.name: sp}
+                pushed.add(self._key(assignment))
+                push(CoRound("seed", assignment, dict(eff), dict(eff),
+                             observe(assignment), predict_all(assignment)))
+        # ... plus the fully independent assignment (every job on its
+        # primary seed plan at once): that is the "each job planned alone
+        # under the exclusive-link model" baseline the co-plan must not
+        # lose to.  Skipped when it coincides with an assignment already
+        # in the candidate set (always true for N=1, which keeps the
+        # single-job delegation round-for-round identical to PR 2).
+        combined = {j.name: (j.seed_plans[0] if j.seed_plans
+                             else plans[j.name]) for j in jobs}
+        if self._key(combined) not in pushed | {self._key(plans)}:
+            push(CoRound("seed", combined, dict(eff), dict(eff),
+                         observe(combined), predict_all(combined)))
+
+        # Alternating (Gauss-Seidel) best response: each round sweeps the
+        # jobs in order, and each sub-step simulates ALL jobs together
+        # under the current assignment, refits every job's effective
+        # (a, b) from its own telemetry, then replans ONE job — so the
+        # next job responds to its neighbour's *new* plan, not the
+        # round-start snapshot.  (A job's DP replan depends only on its
+        # own effective model; the neighbours' plans enter through the
+        # observation that shapes the refit, which is why the
+        # re-observation between sub-steps is what makes the response
+        # "alternating".)  Simultaneous replanning instead oscillates
+        # between mirror assignments on symmetric fleets and never finds
+        # the asymmetric equilibria that actually minimize the joint
+        # makespan.  With one job, a sweep IS the PR-2 fixpoint round.
+        seen: set[tuple] = {self._key(plans)}
+        converged = False
+        for _ in range(self.max_rounds):
+            changed = False
+            for j in jobs:
+                planned_under = dict(eff)
+                obs = observe(plans)                   # step 1 (cached if
+                self._refit(obs, eff, j)               # unchanged); step 2
+                push(CoRound("response", dict(plans), dict(eff),
+                             planned_under, obs, predict_all(plans)))
+                new_plan = planners[j.name].replan(eff[j.name])  # step 3
+                if new_plan.buckets == plans[j.name].buckets:
+                    continue
+                changed = True
+                plans = {**plans, j.name: new_plan}
+                if self._key(plans) in seen:
+                    # exact assignment revisit: the deterministic loop can
+                    # only cycle from here — stop, keep the best observed.
+                    converged = True
+                    break
+                seen.add(self._key(plans))
+            else:
+                if not changed:
+                    converged = True                   # joint fixed point
+                    break
+                continue
+            break
+
+        best = rounds[best_round]
+        return CoPlanResult(plans=dict(best.plans), models=dict(best.models),
+                            rounds=tuple(rounds), converged=converged,
+                            best_round=best_round)
+
+
+def coplan(jobs: Sequence[CoJob], evaluate: CoEvaluate, *,
+           max_rounds: int = 5, damping: float = 0.5,
+           shared_model: bool = False) -> CoPlanResult:
+    """One-shot convenience wrapper around :class:`CoPlanner`."""
+    return CoPlanner(jobs, evaluate, max_rounds=max_rounds, damping=damping,
+                     shared_model=shared_model).run()

@@ -605,66 +605,30 @@ def plan_contention_aware(
     collective's finish time, which remains the right objective for every
     in-order schedule (only the effective (a, b) and the prediction
     change); ``None`` means BSP, exactly as before.
+
+    This is the N=1 special case of :mod:`repro.core.coplanner`: one
+    :class:`~repro.core.coplanner.CoJob` whose joint makespan IS its own
+    iteration time, run through the same best-response machinery that
+    co-plans N jobs — round for round the PR-2 loop (the pre-existing
+    fixpoint tests pin the equivalence).
     """
-    from repro.core.simulator import simulate   # local import: no cycle
+    from repro.core import coplanner    # local import: no cycle
 
-    if not 0.0 < damping <= 1.0:
-        raise ValueError(f"damping must be in (0, 1], got {damping}")
-    if max_rounds < 1:
-        raise ValueError("need >= 1 round")
+    job = coplanner.CoJob(name="job", specs=tuple(specs), model=model,
+                          t_f=t_f, schedule=schedule,
+                          seed_plans=tuple(seed_plans))
 
-    def predict(p: MergePlan, m: AllReduceModel) -> float:
-        if schedule is not None:
-            return schedule.predict_t_iter(specs, p, m, t_f)
-        return simulate(specs, p, m, t_f).t_iter
-    planner = Planner(specs, model)
-    plan = planner.plan()
-    eff = model
-    rounds: list[FixpointRound] = []
-    best_round = 0
-    # evaluations are deterministic in the plan, so never pay for the same
-    # plan twice (a seed plan often IS the round-0 plan)
-    cache: dict[tuple, tuple] = {}
+    def joint_evaluate(plans: Mapping[str, MergePlan]
+                       ) -> "coplanner.CoObservation":
+        observed, samples = evaluate(plans["job"])
+        return coplanner.CoObservation(
+            makespan=observed,
+            jobs={"job": coplanner.JobObservation(
+                t_iter=observed, samples=tuple(samples))})
 
-    def observe(p: MergePlan) -> tuple:
-        if p.buckets not in cache:
-            cache[p.buckets] = evaluate(p)
-        return cache[p.buckets]
-
-    def push(round_: FixpointRound) -> None:
-        nonlocal best_round
-        rounds.append(round_)
-        if round_.observed_t < rounds[best_round].observed_t:
-            best_round = len(rounds) - 1
-
-    for sp in seed_plans:               # static baselines: evaluate only
-        observed, _ = observe(sp)
-        push(FixpointRound(sp, eff, observed, predict(sp, eff),
-                           planned_under=eff))
-    seen: set[tuple] = {plan.buckets}
-    converged = False
-    for _ in range(max_rounds):
-        planned_under = eff
-        observed, samples = observe(plan)
-        fitted = effective_model(samples, eff)
-        eff = cost_model.blend(eff, fitted, damping)
-        push(FixpointRound(plan, eff, observed, predict(plan, eff),
-                           planned_under=planned_under))
-        new_plan = planner.replan(eff)
-        if new_plan.buckets == plan.buckets:
-            converged = True
-            break
-        if new_plan.buckets in seen:
-            # exact revisit: the deterministic loop can only cycle from
-            # here — stop and keep the best observed plan.
-            converged = True
-            break
-        seen.add(new_plan.buckets)
-        plan = new_plan
-    best = rounds[best_round]
-    return FixpointResult(plan=best.plan, model=best.model,
-                          rounds=tuple(rounds), converged=converged,
-                          best_round=best_round)
+    co = coplanner.CoPlanner([job], joint_evaluate, max_rounds=max_rounds,
+                             damping=damping)
+    return co.run().fixpoint("job")
 
 
 def plan_brute_force(specs: Sequence[TensorSpec], model: AllReduceModel) -> MergePlan:

@@ -20,6 +20,7 @@ from repro.sim.engine import (
     event_driven_t_iter,
 )
 from repro.sim.network import (
+    BACKGROUND_OWNER,
     Burst,
     FlatTopology,
     HierarchicalTopology,
@@ -70,7 +71,8 @@ __all__ = [
     "BucketTiming", "ClusterResult", "ClusterSim", "Engine",
     "IterationResult", "JobResult", "JobSpec", "Link",
     "event_driven_t_iter",
-    "Burst", "FlatTopology", "HierarchicalTopology", "Phase", "Topology",
+    "BACKGROUND_OWNER", "Burst", "FlatTopology", "HierarchicalTopology",
+    "Phase", "Topology",
     "invert_double_binary_trees", "invert_halving_doubling", "invert_model",
     "invert_ring", "predicted_model", "predicted_ring",
     "topology_for_cluster",

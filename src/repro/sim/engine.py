@@ -30,6 +30,7 @@ form cannot express.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import heapq
 from typing import Callable, Mapping, Sequence
@@ -38,7 +39,7 @@ import numpy as np
 
 from repro.core.planner import MergePlan, TensorSpec
 from repro.sim.events import EventQueue
-from repro.sim.network import Burst, Phase, Topology
+from repro.sim.network import BACKGROUND_OWNER, Burst, Phase, Topology
 from repro.sim.trace import Span
 from repro.sim.workers import WorkerProfile, scale_array
 
@@ -79,6 +80,7 @@ class _Flow:
     target: float             # cumulative link service at which flow drains
     seq: int                  # deterministic tie-break (insertion order)
     on_done: Callable[[], None] = dataclasses.field(compare=False)
+    owner: str = dataclasses.field(default=BACKGROUND_OWNER, compare=False)
 
     def __lt__(self, other: "_Flow") -> bool:
         return (self.target, self.seq) < (other.target, other.seq)
@@ -97,6 +99,23 @@ class Link:
     the next completion is a heap peek, and a membership change costs
     O(log flows) — stale completion events are invalidated by a generation
     counter exactly as before.
+
+    **Per-owner accounting.**  Every flow is tagged with its owner (the job
+    name; background claimants from :class:`~repro.sim.network.Burst` use
+    the reserved :data:`~repro.sim.network.BACKGROUND_OWNER`).  The link
+    tracks, per owner, the bytes admitted (``owner_bytes``) and the
+    bandwidth-share seconds received (``owner_busy``): over an interval
+    ``dt`` with ``C`` claimants, each of an owner's ``k`` live flows
+    receives ``dt/C`` of service, so the owner is charged ``k * dt/C``.
+    Shares over all owners (background included) sum to the link's total
+    busy wall time (``busy_s``) — the conservation law the telemetry
+    property tests assert.  The attribution gives multi-job planners
+    (``repro.core.coplanner``) a per-job view of the fabric: each job's
+    observed collectives (and bytes) are its own — a burst or neighbour
+    never shows up as a sample in another job's refit, though the
+    *durations* of a job's own collectives still embed the
+    processor-sharing stretch those claimants cause (which is exactly
+    what an effective contended (a, b) must capture).
     """
 
     def __init__(self, engine: Engine, name: str):
@@ -108,6 +127,10 @@ class Link:
         self._last = 0.0
         self._gen = 0
         self._seq = 0
+        self.busy_s = 0.0         # wall seconds with >= 1 live flow
+        self.owner_bytes: dict[str, float] = {}
+        self.owner_busy: dict[str, float] = {}
+        self._owner_flows: collections.Counter[str] = collections.Counter()
 
     @property
     def n_flows(self) -> int:
@@ -119,16 +142,32 @@ class Link:
     def _advance(self) -> None:
         now = self.engine.now
         if self._heap and now > self._last:
-            self._service += (now - self._last) / self._claimants()
+            dt = now - self._last
+            per_flow = dt / self._claimants()
+            self._service += per_flow
+            self.busy_s += dt
+            busy = self.owner_busy
+            for owner, k in self._owner_flows.items():
+                if k:
+                    busy[owner] = busy.get(owner, 0.0) + per_flow * k
+            if self.background:
+                busy[BACKGROUND_OWNER] = busy.get(BACKGROUND_OWNER, 0.0) \
+                    + per_flow * self.background
         self._last = now
 
-    def add_flow(self, volume: float, on_done: Callable[[], None]) -> None:
+    def add_flow(self, volume: float, on_done: Callable[[], None], *,
+                 owner: str = BACKGROUND_OWNER, nbytes: float = 0.0) -> None:
+        if nbytes > 0:
+            self.owner_bytes[owner] = \
+                self.owner_bytes.get(owner, 0.0) + nbytes
         if volume <= 0:
             on_done()
             return
         self._advance()
         heapq.heappush(self._heap,
-                       _Flow(self._service + volume, self._seq, on_done))
+                       _Flow(self._service + volume, self._seq, on_done,
+                             owner))
+        self._owner_flows[owner] += 1
         self._seq += 1
         self._reschedule()
 
@@ -163,12 +202,24 @@ class Link:
             # to advance the clock can never drain — count it done (the
             # error is below one float ulp of the current timestamp).
             if remaining <= _EPS or now + remaining * c <= now:
-                done.append(heapq.heappop(self._heap))
+                f = heapq.heappop(self._heap)
+                self._owner_flows[f.owner] -= 1
+                done.append(f)
             else:
                 break
         self._reschedule()
         for f in done:
             f.on_done()
+
+    def telemetry(self, owner: str) -> tuple[float, float]:
+        """(bytes admitted, bandwidth-share seconds) for one owner so far.
+
+        Shares are accrued lazily on membership changes; account for the
+        open interval since the last event so mid-flight reads (iteration
+        boundaries of an overlapping job) are exact."""
+        self._advance()
+        return (self.owner_bytes.get(owner, 0.0),
+                self.owner_busy.get(owner, 0.0))
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +269,17 @@ class IterationResult:
     # at the end of this iteration: 0 for every synchronous schedule, s for
     # the s-th unsynced step of a LocalSGD(H) round.
     staleness: int = 0
+    # per-link fabric telemetry attributed to THIS job, **cumulative** as of
+    # the moment this record was built: (link, bytes admitted) and
+    # (link, bandwidth-share seconds received).  Cumulative — not per-window
+    # deltas — because iterations of overlapping schedules (pipelined tails,
+    # LocalSGD round flushes) have no exact per-iteration traffic window;
+    # the last record is the job's exact total, and consecutive records
+    # diff to per-iteration footprints where windows do abut.  Background
+    # Burst traffic is accounted under a reserved owner and never appears
+    # here.
+    link_bytes: tuple[tuple[str, float], ...] = ()
+    link_busy: tuple[tuple[str, float], ...] = ()
 
     @property
     def t_iter(self) -> float:
@@ -292,6 +354,17 @@ class JobResult:
         return [(b.nbytes, b.duration)
                 for it in self.iterations for b in it.buckets]
 
+    @property
+    def link_telemetry(self) -> dict[str, tuple[float, float]]:
+        """Final per-link (bytes, bandwidth-share seconds) for this job —
+        the last iteration's cumulative ``link_bytes``/``link_busy``."""
+        if not self.iterations:
+            return {}
+        last = self.iterations[-1]
+        busy = dict(last.link_busy)
+        return {link: (nbytes, busy.get(link, 0.0))
+                for link, nbytes in last.link_bytes}
+
 
 class _JobRun:
     """Engine-side context for one job.
@@ -363,7 +436,8 @@ class _JobRun:
 
             def transfer() -> None:
                 link = self.sim.links[ph.link]
-                link.add_flow(ph.volume(nbytes), lambda: finish())
+                link.add_flow(ph.volume(nbytes), lambda: finish(),
+                              owner=self.name, nbytes=nbytes * fraction)
 
             def finish() -> None:
                 args = {"iter": it, "bucket": k, "bytes": nbytes,
@@ -382,7 +456,16 @@ class _JobRun:
 
     def finish_iteration(self, result: IterationResult) -> bool:
         """Record one finished iteration, fire its hook, advance the
-        iteration counter.  Returns True while more iterations remain."""
+        iteration counter.  Returns True while more iterations remain.
+
+        Stamps the record with the job's cumulative per-link telemetry
+        (every schedule driver funnels through here, so the attribution is
+        schedule-agnostic)."""
+        tele = self.sim.job_link_telemetry(self.name)
+        result = dataclasses.replace(
+            result,
+            link_bytes=tuple((l, b) for l, (b, _) in tele.items()),
+            link_busy=tuple((l, s) for l, (_, s) in tele.items()))
         self.result.iterations.append(result)
         hook = self.spec.hooks.get(result.index)
         if hook is not None:
@@ -403,6 +486,13 @@ class ClusterResult:
 
     def job(self, name: str) -> JobResult:
         return self.jobs[name]
+
+    @property
+    def makespan(self) -> float:
+        """Joint makespan: latest job end minus earliest job start — the
+        objective multi-job co-planning minimizes."""
+        return max(r.iterations[-1].end for r in self.jobs.values()) - \
+            min(r.iterations[0].start for r in self.jobs.values())
 
 
 class ClusterSim:
@@ -441,6 +531,19 @@ class ClusterSim:
     def ensure_links(self, topology: Topology) -> None:
         for name in topology.links:
             self.ensure_link(name)
+
+    def job_link_telemetry(self, owner: str) -> dict[str,
+                                                     tuple[float, float]]:
+        """Cumulative per-link (bytes, bandwidth-share seconds) attributed
+        to one flow owner (a job name, or
+        :data:`~repro.sim.network.BACKGROUND_OWNER` for burst traffic).
+        Links the owner never touched are omitted."""
+        out = {}
+        for name in sorted(self.links):
+            nbytes, busy = self.links[name].telemetry(owner)
+            if nbytes or busy:
+                out[name] = (nbytes, busy)
+        return out
 
     def record(self, span: Span) -> None:
         self.spans.append(span)

@@ -146,11 +146,20 @@ class HierarchicalTopology(Topology):
                                     self.chips_per_pod, **self._params)
 
 
+# Reserved flow-owner name for background (Burst) claimants in the link
+# accounting.  Job names can never collide with it (JobSpec names are
+# user-visible identifiers; this one is deliberately non-identifier-like),
+# so per-job link telemetry — and therefore every (a, b) refit sample the
+# co-planner consumes — structurally excludes burst traffic.
+BACKGROUND_OWNER = "<background>"
+
+
 @dataclasses.dataclass(frozen=True)
 class Burst:
     """Background traffic: ``flows`` extra processor-sharing claimants on
     ``link`` during [start, end) — a bursty neighbour job, a checkpoint
-    write storm, an incast."""
+    write storm, an incast.  In the link accounting its bandwidth share is
+    attributed to :data:`BACKGROUND_OWNER`, never to a job."""
 
     link: str
     start: float

@@ -14,11 +14,18 @@ Each builder assembles a ready-to-run :class:`ClusterSim`:
   ``examples/elastic_replan.py``, now closed inside the simulator; any
   invertible collective algorithm, optionally contention-aware);
 * ``bursty``           — background traffic bursts contending on the link;
-* ``two_jobs``         — two training jobs sharing one network;
-* ``contended_two_jobs_plan`` — the contention-aware planning fixpoint
-  (``planner.plan_contention_aware``) evaluated against the two-job
-  scenario: plan under the exclusive-link model, simulate with contention,
-  refit the effective (a, b) from the observed stretch, replan.
+* ``shared_link_jobs`` — N independent training jobs sharing one network,
+  each a :class:`CoJobSpec` with its own profile, schedule and strategy
+  (``two_jobs`` is the N=2 wrapper);
+* ``contended_jobs_plan`` — **joint** contention-aware planning: all N
+  jobs replan together through ``repro.core.coplanner.CoPlanner``
+  (simulate together -> per-job effective (a, b) refit from link-owner
+  telemetry -> per-schedule replan -> best observed assignment by joint
+  makespan);
+* ``contended_two_jobs_plan`` — the PR-2 one-sided fixpoint
+  (``planner.plan_contention_aware``): optimize ONE job against a frozen
+  neighbour plan.  Kept as the baseline the joint co-plan is benchmarked
+  against (you control your own job; the neighbour does not cooperate).
 
 Builders take ``(specs, t_f)`` so callers choose the profile source
 (``benchmarks/paper_profiles.py``, ``core/profiler.py`` measurements, or
@@ -34,9 +41,10 @@ variants (``*_pipelined`` / ``*_1f1b`` / ``*_localsgd``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from typing import Callable, Mapping, Sequence
 
-from repro.core import cost_model, planner
+from repro.core import coplanner, cost_model, planner
+from repro.core.coplanner import CoJob, CoObservation, JobObservation
 from repro.core.planner import MergePlan, Planner, TensorSpec
 from repro.sim import network, trace
 from repro.sim.engine import ClusterSim, JobSpec
@@ -150,11 +158,12 @@ def elastic_resize(specs: Sequence[TensorSpec], t_f: float, *,
     workers/topology/plan.  With ``strategy="dp_incremental"`` the replan
     reuses the planner's DP frontier instead of starting from scratch.
 
-    With ``contention_aware=True`` the hook goes one step further and runs
-    the plan->simulate->refit fixpoint (planner.plan_contention_aware)
-    against a post-resize probe simulation that includes ``bursts`` — so
-    the plan the job resumes with is fitted to the *contended* fabric, not
-    the exclusive-link model.
+    With ``contention_aware=True`` the hook goes one step further and
+    replans through the co-planner (planner.plan_contention_aware, the
+    N=1 ``repro.core.coplanner.CoPlanner``) against a post-resize probe
+    simulation that includes ``bursts`` — so the plan the job resumes
+    with is fitted to the *contended* fabric, not the exclusive-link
+    model.
     """
     topo = FlatTopology(algorithm, n_before, alpha, beta, gamma)
     plan, replan, inc = _strategy_planner(strategy, specs,
@@ -238,6 +247,67 @@ def bursty(specs: Sequence[TensorSpec], t_f: float, n_workers: int = 16,
     return ClusterSim([job], seed=seed, bursts=bursts)
 
 
+@dataclasses.dataclass(frozen=True)
+class CoJobSpec:
+    """Planning-level description of one co-located training job.
+
+    The N-job analogue of ``(specs_x, t_f_x, plan_x)`` from the old
+    two-job entry points: each job carries its own profile, forward time,
+    iteration schedule, merge strategy, membership and start offset.
+    ``n_workers=None`` inherits the scenario-level worker count."""
+
+    name: str
+    specs: tuple[TensorSpec, ...]
+    t_f: float
+    strategy: str = "mgwfbp"
+    schedule: Schedule | None = None
+    n_workers: int | None = None
+    start_time: float = 0.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "specs", tuple(self.specs))
+        if self.t_f < 0:
+            raise ValueError(f"negative t_f: {self}")
+
+
+def shared_link_jobs(jobs: Sequence[CoJobSpec], *, n_workers: int = 8,
+                     algorithm: str = "ring", alpha: float = PAPER_ALPHA,
+                     beta: float = PAPER_BETA, gamma: float = PAPER_GAMMA,
+                     iters: int = 2, compute_mode: str = "analytic",
+                     seed: int = 0,
+                     plans: Mapping[str, MergePlan] | None = None,
+                     bursts: Sequence[Burst] = ()) -> ClusterSim:
+    """N independent jobs time-sharing one network — every job's
+    collectives contend via processor sharing on the common link, and the
+    link's per-owner accounting attributes bytes/occupancy per job.
+
+    ``plans`` pins individual jobs' merge plans (co-planners evaluate
+    candidate assignments this way); unpinned jobs plan with their own
+    ``strategy`` under the exclusive-link model for their membership.
+    Mixed schedules are the interesting regime: a pipelined job spreads
+    its traffic under the neighbours' forwards while a local-SGD job
+    bursts at sync steps."""
+    plans = dict(plans or {})
+    unknown = set(plans) - {j.name for j in jobs}
+    if unknown:
+        raise ValueError(f"plans pin unknown jobs: {sorted(unknown)}")
+    out = []
+    for j in jobs:
+        n = j.n_workers if j.n_workers is not None else n_workers
+        topo = FlatTopology(algorithm, n, alpha, beta, gamma)
+        plan = plans.get(j.name)
+        if plan is None:
+            plan = planner.make_plan(j.strategy, j.specs,
+                                     topo.linear_model())
+        out.append(JobSpec(name=j.name, specs=list(j.specs), plan=plan,
+                           t_f=j.t_f,
+                           workers=make_workers(n, prefix=j.name + ".w"),
+                           topology=topo, iters=iters,
+                           start_time=j.start_time,
+                           compute_mode=compute_mode, schedule=j.schedule))
+    return ClusterSim(out, seed=seed, bursts=list(bursts))
+
+
 def two_jobs(specs_a: Sequence[TensorSpec], t_f_a: float,
              specs_b: Sequence[TensorSpec], t_f_b: float, *,
              n_workers: int = 8, stagger: float = 0.0,
@@ -248,27 +318,86 @@ def two_jobs(specs_a: Sequence[TensorSpec], t_f_a: float,
              plan_a: MergePlan | None = None,
              plan_b: MergePlan | None = None,
              schedule: Schedule | None = None) -> ClusterSim:
-    """Two independent jobs time-sharing one network — their all-reduces
-    contend via processor sharing on the common link.  Pass ``plan_a`` /
-    ``plan_b`` to pin a job's merge plan (the contention-aware fixpoint
-    evaluates candidate plans this way); otherwise both jobs plan with
-    ``strategy`` under the exclusive-link model.  ``schedule`` applies to
-    both jobs (the contention regime changes with the discipline —
-    pipelined jobs spread their traffic, local-SGD jobs burst at syncs)."""
-    topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
-    model = topo.linear_model()
-    jobs = []
-    for name, specs, t_f, start, plan in (
-            ("job_a", specs_a, t_f_a, 0.0, plan_a),
-            ("job_b", specs_b, t_f_b, stagger, plan_b)):
-        if plan is None:
-            plan = planner.make_plan(strategy, specs, model)
-        jobs.append(JobSpec(name=name, specs=list(specs), plan=plan,
-                            t_f=t_f, workers=make_workers(n_workers,
-                                                          prefix=name + ".w"),
-                            topology=topo, iters=iters, start_time=start,
-                            compute_mode=compute_mode, schedule=schedule))
-    return ClusterSim(jobs, seed=seed)
+    """Two independent jobs time-sharing one network (the N=2 wrapper
+    around :func:`shared_link_jobs`, kept for the original call sites).
+    Pass ``plan_a`` / ``plan_b`` to pin a job's merge plan; ``schedule``
+    applies to both jobs."""
+    plans = {}
+    if plan_a is not None:
+        plans["job_a"] = plan_a
+    if plan_b is not None:
+        plans["job_b"] = plan_b
+    jobs = [CoJobSpec("job_a", tuple(specs_a), t_f_a, strategy=strategy,
+                      schedule=schedule),
+            CoJobSpec("job_b", tuple(specs_b), t_f_b, strategy=strategy,
+                      schedule=schedule, start_time=stagger)]
+    return shared_link_jobs(jobs, n_workers=n_workers, algorithm=algorithm,
+                            alpha=alpha, beta=beta, gamma=gamma,
+                            iters=iters, compute_mode=compute_mode,
+                            seed=seed, plans=plans)
+
+
+def contended_jobs_plan(jobs: Sequence[CoJobSpec], *, n_workers: int = 8,
+                        algorithm: str = "ring",
+                        alpha: float = PAPER_ALPHA,
+                        beta: float = PAPER_BETA,
+                        gamma: float = PAPER_GAMMA, iters: int = 2,
+                        compute_mode: str = "analytic", seed: int = 0,
+                        max_rounds: int = 5, damping: float = 0.5,
+                        shared_model: bool = False,
+                        bursts: Sequence[Burst] = (),
+                        ) -> "coplanner.CoPlanResult":
+    """Jointly co-plan N jobs sharing one network.
+
+    Every job replans through :class:`repro.core.coplanner.CoPlanner`:
+    each best-response round simulates ALL jobs together on the shared
+    link (via :func:`shared_link_jobs`), refits each job's effective
+    (a, b) from its own observed collectives — the link's per-owner
+    accounting keeps neighbours' traffic and background ``bursts`` out of
+    the samples — and replans each job under its own schedule's closed
+    form.  The objective is the **joint makespan** (latest job end minus
+    earliest job start across the whole run), and each job's
+    exclusive-link ``strategy`` plan rides along as a seed candidate, so
+    the co-planned assignment can never lose to independent planning on
+    this scenario.
+
+    With ``shared_model=True`` the refit pools all jobs' samples on the
+    common link into one contended model per link (the right regime when
+    the co-located jobs run comparable collectives; per-job refit is the
+    default).  Per-job observed times are span-based rates (pipelined
+    iterations overlap, so per-iteration windows would double-count)."""
+    jobs = tuple(jobs)
+    co_jobs = []
+    for j in jobs:
+        n = j.n_workers if j.n_workers is not None else n_workers
+        topo = FlatTopology(algorithm, n, alpha, beta, gamma)
+        model = topo.linear_model()
+        co_jobs.append(CoJob(
+            name=j.name, specs=j.specs, model=model, t_f=j.t_f,
+            schedule=j.schedule,
+            seed_plans=(planner.make_plan(j.strategy, j.specs, model),),
+            links=(topo.link,)))
+
+    def evaluate(candidate: Mapping[str, MergePlan]) -> CoObservation:
+        sim = shared_link_jobs(jobs, n_workers=n_workers,
+                               algorithm=algorithm, alpha=alpha, beta=beta,
+                               gamma=gamma, iters=iters,
+                               compute_mode=compute_mode, seed=seed,
+                               plans=candidate, bursts=bursts)
+        res = sim.run()
+        observed = {}
+        for j in jobs:
+            jr = res.job(j.name)
+            span = jr.iterations[-1].end - jr.iterations[0].start
+            observed[j.name] = JobObservation(
+                t_iter=span / len(jr.iterations),
+                samples=tuple(jr.bucket_samples),
+                link_bytes=jr.iterations[-1].link_bytes,
+                link_busy=jr.iterations[-1].link_busy)
+        return CoObservation(makespan=res.makespan, jobs=observed)
+
+    return coplanner.coplan(co_jobs, evaluate, max_rounds=max_rounds,
+                            damping=damping, shared_model=shared_model)
 
 
 def contended_two_jobs_plan(specs_a: Sequence[TensorSpec], t_f_a: float,
@@ -283,12 +412,15 @@ def contended_two_jobs_plan(specs_a: Sequence[TensorSpec], t_f_a: float,
                             max_rounds: int = 5, damping: float = 0.5,
                             schedule: Schedule | None = None,
                             ) -> "planner.FixpointResult":
-    """Contention-aware plan for job_a sharing the fabric with job_b.
+    """One-sided contention-aware plan for job_a with a frozen neighbour.
 
     The neighbour job_b keeps its exclusive-link ``baseline_strategy`` plan
     (you control your own job, not the neighbour's); job_a's plan iterates
-    through ``planner.plan_contention_aware`` with the two-job engine
-    scenario as the evaluation environment.  The fixpoint's objective is
+    through ``planner.plan_contention_aware`` — i.e. the N=1 co-planner —
+    with the two-job engine scenario as the evaluation environment.  When
+    you control *every* job on the link, use :func:`contended_jobs_plan`
+    instead: jointly replanning the fleet dominates this one-sided loop
+    (asserted by the co-plan benchmark).  The fixpoint's objective is
     job_a's mean iteration time; observed per-bucket (bytes, duration)
     samples — which embed the processor-sharing stretch — drive the
     effective (a, b) refit.
@@ -336,6 +468,9 @@ class EvictionReport:
     evictions: list[tuple[int, tuple[str, ...]]] = \
         dataclasses.field(default_factory=list)
     plans: list[MergePlan] = dataclasses.field(default_factory=list)
+    # one co-planner fixpoint per eviction when contention_aware=True
+    fixpoints: list["planner.FixpointResult"] = \
+        dataclasses.field(default_factory=list)
 
     @property
     def evicted_workers(self) -> list[str]:
@@ -352,6 +487,8 @@ def straggler_eviction(specs: Sequence[TensorSpec], t_f: float,
                        alpha: float = PAPER_ALPHA, beta: float = PAPER_BETA,
                        gamma: float = PAPER_GAMMA,
                        compute_mode: str = "analytic", seed: int = 0,
+                       contention_aware: bool = False,
+                       bursts: Sequence[Burst] = (),
                        ) -> tuple[ClusterSim, EvictionReport]:
     """Straggler mitigation in the loop: monitor -> evict -> replan.
 
@@ -363,15 +500,35 @@ def straggler_eviction(specs: Sequence[TensorSpec], t_f: float,
     (a, b).  Synchronous SGD's step time is a max over workers, so evicting
     a 3x straggler immediately recovers the fleet's pace (the sim twin of
     what ``fault.StragglerMonitor`` + the launcher do in production).
+
+    With ``contention_aware=True`` the post-eviction replan goes through
+    the co-planner (``planner.plan_contention_aware``, the N=1
+    :class:`repro.core.coplanner.CoPlanner`): the shrunken fleet is probed
+    against the contended fabric — including ``bursts`` — so the replaced
+    plan is fitted to what the survivors will actually experience, not to
+    the exclusive-link model.  The fixpoint lands in
+    ``EvictionReport.fixpoints`` per eviction.
     """
     from repro.train.fault import StragglerMonitor  # lazy: keeps sim light
 
     topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
-    plan, replan, _ = _strategy_planner(strategy, specs,
-                                        topo.linear_model())
+    plan, replan, inc = _strategy_planner(strategy, specs,
+                                          topo.linear_model())
     monitor = StragglerMonitor(threshold=threshold, warmup=warmup)
     report = EvictionReport(monitor=monitor, plans=[plan])
     slow = {i: slow_factor for i in range(min(slow_workers, n_workers))}
+
+    def probe(n_alive: int):
+        """Evaluate a candidate plan on the post-eviction fabric."""
+        def evaluate(candidate: MergePlan):
+            job = JobSpec(name="probe", specs=list(specs), plan=candidate,
+                          t_f=t_f, workers=make_workers(n_alive),
+                          topology=topo.rescale(n_alive), iters=1,
+                          compute_mode=compute_mode)
+            res = ClusterSim([job], seed=seed, bursts=list(bursts)).run()
+            jr = res.job("probe")
+            return jr.iterations[-1].t_iter, jr.bucket_samples
+        return evaluate
 
     def hook(sim: ClusterSim, run, it: int) -> None:
         for name, seconds in run.result.iterations[-1].worker_compute:
@@ -386,7 +543,16 @@ def straggler_eviction(specs: Sequence[TensorSpec], t_f: float,
             monitor.counts.pop(name, None)
         run.workers = keep
         run.topology = run.topology.rescale(len(keep))
-        run.plan = replan(run.topology.linear_model())
+        if contention_aware:
+            fix = planner.plan_contention_aware(
+                specs, run.topology.linear_model(), probe(len(keep)),
+                t_f=t_f)
+            report.fixpoints.append(fix)
+            run.plan = fix.plan
+            if inc is not None:     # keep the shared planner's model fresh
+                replan(fix.model)
+        else:
+            run.plan = replan(run.topology.linear_model())
         sim.ensure_links(run.topology)
         report.evictions.append((it, tuple(flagged)))
         report.plans.append(run.plan)
@@ -396,7 +562,7 @@ def straggler_eviction(specs: Sequence[TensorSpec], t_f: float,
                                        jitter_sigma=jitter_sigma),
                   topology=topo, iters=iters, compute_mode=compute_mode,
                   hooks={i: hook for i in range(iters)})
-    return ClusterSim([job], seed=seed), report
+    return ClusterSim([job], seed=seed, bursts=list(bursts)), report
 
 
 def hierarchical_pods(specs: Sequence[TensorSpec], t_f: float, *,
@@ -419,6 +585,26 @@ def hierarchical_pods(specs: Sequence[TensorSpec], t_f: float, *,
 
 def _syn():
     return trace.synthetic_specs(48, seed=7)
+
+
+def _mixed_schedule_jobs(n_tensors: int = 24) -> list[CoJobSpec]:
+    """Three co-located jobs under different iteration disciplines."""
+    a, t_f_a = trace.synthetic_specs(n_tensors, seed=7)
+    b, t_f_b = trace.synthetic_specs(n_tensors, seed=9)
+    c, t_f_c = trace.synthetic_specs(n_tensors, seed=11)
+    return [
+        CoJobSpec("bsp_job", tuple(a), t_f_a),
+        CoJobSpec("pipelined_job", tuple(b), t_f_b,
+                  schedule=PipelinedAllReduce()),
+        CoJobSpec("localsgd_job", tuple(c), t_f_c, schedule=LocalSGD(2)),
+    ]
+
+
+def _coplanned_three_jobs() -> ClusterSim:
+    """Mixed-schedule 3-job cluster running its co-planned assignment."""
+    jobs = _mixed_schedule_jobs(16)
+    fix = contended_jobs_plan(jobs, n_workers=8, iters=2, max_rounds=2)
+    return shared_link_jobs(jobs, n_workers=8, iters=2, plans=fix.plans)
 
 
 CATALOG: dict[str, Callable[[], ClusterSim]] = {
@@ -455,4 +641,12 @@ CATALOG: dict[str, Callable[[], ClusterSim]] = {
     "two_jobs_pipelined": lambda: two_jobs(
         *_syn(), *trace.synthetic_specs(32, seed=9),
         schedule=PipelinedAllReduce()),
+    # N-job co-planning: mixed-schedule fleets on one link, independently
+    # planned and jointly co-planned (repro.core.coplanner)
+    "three_jobs_mixed": lambda: shared_link_jobs(
+        _mixed_schedule_jobs(), n_workers=8, iters=2),
+    "three_jobs_coplanned": _coplanned_three_jobs,
+    "straggler_evict_contended": lambda: straggler_eviction(
+        *_syn(), 8, slow_factor=3.0, contention_aware=True,
+        bursts=(Burst("net", 0.0, 60.0, flows=2),))[0],
 }

@@ -861,7 +861,8 @@ class _DAGDriver:
 
         if t.link is not None:
             run.sim.ensure_link(t.link)
-            run.sim.links[t.link].add_flow(t.duration, done)
+            run.sim.links[t.link].add_flow(t.duration, done,
+                                           owner=run.name)
         else:
             eng.after(t.duration, done)
 

@@ -12,11 +12,27 @@ heterogeneous/jittery workers, because with one compute scale per worker
 per iteration the synchronous ready time is just the nominal ready time
 times the fleet's max scale.
 
+**Schedules.**  The fast path is no longer BSP-only: pass ``schedule=``
+(``repro.sim.schedules``) and the sweep evaluates that schedule's own
+closed form across the grid instead of the engine, on the schedule's
+exactness domain —
+
+* ``BSP`` / ``OneFoneB(M)``: any heterogeneity/jitter.  1F1B only moves
+  *where* gradients land (the 1/M tail of the last micro-batch), and its
+  timeline stays per-worker linear in the compute scale, so the fleet-max
+  reduction that batches BSP batches it too — same
+  ``batched_comm_end`` pass, shifted ready times.
+* ``PipelinedAllReduce`` / ``LocalSGD(H)``: homogeneous fleets only
+  (their closed forms track cross-iteration frontiers / drifting clocks,
+  which do not factor through a per-iteration max); heterogeneity falls
+  back to the engine.
+
 The closed form is *invalid* — and this module falls back to the event
 engine, per point — exactly when collectives can contend for link
 bandwidth: background ``Burst`` traffic, ``comm_mode="concurrent"``, or
-multiple jobs (multi-job sweeps should drive ``ClusterSim`` directly).
-``SweepResult.used_engine`` records which path produced each point.
+multiple jobs (multi-job sweeps should drive ``ClusterSim`` directly —
+or the co-planner, ``repro.core.coplanner``).  ``SweepResult.used_engine``
+records which path produced each point.
 
 Planning across the grid goes through ONE incremental
 :class:`repro.core.planner.Planner` — each (N, bandwidth) point is a
@@ -34,9 +50,11 @@ import numpy as np
 
 from repro.core import planner
 from repro.core.planner import MergePlan, Planner, TensorSpec
-from repro.core.simulator import batched_comm_end
+from repro.core.simulator import batched_comm_end, simulate
 from repro.sim.engine import ClusterSim, JobSpec
 from repro.sim.network import Burst, FlatTopology
+from repro.sim.schedules import (BSP, LocalSGD, OneFoneB,
+                                 PipelinedAllReduce, Schedule)
 from repro.sim.workers import make_workers
 
 
@@ -65,11 +83,21 @@ class SweepGrid:
 
 @dataclasses.dataclass(frozen=True)
 class SweepResult:
-    """``t_iter[n_idx, bw_idx, seed_idx, iter]`` plus provenance."""
+    """``t_iter[n_idx, bw_idx, seed_idx, iter]`` plus provenance.
+
+    ``t_iter`` matches the engine's per-iteration
+    ``IterationResult.t_iter`` values point for point on the fast path's
+    validity domain.  ``span`` is the whole run's wall time (last
+    iteration end minus first start) per grid point — for barrier
+    schedules that is just ``t_iter.sum(-1)``, but pipelined iterations
+    *overlap* (the deferred all-gather tail runs under the next forward),
+    so ``span`` is the number to rate schedules against each other.
+    """
 
     grid: SweepGrid
     iters: int
     t_iter: np.ndarray                  # seconds, shape grid.shape + (iters,)
+    span: np.ndarray                    # seconds, shape grid.shape
     used_engine: np.ndarray             # bool, shape (len(n), len(bw))
     plans: dict[tuple[int, float], MergePlan]   # (n, bw_scale) -> plan
     planner_scratch: int                # Planner state rebuilds (1 == ideal)
@@ -84,12 +112,26 @@ class SweepResult:
 
 
 def closed_form_valid(*, comm_mode: str = "sequential",
-                      bursts: Sequence[Burst] = ()) -> bool:
-    """True iff no link contention is possible: a single job issuing
-    collectives in order with no background traffic.  Heterogeneity and
-    jitter do NOT invalidate the closed form (scales factor out of the
-    synchronous max); contention does."""
-    return comm_mode == "sequential" and not bursts
+                      bursts: Sequence[Burst] = (),
+                      schedule: Schedule | None = None,
+                      heterogeneous: bool = False) -> bool:
+    """True iff the batched closed form is exact for this configuration.
+
+    Link contention (concurrent issue, background bursts, other jobs)
+    always invalidates it.  Per schedule: BSP and OneFoneB tolerate
+    heterogeneity/jitter (per-worker scales factor out of the synchronous
+    max); PipelinedAllReduce and LocalSGD have homogeneous-only closed
+    forms; anything else (DAGSchedule, custom) needs the engine."""
+    if comm_mode != "sequential" or bursts:
+        return False
+    if schedule is None or isinstance(schedule, (BSP, OneFoneB)):
+        return True
+    if isinstance(schedule, PipelinedAllReduce):
+        # the ag_fraction == 0 degenerate IS BSP, jitter included
+        return schedule.ag_fraction == 0.0 or not heterogeneous
+    if isinstance(schedule, LocalSGD):
+        return schedule.h == 1 or not heterogeneous
+    return False
 
 
 def _max_scales(workers, seeds: Sequence[int], iters: int,
@@ -104,6 +146,92 @@ def _max_scales(workers, seeds: Sequence[int], iters: int,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Per-schedule closed forms over (seed × iteration) blocks.
+# ---------------------------------------------------------------------------
+
+def _barrier_t_iter(schedule: Schedule | None, specs, plan: MergePlan,
+                    model, t_f: float, prefix_t: np.ndarray,
+                    s_max: np.ndarray) -> np.ndarray:
+    """BSP / OneFoneB block: ``batched_comm_end`` over (seed, iter) with
+    the schedule's nominal gradient-ready offsets, scaled by the fleet
+    max.  For OneFoneB(M) the ready times sit in the last micro-batch's
+    1/M tail (mirroring ``_OneFoneBDriver._timeline``)."""
+    L = len(specs)
+    t_b_total = float(prefix_t[-1]) if L else 0.0
+    if isinstance(schedule, OneFoneB) and schedule.micro_batches > 1:
+        m = schedule.micro_batches
+        pair = (t_f + t_b_total) / m
+        base = (m - 1) * pair + t_f / m
+        nominal = base + (prefix_t / m if L else prefix_t)
+        nominal_bwd = base + t_b_total / m
+    else:
+        nominal = t_f + prefix_t
+        nominal_bwd = t_f + t_b_total
+    bucket_t = np.array([model.time(b) for b in plan.bucket_bytes(specs)],
+                        dtype=np.float64)
+    last = np.array([b[-1] for b in plan.buckets], dtype=int)
+    ready = s_max[..., None] * \
+        (nominal[last][None, None, :] if L else np.zeros((1, 1, 0)))
+    return batched_comm_end(bucket_t[None, None, :], ready,
+                            s_max * nominal_bwd)
+
+
+def _pipelined_windows(schedule: PipelinedAllReduce, specs,
+                       plan: MergePlan, model, t_f: float,
+                       prefix_t: np.ndarray,
+                       iters: int) -> tuple[np.ndarray, float]:
+    """Homogeneous pipelined run: per-iteration ``end - start`` windows
+    plus the total span, via the exact cross-iteration recurrence the
+    engine executes (``_PipelinedDriver``: frontier at
+    ``max(own backward end, last reduce-scatter end)``, all-gathers
+    deferred past the boundary)."""
+    f = schedule.ag_fraction
+    L = len(specs)
+    t_b_total = float(prefix_t[-1]) if L else 0.0
+    nbytes = plan.bucket_bytes(specs)
+    S, ag_done = 0.0, 0.0
+    t_iter = np.empty(iters, dtype=np.float64)
+    iter_end = 0.0
+    for it in range(iters):
+        fwd_end = S + t_f
+        bwd_start = max(fwd_end, ag_done)
+        bwd_end = bwd_start + t_b_total
+        if plan.buckets:
+            end = 0.0
+            for bucket, nb in zip(plan.buckets, nbytes):
+                ready = bwd_start + float(prefix_t[bucket[-1]])
+                end = max(end, ready) + (1.0 - f) * model.time(nb)
+            rs_done = end
+            ag_done = rs_done + sum(f * model.time(nb) for nb in nbytes)
+            iter_end = max(ag_done, bwd_end)
+        else:
+            rs_done = bwd_end
+            ag_done = bwd_end
+            iter_end = bwd_end
+        t_iter[it] = iter_end - S
+        S = max(bwd_end, rs_done)
+    return t_iter, iter_end
+
+
+def _localsgd_t_iter(schedule: LocalSGD, specs, plan: MergePlan, model,
+                     t_f: float, iters: int) -> np.ndarray:
+    """Homogeneous LocalSGD(H) run: ``H - 1`` communication-free steps of
+    ``t_f + t_b`` per round, then one BSP-like sync step (truncated final
+    rounds included, mirroring ``_LocalSGDDriver``)."""
+    t_b_total = sum(s.t_b for s in specs)
+    sync_t = simulate(specs, plan, model, t_f).t_iter
+    local_t = t_f + t_b_total
+    out = np.empty(iters, dtype=np.float64)
+    first = 0
+    while first < iters:
+        steps = min(schedule.h, iters - first)
+        out[first:first + steps - 1] = local_t
+        out[first + steps - 1] = sync_t
+        first += steps
+    return out
+
+
 def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
               algorithm: str = "ring", strategy: str = "dp_incremental",
               alpha: float, beta: float, gamma: float = 0.0,
@@ -111,6 +239,7 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
               slow: Mapping[int, float] | None = None,
               bursts: Sequence[Burst] = (),
               comm_mode: str = "sequential",
+              schedule: Schedule | None = None,
               force_engine: bool = False,
               job_name: str = "train") -> SweepResult:
     """Evaluate one profile over a scenario grid.
@@ -119,20 +248,27 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
     bandwidth, i.e. half the per-byte cost); startup latency ``alpha`` and
     reduction ``gamma`` are unaffected.  Each (N, bandwidth) point gets its
     own merge plan; with the default ``dp_incremental`` strategy all points
-    share one :class:`Planner` and replan incrementally.
+    share one :class:`Planner` and replan incrementally.  ``schedule``
+    runs every point under that iteration discipline — through the
+    schedule's closed form where exact (see :func:`closed_form_valid`),
+    through the engine otherwise.
     """
     if iters < 1:
         raise ValueError("need >= 1 iteration")
     slow = dict(slow or {})
-    fast = closed_form_valid(comm_mode=comm_mode, bursts=bursts) \
+    heterogeneous = jitter_sigma != 0.0 or \
+        any(f != 1.0 for f in slow.values())
+    fast = closed_form_valid(comm_mode=comm_mode, bursts=bursts,
+                             schedule=schedule,
+                             heterogeneous=heterogeneous) \
         and not force_engine
 
     L = len(specs)
     prefix_t = np.cumsum([s.t_b for s in specs]) if L else np.zeros(0)
-    t_b_total = float(prefix_t[-1]) if L else 0.0
 
     shared: Planner | None = None
     t_iter = np.zeros(grid.shape + (iters,), dtype=np.float64)
+    span = np.zeros(grid.shape, dtype=np.float64)
     used_engine = np.zeros(grid.shape[:2], dtype=bool)
     plans: dict[tuple[int, float], MergePlan] = {}
 
@@ -155,16 +291,23 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
             plans[(n, bw)] = plan
 
             if fast:
-                bucket_t = np.array(
-                    [model.time(b) for b in plan.bucket_bytes(specs)],
-                    dtype=np.float64)
-                last = np.array([b[-1] for b in plan.buckets], dtype=int)
-                # ready[seed, iter, k] = s_max * (t_f + prefix_t[last_k])
-                nominal = t_f + (prefix_t[last] if L else np.zeros(0))
-                ready = s_max[..., None] * nominal[None, None, :]
-                bwd_end = s_max * (t_f + t_b_total)
-                t_iter[ni, bi] = batched_comm_end(
-                    bucket_t[None, None, :], ready, bwd_end)
+                if isinstance(schedule, PipelinedAllReduce) and \
+                        schedule.ag_fraction > 0:
+                    vals, total = _pipelined_windows(
+                        schedule, specs, plan, model, t_f, prefix_t, iters)
+                    t_iter[ni, bi] = vals[None, :]
+                    span[ni, bi] = total
+                elif isinstance(schedule, LocalSGD) and schedule.h > 1:
+                    vals = _localsgd_t_iter(schedule, specs, plan, model,
+                                            t_f, iters)
+                    t_iter[ni, bi] = vals[None, :]
+                    span[ni, bi] = float(vals.sum())
+                else:
+                    # BSP, OneFoneB, and every BSP-degenerate parameter
+                    # point (ag_fraction == 0, H == 1, M == 1)
+                    t_iter[ni, bi] = _barrier_t_iter(
+                        schedule, specs, plan, model, t_f, prefix_t, s_max)
+                    span[ni, bi] = t_iter[ni, bi].sum(axis=-1)
             else:
                 used_engine[ni, bi] = True
                 for si, seed in enumerate(grid.seeds):
@@ -172,13 +315,17 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
                                   plan=plan, t_f=t_f, workers=workers,
                                   topology=topo, iters=iters,
                                   comm_mode=comm_mode,
-                                  compute_mode="analytic")
+                                  compute_mode="analytic",
+                                  schedule=schedule)
                     res = ClusterSim([job], seed=seed,
                                      bursts=bursts).run()
-                    t_iter[ni, bi, si] = res.job(job_name).t_iters
+                    jr = res.job(job_name)
+                    t_iter[ni, bi, si] = jr.t_iters
+                    span[ni, bi, si] = jr.iterations[-1].end - \
+                        jr.iterations[0].start
 
     return SweepResult(
-        grid=grid, iters=iters, t_iter=t_iter, used_engine=used_engine,
-        plans=plans,
+        grid=grid, iters=iters, t_iter=t_iter, span=span,
+        used_engine=used_engine, plans=plans,
         planner_scratch=shared.scratch_plans if shared else 0,
         planner_incremental=shared.incremental_updates if shared else 0)

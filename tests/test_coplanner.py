@@ -1,0 +1,406 @@
+"""Multi-job co-planning (repro.core.coplanner) correctness.
+
+Anchors:
+
+* **N=1 delegation** — `plan_contention_aware` is the single-job special
+  case of `CoPlanner`; a verbatim reimplementation of the PR-2 fixpoint
+  loop pins the equivalence round for round, float for float (on top of
+  the pre-existing fixpoint tests, which keep passing unchanged);
+* **2–4-job joint planning** — the alternating best-response loop
+  terminates within its round budget and the best observed assignment is
+  never worse than any seed candidate (per-job baselines AND the fully
+  independent assignment) on joint makespan;
+* **cross-schedule rounds** — per-job predictions use each job's own
+  schedule closed form;
+* **link-owner telemetry** — per-job bytes/busy sum to link totals, and
+  background Burst traffic is accounted under its reserved owner, never
+  in a job's samples.
+"""
+
+import pytest
+
+from repro.core import coplanner, cost_model
+from repro.core.coplanner import (CoJob, CoObservation, CoPlanner,
+                                  JobObservation, coplan)
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import (Planner, effective_model, make_plan,
+                                plan_contention_aware, plan_wfbp)
+from repro.sim import scenarios, trace
+from repro.sim.engine import ClusterSim, JobSpec, Topology
+from repro.sim.network import BACKGROUND_OWNER, Burst, FlatTopology
+from repro.sim.schedules import BSP, LocalSGD, PipelinedAllReduce
+from repro.sim.scenarios import CoJobSpec
+from repro.sim.workers import make_workers
+
+MODEL = AllReduceModel(5e-4, 2e-9)
+
+
+def _single_job_evaluate(specs, t_f, *, n_workers=4, bursts=()):
+    """Engine evaluation of one job's candidate plan (optionally against
+    background bursts, so the fixpoint has contention to correct for)."""
+    def evaluate(plan):
+        job = JobSpec(name="j", specs=list(specs), plan=plan, t_f=t_f,
+                      workers=make_workers(n_workers),
+                      topology=Topology(MODEL, n_workers=n_workers))
+        jr = ClusterSim([job], bursts=list(bursts)).run().job("j")
+        return jr.iterations[-1].t_iter, jr.bucket_samples
+    return evaluate
+
+
+def _reference_fixpoint(specs, model, evaluate, *, t_f=0.0, max_rounds=5,
+                        damping=0.5, seed_plans=()):
+    """The PR-2 single-job loop, reimplemented verbatim — the oracle the
+    N=1 delegation must reproduce float for float."""
+    from repro.core.simulator import simulate
+
+    planner_ = Planner(specs, model)
+    plan = planner_.plan()
+    eff = model
+    rounds = []          # (plan, model, observed, predicted, planned_under)
+    best_round = 0
+    cache = {}
+
+    def observe(p):
+        if p.buckets not in cache:
+            cache[p.buckets] = evaluate(p)
+        return cache[p.buckets]
+
+    def push(entry):
+        nonlocal best_round
+        rounds.append(entry)
+        if entry[2] < rounds[best_round][2]:
+            best_round = len(rounds) - 1
+
+    def predict(p, m):
+        return simulate(specs, p, m, t_f).t_iter
+
+    for sp in seed_plans:
+        observed, _ = observe(sp)
+        push((sp, eff, observed, predict(sp, eff), eff))
+    seen = {plan.buckets}
+    converged = False
+    for _ in range(max_rounds):
+        planned_under = eff
+        observed, samples = observe(plan)
+        fitted = effective_model(samples, eff)
+        eff = cost_model.blend(eff, fitted, damping)
+        push((plan, eff, observed, predict(plan, eff), planned_under))
+        new_plan = planner_.replan(eff)
+        if new_plan.buckets == plan.buckets or new_plan.buckets in seen:
+            converged = True
+            break
+        seen.add(new_plan.buckets)
+        plan = new_plan
+    return rounds, best_round, converged
+
+
+# ---------------------------------------------------------------------------
+# N=1 delegation.
+# ---------------------------------------------------------------------------
+
+def test_n1_reproduces_reference_loop_bit_for_bit():
+    """plan_contention_aware (now the N=1 CoPlanner) equals the verbatim
+    PR-2 loop — same rounds, same floats, same best round — on a
+    contended evaluation where the refit actually moves the model."""
+    specs, t_f = trace.synthetic_specs(24, seed=33)
+    bursts = (Burst("net", 0.0, 10.0, flows=2),)
+    seeds = (make_plan("mgwfbp", specs, MODEL), plan_wfbp(specs))
+    fix = plan_contention_aware(
+        specs, MODEL, _single_job_evaluate(specs, t_f, bursts=bursts),
+        t_f=t_f, damping=0.4, seed_plans=seeds)
+    ref_rounds, ref_best, ref_conv = _reference_fixpoint(
+        specs, MODEL, _single_job_evaluate(specs, t_f, bursts=bursts),
+        t_f=t_f, damping=0.4, seed_plans=seeds)
+    assert len(fix.rounds) == len(ref_rounds)
+    assert fix.best_round == ref_best
+    assert fix.converged == ref_conv
+    for got, (plan, model, observed, predicted, planned_under) in \
+            zip(fix.rounds, ref_rounds):
+        assert got.plan.buckets == plan.buckets
+        assert (got.model.a, got.model.b) == (model.a, model.b)
+        assert got.observed_t == observed              # exact, no tolerance
+        assert got.predicted_t == predicted
+        assert (got.planned_under.a, got.planned_under.b) == \
+            (planned_under.a, planned_under.b)
+    assert fix.plan.buckets == ref_rounds[ref_best][0].buckets
+
+
+def test_n1_coplanner_equals_plan_contention_aware():
+    """Driving CoPlanner directly with one CoJob gives the same result as
+    the plan_contention_aware wrapper."""
+    specs, t_f = trace.synthetic_specs(18, seed=34)
+    bursts = (Burst("net", 0.0, 5.0, flows=3),)
+    evaluate = _single_job_evaluate(specs, t_f, bursts=bursts)
+    fix = plan_contention_aware(specs, MODEL, evaluate, t_f=t_f)
+
+    def joint_evaluate(plans):
+        observed, samples = evaluate(plans["job"])
+        return CoObservation(makespan=observed, jobs={
+            "job": JobObservation(t_iter=observed, samples=tuple(samples))})
+
+    co = coplan([CoJob(name="job", specs=tuple(specs), model=MODEL,
+                       t_f=t_f)], joint_evaluate)
+    alt = co.fixpoint("job")
+    assert alt.plan.buckets == fix.plan.buckets
+    assert (alt.model.a, alt.model.b) == (fix.model.a, fix.model.b)
+    assert [r.observed_t for r in alt.rounds] == \
+        [r.observed_t for r in fix.rounds]
+    assert (alt.best_round, alt.converged) == \
+        (fix.best_round, fix.converged)
+    # the joint view agrees with the per-job view for a single job
+    assert co.makespan == fix.observed_t
+    assert co.observed_t("job") == fix.observed_t
+
+
+# ---------------------------------------------------------------------------
+# Joint planning: 2-4 jobs.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_jobs", [2, 3, 4])
+def test_joint_terminates_and_never_loses_to_seeds(n_jobs):
+    """The alternating best-response loop stays within its round budget
+    and the returned assignment's observed joint makespan is <= every
+    seed candidate's — including the fully independent assignment."""
+    jobs = []
+    for i in range(n_jobs):
+        specs, t_f = trace.synthetic_specs(10 + 4 * i, seed=40 + i)
+        jobs.append(CoJobSpec(f"job{i}", tuple(specs), t_f))
+    max_rounds = 4
+    fix = scenarios.contended_jobs_plan(jobs, n_workers=4, iters=2,
+                                        max_rounds=max_rounds)
+    seed_rounds = [r for r in fix.rounds if r.kind == "seed"]
+    response_rounds = [r for r in fix.rounds if r.kind == "response"]
+    assert seed_rounds and response_rounds
+    # budget: one seed round per job (+1 combined) + n_jobs per sweep
+    assert len(seed_rounds) <= n_jobs + 1
+    assert len(response_rounds) <= n_jobs * max_rounds
+    assert fix.makespan <= min(r.makespan for r in seed_rounds) + 1e-12
+    assert set(fix.plans) == {j.name for j in jobs}
+    for j in jobs:      # each job's plan still covers its own tensors
+        assert fix.plans[j.name].num_tensors == len(j.specs)
+
+
+def test_joint_two_identical_jobs_beat_independent_planning():
+    """Two identical jobs on one link: the co-planned assignment's
+    makespan is <= running both on their exclusive-link MG-WFBP plans
+    (the seed guarantee, observed end to end through the engine)."""
+    specs, t_f = trace.synthetic_specs(28, seed=45)
+    jobs = [CoJobSpec("a", tuple(specs), t_f),
+            CoJobSpec("b", tuple(specs), t_f)]
+    fix = scenarios.contended_jobs_plan(jobs, n_workers=8, iters=2,
+                                        damping=0.3)
+    model = FlatTopology("ring", 8, scenarios.PAPER_ALPHA,
+                         scenarios.PAPER_BETA,
+                         scenarios.PAPER_GAMMA).linear_model()
+    indep = make_plan("mgwfbp", specs, model)
+    m_indep = scenarios.shared_link_jobs(
+        jobs, n_workers=8, iters=2, plans={"a": indep, "b": indep}) \
+        .run().makespan
+    assert fix.makespan <= m_indep + 1e-12
+
+
+def test_joint_converges_on_asymmetric_jobs():
+    """Distinct profiles (no mirror symmetry to oscillate through) reach
+    an exact fixed point or cycle within the budget."""
+    a, t_f_a = trace.synthetic_specs(12, seed=50)
+    b, t_f_b = trace.synthetic_specs(20, seed=51)
+    fix = scenarios.contended_jobs_plan(
+        [CoJobSpec("small", tuple(a), t_f_a),
+         CoJobSpec("large", tuple(b), t_f_b)],
+        n_workers=4, iters=2, max_rounds=8)
+    assert fix.converged
+
+
+# ---------------------------------------------------------------------------
+# Cross-schedule co-planning.
+# ---------------------------------------------------------------------------
+
+def test_cross_schedule_predictions_use_each_jobs_closed_form():
+    """In a mixed BSP + pipelined + local-SGD fleet, every round's
+    per-job prediction equals that job's own Schedule.predict_t_iter
+    under the round's effective model."""
+    jobs = [
+        CoJobSpec("bsp", *trace.synthetic_specs(12, seed=60)),
+        CoJobSpec("pipe", *trace.synthetic_specs(14, seed=61),
+                  schedule=PipelinedAllReduce(0.5)),
+        CoJobSpec("local", *trace.synthetic_specs(16, seed=62),
+                  schedule=LocalSGD(2)),
+    ]
+    fix = scenarios.contended_jobs_plan(jobs, n_workers=4, iters=2,
+                                        max_rounds=3)
+    schedules = {"bsp": BSP(), "pipe": PipelinedAllReduce(0.5),
+                 "local": LocalSGD(2)}
+    by_name = {j.name: j for j in jobs}
+    for r in fix.rounds:
+        for name, sched in schedules.items():
+            j = by_name[name]
+            expect = sched.predict_t_iter(j.specs, r.plans[name],
+                                          r.models[name], j.t_f)
+            assert r.predicted[name] == pytest.approx(expect, rel=1e-12)
+    seed_rounds = [r for r in fix.rounds if r.kind == "seed"]
+    assert fix.makespan <= min(r.makespan for r in seed_rounds) + 1e-12
+
+
+def test_shared_effective_model_pools_link_samples():
+    """shared_model=True refits a job from the aggregate sample pool of
+    every job sharing its link — a job whose own samples span one size
+    (rank-deficient alone, so per-job refit could only stretch the base
+    model) gets the exact least-squares line through the pooled sizes."""
+    specs, t_f = trace.synthetic_specs(6, seed=70)
+    true = AllReduceModel(2e-3, 4e-9)
+    jobs = [CoJob(name="a", specs=tuple(specs), model=MODEL, t_f=t_f,
+                  links=("net",)),
+            CoJob(name="b", specs=tuple(specs), model=MODEL, t_f=t_f,
+                  links=("net",))]
+    obs = CoObservation(makespan=1.0, jobs={
+        # one distinct size per job: only the pooled set spans two
+        "a": JobObservation(t_iter=1.0,
+                            samples=((1 << 20, true.time(1 << 20)),)),
+        "b": JobObservation(t_iter=1.0,
+                            samples=((1 << 22, true.time(1 << 22)),)),
+    })
+
+    def never(plans):   # pragma: no cover - _refit is driven directly
+        raise AssertionError
+
+    eff = {"a": MODEL, "b": MODEL}
+    CoPlanner(jobs, never, damping=1.0, shared_model=True) \
+        ._refit(obs, eff, jobs[0])
+    assert eff["a"].a == pytest.approx(true.a, rel=1e-9)
+    assert eff["a"].b == pytest.approx(true.b, rel=1e-9)
+    assert eff["b"] is MODEL            # only the sub-step's job refits
+    # per-job mode on the same observation can only stretch the base
+    eff = {"a": MODEL, "b": MODEL}
+    CoPlanner(jobs, never, damping=1.0)._refit(obs, eff, jobs[0])
+    assert eff["a"].b / eff["a"].a == pytest.approx(MODEL.b / MODEL.a)
+
+
+def test_shared_effective_model_end_to_end():
+    """The shared-model co-plan keeps the no-worse-than-seed guarantee."""
+    specs, t_f = trace.synthetic_specs(20, seed=70)
+    jobs = [CoJobSpec("a", tuple(specs), t_f),
+            CoJobSpec("b", tuple(specs), t_f)]
+    fix = scenarios.contended_jobs_plan(jobs, n_workers=4, iters=2,
+                                        shared_model=True, max_rounds=3)
+    seed_rounds = [r for r in fix.rounds if r.kind == "seed"]
+    assert fix.makespan <= min(r.makespan for r in seed_rounds) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Validation.
+# ---------------------------------------------------------------------------
+
+def test_coplanner_rejects_bad_configuration():
+    specs, t_f = trace.synthetic_specs(4, seed=1)
+    job = CoJob(name="j", specs=tuple(specs), model=MODEL, t_f=t_f)
+
+    def evaluate(plans):    # pragma: no cover - never reached
+        raise AssertionError
+
+    with pytest.raises(ValueError):
+        CoPlanner([], evaluate)
+    with pytest.raises(ValueError):
+        CoPlanner([job, job], evaluate)         # duplicate names
+    with pytest.raises(ValueError):
+        CoPlanner([job], evaluate, damping=0.0)
+    with pytest.raises(ValueError):
+        CoPlanner([job], evaluate, max_rounds=0)
+
+
+def test_shared_link_jobs_rejects_unknown_plan_keys():
+    """A typoed pin must error, not silently fall back to the strategy
+    plan (a baseline comparison would measure the wrong assignment)."""
+    specs, t_f = trace.synthetic_specs(6, seed=2)
+    jobs = [CoJobSpec("job_a", tuple(specs), t_f)]
+    with pytest.raises(ValueError, match="job_A"):
+        scenarios.shared_link_jobs(
+            jobs, plans={"job_A": make_plan("wfbp", specs)})
+
+
+# ---------------------------------------------------------------------------
+# Link-owner telemetry (the engine layer the co-planner consumes).
+# ---------------------------------------------------------------------------
+
+def test_per_job_link_bytes_sum_to_link_totals():
+    """Across a two-job run, each job's final link telemetry matches its
+    bytes_communicated, and the per-owner byte totals on the link sum to
+    everything admitted."""
+    a, t_f_a = trace.synthetic_specs(14, seed=80)
+    b, t_f_b = trace.synthetic_specs(18, seed=81)
+    sim = scenarios.two_jobs(a, t_f_a, b, t_f_b, n_workers=4, iters=2)
+    res = sim.run()
+    link = sim.links["net"]
+    total = 0.0
+    for name in ("job_a", "job_b"):
+        jr = res.job(name)
+        tele = jr.link_telemetry
+        assert set(tele) == {"net"}
+        nbytes, busy = tele["net"]
+        assert nbytes == pytest.approx(jr.bytes_communicated, abs=1e-6)
+        assert busy > 0.0
+        total += nbytes
+    assert sum(link.owner_bytes.values()) == pytest.approx(total, abs=1e-6)
+    # busy conservation: per-owner shares sum to the link's busy wall time
+    assert sum(link.owner_busy.values()) == \
+        pytest.approx(link.busy_s, abs=1e-9)
+
+
+def test_telemetry_is_cumulative_and_monotone():
+    specs, t_f = trace.synthetic_specs(10, seed=82)
+    res = scenarios.two_jobs(specs, t_f, specs, t_f, n_workers=2,
+                             iters=3).run()
+    for name in ("job_a", "job_b"):
+        prev_bytes = prev_busy = 0.0
+        for it in res.job(name).iterations:
+            cur_bytes = dict(it.link_bytes).get("net", 0.0)
+            cur_busy = dict(it.link_busy).get("net", 0.0)
+            assert cur_bytes >= prev_bytes - 1e-12
+            assert cur_busy >= prev_busy - 1e-12
+            prev_bytes, prev_busy = cur_bytes, cur_busy
+
+
+def test_background_bursts_excluded_from_job_telemetry():
+    """Burst traffic lands on the reserved background owner: the job's
+    byte account is burst-free while the background's busy share is
+    real — so co-planner refits can never fit bursts into (a, b)."""
+    specs, t_f = trace.synthetic_specs(12, seed=83)
+    sim = scenarios.bursty(specs, t_f, 4, burst_flows=3, horizon_iters=2)
+    res = sim.run()
+    link = sim.links["net"]
+    jr = res.job("train")
+    nbytes, busy = jr.link_telemetry["net"]
+    assert nbytes == pytest.approx(jr.bytes_communicated, abs=1e-6)
+    assert link.owner_bytes.get(BACKGROUND_OWNER, 0.0) == 0.0
+    assert link.owner_busy[BACKGROUND_OWNER] > 0.0
+    assert sum(link.owner_busy.values()) == \
+        pytest.approx(link.busy_s, abs=1e-9)
+    # the job only received part of the busy time — bursts took the rest
+    assert busy < link.busy_s - 1e-12
+
+
+def test_contended_jobs_plan_observations_carry_telemetry():
+    """The joint evaluate wires per-job link telemetry into every
+    CoObservation (what shared-model mode and diagnostics consume)."""
+    specs, t_f = trace.synthetic_specs(10, seed=84)
+    jobs = [CoJobSpec("a", tuple(specs), t_f),
+            CoJobSpec("b", tuple(specs), t_f)]
+    fix = scenarios.contended_jobs_plan(jobs, n_workers=2, iters=1,
+                                        max_rounds=2)
+    for r in fix.rounds:
+        for name in ("a", "b"):
+            jo = r.observation.jobs[name]
+            assert dict(jo.link_bytes).get("net", 0.0) > 0.0
+            assert dict(jo.link_busy).get("net", 0.0) > 0.0
+
+
+def test_eviction_loop_replans_through_coplanner():
+    """straggler_eviction(contention_aware=True) runs the co-planner on
+    the post-eviction contended fabric and installs its plan."""
+    specs, t_f = trace.synthetic_specs(16, seed=85)
+    sim, report = scenarios.straggler_eviction(
+        specs, t_f, 8, slow_factor=3.0, iters=6, contention_aware=True,
+        bursts=(Burst("net", 0.0, 30.0, flows=2),))
+    sim.run()
+    assert report.evictions, "straggler never evicted"
+    assert report.fixpoints, "co-planner never ran"
+    assert report.plans[-1].buckets == report.fixpoints[-1].plan.buckets

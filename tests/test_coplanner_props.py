@@ -1,0 +1,125 @@
+"""Co-planner property tests; skipped without the real hypothesis package.
+
+Three families:
+
+* the alternating best-response loop always terminates within its round
+  budget (seed rounds bounded by the seed-plan count + 1, response
+  rounds by jobs x max_rounds) on random multi-job problems;
+* the returned assignment's observed joint makespan is never worse than
+  any seed candidate's — the no-worse-than-seed guarantee, for any
+  deterministic evaluation environment;
+* per-job link telemetry conserves: each job's byte account equals what
+  it communicated, per-owner byte totals sum to everything admitted, and
+  per-owner bandwidth shares (background included) sum to the link's
+  busy wall time — on random two-job engine runs with random bursts.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+import hypothesis  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+from prop_strategies import mk_specs, specs_strategy  # noqa: E402
+
+from repro.core.coplanner import (CoJob, CoObservation,  # noqa: E402
+                                  JobObservation, coplan)
+from repro.core.cost_model import AllReduceModel  # noqa: E402
+from repro.core.planner import make_plan, plan_wfbp  # noqa: E402
+from repro.core.simulator import simulate  # noqa: E402
+from repro.sim import scenarios, trace  # noqa: E402
+from repro.sim.network import Burst  # noqa: E402
+
+MODEL = AllReduceModel(5e-4, 2e-9)
+JOBS = st.lists(specs_strategy(min_n=1, max_n=6), min_size=1, max_size=3)
+
+
+def _make_jobs(profiles):
+    jobs = []
+    for i, sizes_times in enumerate(profiles):
+        specs = tuple(mk_specs(*sizes_times))
+        jobs.append(CoJob(
+            name=f"j{i}", specs=specs, model=MODEL, t_f=1e-3,
+            seed_plans=(make_plan("mgwfbp", specs, MODEL),
+                        plan_wfbp(specs))))
+    return jobs
+
+
+def _synthetic_evaluate(jobs):
+    """Deterministic contended world without the engine: each job's
+    effective model stretches with the *other* jobs' bucket counts (more
+    neighbour collectives -> more contention), and the observation is
+    the Eq. 7/8 closed form under that stretched model."""
+    def evaluate(plans):
+        out = {}
+        for j in jobs:
+            others = sum(plans[o.name].num_buckets
+                         for o in jobs if o.name != j.name)
+            stretch = 1.0 + 0.15 * others
+            eff = j.model.scaled(stretch)
+            t = simulate(j.specs, plans[j.name], eff, j.t_f).t_iter
+            samples = tuple(
+                (nb, eff.time(nb))
+                for nb in plans[j.name].bucket_bytes(j.specs))
+            out[j.name] = JobObservation(t_iter=t, samples=samples)
+        return CoObservation(makespan=max(o.t_iter for o in out.values()),
+                             jobs=out)
+    return evaluate
+
+
+@hypothesis.given(JOBS, st.integers(1, 4),
+                  st.floats(0.1, 1.0))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_terminates_within_round_budget(profiles, max_rounds, damping):
+    jobs = _make_jobs(profiles)
+    fix = coplan(jobs, _synthetic_evaluate(jobs), max_rounds=max_rounds,
+                 damping=damping)
+    seed_rounds = [r for r in fix.rounds if r.kind == "seed"]
+    response_rounds = [r for r in fix.rounds if r.kind == "response"]
+    n_seeds = sum(len(j.seed_plans) for j in jobs)
+    assert len(seed_rounds) <= n_seeds + 1      # + combined assignment
+    assert len(response_rounds) <= len(jobs) * max_rounds
+    assert 0 <= fix.best_round < len(fix.rounds)
+
+
+@hypothesis.given(JOBS, st.floats(0.1, 1.0))
+@hypothesis.settings(max_examples=40, deadline=None)
+def test_makespan_never_worse_than_seed_candidates(profiles, damping):
+    jobs = _make_jobs(profiles)
+    fix = coplan(jobs, _synthetic_evaluate(jobs), damping=damping)
+    seed_rounds = [r for r in fix.rounds if r.kind == "seed"]
+    assert seed_rounds
+    assert fix.makespan <= min(r.makespan for r in seed_rounds) + 1e-12
+    # the result is the best observed round, full stop
+    assert fix.makespan <= min(r.makespan for r in fix.rounds) + 1e-15
+
+
+@hypothesis.given(specs_strategy(min_n=1, max_n=5),
+                  specs_strategy(min_n=1, max_n=5),
+                  st.integers(1, 2), st.integers(0, 3),
+                  st.sampled_from(["wfbp", "single", "mgwfbp"]))
+@hypothesis.settings(max_examples=30, deadline=None)
+def test_link_telemetry_conserves(prof_a, prof_b, iters, burst_flows,
+                                  strategy):
+    specs_a, specs_b = mk_specs(*prof_a), mk_specs(*prof_b)
+    bursts = [Burst("net", 0.0, 5.0, flows=burst_flows)] \
+        if burst_flows else []
+    jobs = [scenarios.CoJobSpec("a", tuple(specs_a), 1e-3,
+                                strategy=strategy),
+            scenarios.CoJobSpec("b", tuple(specs_b), 2e-3,
+                                strategy=strategy)]
+    sim = scenarios.shared_link_jobs(jobs, n_workers=2, iters=iters,
+                                     bursts=bursts)
+    res = sim.run()
+    link = sim.links["net"]
+    total_bytes = 0.0
+    for name in ("a", "b"):
+        jr = res.job(name)
+        tele = jr.link_telemetry
+        got = tele.get("net", (0.0, 0.0))[0]
+        assert got == pytest.approx(jr.bytes_communicated, abs=1e-6)
+        total_bytes += got
+    assert sum(link.owner_bytes.values()) == \
+        pytest.approx(total_bytes, abs=1e-6)
+    assert sum(link.owner_busy.values()) == \
+        pytest.approx(link.busy_s, abs=1e-9)

@@ -1,9 +1,11 @@
 """Batched sweep runner (repro.sim.sweep) correctness.
 
 The contract: on the closed form's valid domain (single job, sequential
-comm, no background traffic — heterogeneity and jitter included) the
-batched recurrence equals the event engine per point to 1e-9; off that
-domain the sweep transparently falls back to the engine and says so.
+comm, no background traffic — heterogeneity and jitter included for
+barrier schedules, homogeneous-only for pipelined/local-SGD) the batched
+recurrence equals the event engine per point to 1e-9 — per-iteration
+``t_iter`` AND whole-run ``span`` — and off that domain the sweep
+transparently falls back to the engine and says so.
 
 The randomized batched-recurrence == simulate() property lives in
 tests/test_sweep_props.py (hypothesis).
@@ -15,6 +17,8 @@ import pytest
 from repro.sim import scenarios, trace
 from repro.sim.engine import ClusterSim, JobSpec
 from repro.sim.network import Burst, FlatTopology
+from repro.sim.schedules import (BSP, DAGSchedule, LocalSGD, OneFoneB,
+                                 PipelinedAllReduce)
 from repro.sim.sweep import SweepGrid, closed_form_valid, run_sweep
 from repro.sim.workers import make_workers
 
@@ -34,6 +38,25 @@ def test_closed_form_valid_conditions():
     assert closed_form_valid()
     assert not closed_form_valid(comm_mode="concurrent")
     assert not closed_form_valid(bursts=[Burst("net", 0.0, 1.0)])
+
+
+def test_closed_form_valid_schedule_domains():
+    """Barrier schedules tolerate heterogeneity; pipelined/local-SGD
+    closed forms are homogeneous-only (except their BSP-degenerate
+    parameter points); unknown schedules go to the engine."""
+    for sched in (None, BSP(), OneFoneB(4)):
+        assert closed_form_valid(schedule=sched, heterogeneous=True)
+    for sched in (PipelinedAllReduce(0.5), LocalSGD(4)):
+        assert closed_form_valid(schedule=sched)
+        assert not closed_form_valid(schedule=sched, heterogeneous=True)
+    # degenerate points ARE BSP, jitter included
+    assert closed_form_valid(schedule=PipelinedAllReduce(0.0),
+                             heterogeneous=True)
+    assert closed_form_valid(schedule=LocalSGD(1), heterogeneous=True)
+    assert not closed_form_valid(schedule=DAGSchedule())
+    # contention still trumps everything
+    assert not closed_form_valid(schedule=OneFoneB(4),
+                                 bursts=[Burst("net", 0.0, 1.0)])
 
 
 def test_sweep_matches_engine_heterogeneous():
@@ -88,3 +111,71 @@ def test_sweep_force_engine_agrees_with_fast_path():
     slow = run_sweep(specs, t_f, grid, force_engine=True, **kw)
     assert slow.used_engine.all() and not fast.used_engine.any()
     np.testing.assert_allclose(fast.t_iter, slow.t_iter, atol=1e-9)
+    np.testing.assert_allclose(fast.span, slow.span, atol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Schedule-aware fast path.
+# ---------------------------------------------------------------------------
+
+SCHEDULE_POINTS = [
+    (BSP(), 0.25),
+    (OneFoneB(4), 0.25),            # barrier: jitter stays on the fast path
+    (OneFoneB(2), 0.0),
+    (PipelinedAllReduce(0.5), 0.0),   # frontier: homogeneous-only
+    (PipelinedAllReduce(0.25), 0.0),
+    (LocalSGD(3), 0.0),
+    (PipelinedAllReduce(0.0), 0.25),  # degenerates: BSP with jitter
+    (LocalSGD(1), 0.25),
+    (OneFoneB(1), 0.25),
+]
+
+
+@pytest.mark.parametrize("schedule,jitter", SCHEDULE_POINTS,
+                         ids=[f"{s.label}-j{j:g}"
+                              for s, j in SCHEDULE_POINTS])
+def test_schedule_sweep_matches_engine(schedule, jitter):
+    """On each schedule's exactness domain the fast path equals the
+    engine per iteration AND per whole-run span, to 1e-9."""
+    specs, t_f = trace.synthetic_specs(18, seed=21)
+    grid = SweepGrid(n_workers=(4, 16), bandwidth_scales=(0.5, 2.0),
+                     seeds=(0, 2))
+    kw = dict(alpha=A, beta=B, gamma=G, iters=5, jitter_sigma=jitter,
+              schedule=schedule)
+    fast = run_sweep(specs, t_f, grid, **kw)
+    slow = run_sweep(specs, t_f, grid, force_engine=True, **kw)
+    assert not fast.used_engine.any()
+    assert slow.used_engine.all()
+    np.testing.assert_allclose(fast.t_iter, slow.t_iter, atol=1e-9)
+    np.testing.assert_allclose(fast.span, slow.span, atol=1e-9)
+
+
+def test_schedule_sweep_heterogeneous_falls_back_to_engine():
+    """Pipelined/local-SGD closed forms are homogeneous-only: jitter (or
+    a slow worker) routes those grids through the engine."""
+    specs, t_f = trace.synthetic_specs(10, seed=22)
+    grid = SweepGrid(n_workers=(4,))
+    for schedule in (PipelinedAllReduce(0.5), LocalSGD(3)):
+        res = run_sweep(specs, t_f, grid, alpha=A, beta=B, gamma=G,
+                        iters=3, jitter_sigma=0.2, schedule=schedule)
+        assert res.used_engine.all()
+        res = run_sweep(specs, t_f, grid, alpha=A, beta=B, gamma=G,
+                        iters=3, slow={0: 2.0}, schedule=schedule)
+        assert res.used_engine.all()
+
+
+def test_pipelined_span_reflects_overlap():
+    """Pipelined iterations overlap (the all-gather tail hides under the
+    next forward), so the run span is strictly less than the sum of the
+    per-iteration windows — while for barrier schedules they're equal."""
+    specs, t_f = trace.synthetic_specs(16, seed=23)
+    grid = SweepGrid(n_workers=(8,))
+    kw = dict(alpha=A, beta=B, gamma=G, iters=4)
+    pipe = run_sweep(specs, t_f, grid, schedule=PipelinedAllReduce(0.5),
+                     **kw)
+    assert not pipe.used_engine.any()
+    assert float(pipe.span[0, 0, 0]) < \
+        float(pipe.t_iter[0, 0, 0].sum()) - 1e-12
+    bsp = run_sweep(specs, t_f, grid, schedule=BSP(), **kw)
+    assert float(bsp.span[0, 0, 0]) == \
+        pytest.approx(float(bsp.t_iter[0, 0, 0].sum()), abs=1e-12)
