@@ -4,9 +4,15 @@ collectives.  This package is the paper's contribution."""
 from repro.core.cost_model import (
     AllReduceModel,
     HierarchicalModel,
+    PathModel,
+    PathPhase,
+    as_linear,
+    blend_path,
+    fit_path,
     make_model,
     fit,
     production_comm_model,
+    single_path,
     PAPER_CLUSTERS,
 )
 from repro.core.planner import (
@@ -30,19 +36,21 @@ from repro.core.coplanner import (
     CoRound,
     JobObservation,
     coplan,
+    coplan_incremental,
 )
 from repro.core.simulator import (simulate, speedup, compare_strategies,
                                   cross_validate, SimResult)
 from repro.core import bucketer, comm, profiler
 
 __all__ = [
-    "AllReduceModel", "HierarchicalModel", "make_model", "fit",
-    "production_comm_model", "PAPER_CLUSTERS",
+    "AllReduceModel", "HierarchicalModel", "PathModel", "PathPhase",
+    "as_linear", "blend_path", "fit_path", "single_path",
+    "make_model", "fit", "production_comm_model", "PAPER_CLUSTERS",
     "TensorSpec", "MergePlan", "make_plan", "plan_wfbp", "plan_single",
     "plan_fixed_size", "plan_mgwfbp", "plan_dp_optimal", "plan_brute_force",
     "plan_contention_aware", "replan",
     "CoJob", "CoObservation", "CoPlanResult", "CoPlanner", "CoRound",
-    "JobObservation", "coplan",
+    "JobObservation", "coplan", "coplan_incremental",
     "simulate", "speedup", "compare_strategies", "cross_validate",
     "SimResult",
     "bucketer", "comm", "profiler",

@@ -85,7 +85,7 @@ class CoJob:
 
     name: str
     specs: tuple[TensorSpec, ...]
-    model: AllReduceModel
+    model: AllReduceModel           # or a cost_model.PathModel
     t_f: float = 0.0
     schedule: object | None = None
     seed_plans: tuple[MergePlan, ...] = ()
@@ -116,6 +116,12 @@ class JobObservation:
     samples: tuple[tuple[int, float], ...]       # (nbytes, occupancy s)
     link_bytes: tuple[tuple[str, float], ...] = ()
     link_busy: tuple[tuple[str, float], ...] = ()
+    # per-link (nbytes, occupancy) samples — ``samples`` decomposed leg by
+    # leg (the engine's ``JobResult.link_samples``).  THE refit input for
+    # jobs carrying a PathModel: each link's (a_l, b_l) is corrected from
+    # its own column, and shared-model mode pools columns per physical
+    # link across jobs.
+    link_samples: tuple[tuple[str, tuple[tuple[int, float], ...]], ...] = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,6 +134,23 @@ class CoObservation:
 
 # evaluate(plans: job name -> candidate MergePlan) -> CoObservation
 CoEvaluate = Callable[[Mapping[str, MergePlan]], CoObservation]
+
+
+def _models_compatible(candidate, base) -> bool:
+    """True iff ``candidate`` can stand in for ``base`` as a job's
+    effective model: refit dispatches on the model KIND (per-link for
+    :class:`~repro.core.cost_model.PathModel`, whole-collective
+    otherwise) and per-phase blending needs identical link structure, so
+    a warm-start model of the wrong shape would silently change the
+    refit mode mid-fleet."""
+    cand_path = isinstance(candidate, cost_model.PathModel)
+    base_path = isinstance(base, cost_model.PathModel)
+    if cand_path != base_path:
+        return False
+    if cand_path:
+        return [p.link for p in candidate.phases] == \
+            [p.link for p in base.phases]
+    return True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -199,7 +222,9 @@ class CoPlanner:
 
     def __init__(self, jobs: Sequence[CoJob], evaluate: CoEvaluate, *,
                  max_rounds: int = 5, damping: float = 0.5,
-                 shared_model: bool = False):
+                 shared_model: bool = False,
+                 initial_plans: Mapping[str, MergePlan] | None = None,
+                 initial_models: Mapping[str, AllReduceModel] | None = None):
         if not 0.0 < damping <= 1.0:
             raise ValueError(f"damping must be in (0, 1], got {damping}")
         if max_rounds < 1:
@@ -209,16 +234,51 @@ class CoPlanner:
             raise ValueError("need >= 1 job")
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate job names: {names}")
+        by_name = {j.name: j for j in jobs}
+        for name, p in (initial_plans or {}).items():
+            if name not in by_name:
+                raise ValueError(f"initial plan for unknown job {name!r}")
+            if p.num_tensors != len(by_name[name].specs):
+                raise ValueError(
+                    f"initial plan for {name!r} covers {p.num_tensors} "
+                    f"tensors, job has {len(by_name[name].specs)}")
+        for name, m in (initial_models or {}).items():
+            if name not in by_name:
+                raise ValueError(f"initial model for unknown job {name!r}")
+            if not _models_compatible(m, by_name[name].model):
+                raise ValueError(
+                    f"initial model for {name!r} is incompatible with "
+                    f"the job's model kind (flat vs per-link path, or "
+                    f"mismatched phase links)")
         self.jobs = tuple(jobs)
         self.evaluate = evaluate
         self.max_rounds = max_rounds
         self.damping = damping
         self.shared_model = shared_model
+        self.initial_plans = dict(initial_plans or {})
+        self.initial_models = dict(initial_models or {})
 
     # -- internals -------------------------------------------------------
 
     def _key(self, plans: Mapping[str, MergePlan]) -> tuple:
         return tuple((j.name, plans[j.name].buckets) for j in self.jobs)
+
+    def _link_pool(self, obs: CoObservation, job: CoJob,
+                   links: Sequence[str]) -> dict[str, list[tuple[int,
+                                                                 float]]]:
+        """Per-link refit samples for ``job``: its own leg-by-leg
+        telemetry, or — in shared-model mode — the aggregate pool of
+        every job's samples on each physical link.  Unlike
+        whole-collective durations, a per-link sample is a clean
+        observation of THAT link no matter which other links the donor's
+        path crosses, so pooling needs no same-shape gating."""
+        pool: dict[str, list[tuple[int, float]]] = {l: [] for l in links}
+        donors = self.jobs if self.shared_model else (job,)
+        for j in donors:
+            for link, pairs in obs.jobs[j.name].link_samples:
+                if link in pool:
+                    pool[link].extend(pairs)
+        return pool
 
     def _refit(self, obs: CoObservation, eff: dict[str, AllReduceModel],
                job: CoJob) -> None:
@@ -226,12 +286,28 @@ class CoPlanner:
 
         Exactly one job per sub-step: refitting the whole fleet at every
         sub-step would blend each model N times per sweep, silently
-        scaling the damping strength with fleet size."""
-        samples: Sequence[tuple[int, float]] = obs.jobs[job.name].samples
+        scaling the damping strength with fleet size.
+
+        A job carrying a :class:`~repro.core.cost_model.PathModel` is
+        refit PER LINK: each phase's (a_l, b_l) from that link's own
+        occupancy samples (``JobObservation.link_samples``), pooled per
+        physical link across jobs in shared-model mode — which is what
+        makes ``shared_model=True`` work on hierarchical fleets, where
+        the old whole-collective pooling had to be disabled."""
+        cur = eff[job.name]
+        jo = obs.jobs[job.name]
+        if isinstance(cur, cost_model.PathModel):
+            pool = self._link_pool(obs, job, cur.links)
+            fitted = cost_model.fit_path(cur, pool, jo.samples)
+            eff[job.name] = cost_model.blend_path(cur, fitted,
+                                                  self.damping)
+            return
+        samples: Sequence[tuple[int, float]] = jo.samples
         if self.shared_model and len(job.links) == 1:
-            # donors must live on exactly the same single link: a
-            # multi-link job's whole-collective durations embed time on
-            # its OTHER links and would bias the per-link fit
+            # flat models fit whole-collective durations, so donors must
+            # live on exactly the same single link: a multi-link job's
+            # durations embed time on its OTHER links and would bias the
+            # per-link fit
             pooled: list[tuple[int, float]] = []
             for j in self.jobs:
                 if j.links == job.links:
@@ -249,6 +325,13 @@ class CoPlanner:
         planners = {j.name: Planner(list(j.specs), j.model) for j in jobs}
         plans = {j.name: planners[j.name].plan() for j in jobs}
         eff = {j.name: j.model for j in jobs}
+        # warm start (job churn): the incumbent assignment/models replace
+        # the exclusive-link round-0 state, so the loop re-enters best
+        # response from where the fleet already is instead of from
+        # scratch; jobs without an incumbent entry (arrivals) keep their
+        # fresh exclusive-link plan.
+        eff.update(self.initial_models)
+        plans.update(self.initial_plans)
         rounds: list[CoRound] = []
         best_round = 0
         cache: dict[tuple, CoObservation] = {}
@@ -344,3 +427,34 @@ def coplan(jobs: Sequence[CoJob], evaluate: CoEvaluate, *,
     """One-shot convenience wrapper around :class:`CoPlanner`."""
     return CoPlanner(jobs, evaluate, max_rounds=max_rounds, damping=damping,
                      shared_model=shared_model).run()
+
+
+def coplan_incremental(incumbent: CoPlanResult, jobs: Sequence[CoJob],
+                       evaluate: CoEvaluate, *, max_rounds: int = 5,
+                       damping: float = 0.5,
+                       shared_model: bool = False) -> CoPlanResult:
+    """Re-plan after job arrival/departure from an incumbent co-plan.
+
+    ``jobs`` is the NEW fleet (arrivals included, departures dropped);
+    ``evaluate`` must simulate that fleet.  Surviving jobs re-enter the
+    best-response loop from the incumbent's plans and effective models —
+    so an arrival perturbs a converged assignment instead of discarding
+    it, and a departure leaves the survivors' fitted contention models as
+    the starting estimate (too pessimistic now, corrected by the first
+    refit sweep).  Arrivals have no incumbent entry and start from their
+    exclusive-link plan, exactly like round 0 of a fresh co-plan.  The
+    incumbent's plans for surviving jobs become round-0 candidates, so
+    the result can never be worse than keeping the incumbent assignment
+    on the new fleet — the churn analogue of the seed guarantee.
+    """
+    names = {j.name: j for j in jobs}
+    plans = {n: p for n, p in incumbent.plans.items()
+             if n in names and p.num_tensors == len(names[n].specs)}
+    # carry a survivor's fitted model forward only when it matches the
+    # new job's model kind/structure — e.g. a flat incumbent cannot seed
+    # a per-link path job without silently disabling its per-link refit
+    models = {n: m for n, m in incumbent.models.items()
+              if n in plans and _models_compatible(m, names[n].model)}
+    return CoPlanner(jobs, evaluate, max_rounds=max_rounds,
+                     damping=damping, shared_model=shared_model,
+                     initial_plans=plans, initial_models=models).run()

@@ -26,8 +26,9 @@ the startup term:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
-from typing import Sequence
+from typing import Mapping, Sequence
 
 import numpy as np
 
@@ -95,6 +96,238 @@ def blend(old: AllReduceModel, new: AllReduceModel,
     return AllReduceModel(old.a * (1 - weight) + new.a * weight,
                           old.b * (1 - weight) + new.b * weight,
                           new.name)
+
+
+# ---------------------------------------------------------------------------
+# Per-link path models.
+#
+# MG-WFBP only needs the communication model to be affine in the message
+# size; it does NOT need the fabric to be one link.  A multi-phase
+# collective (BlueConnect-style per-level stages: ICI reduce-scatter,
+# DCN all-reduce on the shard, ICI all-gather) is a *sum* of per-link
+# affine phases — still affine — so the planner stays exact while each
+# link's (a_l, b_l) can be fit from that link's own telemetry.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PathPhase:
+    """One per-link leg of a collective's path.
+
+    ``a``/``b`` are the phase's startup and per-byte cost *of the full
+    message* — for a sharded leg (e.g. the cross-pod all-reduce on a
+    1/intra_size shard) ``b`` already includes the shard dilution, so a
+    phase's wall time for a message of M bytes is simply ``a + b*M``.
+    ``shard_fraction`` records how many of M's bytes physically cross the
+    link (per-link *byte* accounting: ``M * shard_fraction``), which is
+    provenance the time model does not need but the telemetry
+    conservation laws do.
+    """
+
+    link: str
+    a: float                    # startup on this link, seconds
+    b: float                    # seconds per byte of the FULL message
+    shard_fraction: float = 1.0  # fraction of the message crossing the link
+
+    def __post_init__(self):
+        if self.a < 0 or self.b < 0:
+            raise ValueError(f"negative phase cost: {self}")
+        if not 0.0 < self.shard_fraction <= 1.0:
+            raise ValueError(
+                f"shard_fraction must be in (0, 1]: {self}")
+
+    def time(self, nbytes: float) -> float:
+        if nbytes <= 0:
+            return 0.0
+        return self.a + self.b * float(nbytes)
+
+    def link_bytes(self, nbytes: float) -> float:
+        """Bytes this phase actually moves across its link."""
+        return float(nbytes) * self.shard_fraction
+
+
+@dataclasses.dataclass(frozen=True)
+class PathModel:
+    """An ordered sequence of per-link affine phases.
+
+    ``flatten()`` composes the phases into the single ``(a, b)`` the
+    MG-WFBP DP consumes: ``a = sum(a_l)``, ``b = sum(b_l)`` (each phase's
+    ``b`` is already per full-message byte).  For the two-level ICI+DCN
+    case this is bit-identical to :meth:`HierarchicalModel.flat` — pinned
+    by regression test — so every flat-model consumer keeps producing the
+    same plans.  The path view additionally exposes per-link structure:
+    which links a collective occupies, and a per-phase refit surface
+    (:func:`fit_path` / :func:`blend_path`) so each link's startup and
+    bandwidth can be corrected from that link's own telemetry.
+    """
+
+    phases: tuple[PathPhase, ...]
+    name: str = "path"
+
+    def __post_init__(self):
+        object.__setattr__(self, "phases", tuple(self.phases))
+        if not self.phases:
+            raise ValueError("a path needs >= 1 phase")
+
+    # -- flat (a, b) view -------------------------------------------------
+
+    @property
+    def a(self) -> float:
+        acc = 0.0
+        for p in self.phases:
+            acc += p.a
+        return acc
+
+    @property
+    def b(self) -> float:
+        acc = 0.0
+        for p in self.phases:
+            acc += p.b
+        return acc
+
+    def flatten(self) -> AllReduceModel:
+        """The flat affine model the planner DP consumes."""
+        return AllReduceModel(self.a, self.b, self.name)
+
+    def time(self, nbytes: float) -> float:
+        if nbytes <= 0:
+            return 0.0
+        return self.a + self.b * float(nbytes)
+
+    # -- per-link view ----------------------------------------------------
+
+    @property
+    def links(self) -> tuple[str, ...]:
+        """Links in phase order, deduplicated."""
+        seen: list[str] = []
+        for p in self.phases:
+            if p.link not in seen:
+                seen.append(p.link)
+        return tuple(seen)
+
+    def phases_on(self, link: str) -> tuple[PathPhase, ...]:
+        return tuple(p for p in self.phases if p.link == link)
+
+    def link_bytes(self, nbytes: float) -> dict[str, float]:
+        """Per-link bytes one collective of ``nbytes`` moves."""
+        out: dict[str, float] = {}
+        for p in self.phases:
+            out[p.link] = out.get(p.link, 0.0) + p.link_bytes(nbytes)
+        return out
+
+    def scaled(self, factor: float) -> "PathModel":
+        return PathModel(tuple(
+            PathPhase(p.link, p.a * factor, p.b * factor, p.shard_fraction)
+            for p in self.phases), self.name)
+
+    def with_phases(self, phases: Sequence[PathPhase]) -> "PathModel":
+        return PathModel(tuple(phases), self.name)
+
+
+def single_path(model: AllReduceModel, link: str = "net") -> PathModel:
+    """Wrap a flat (a, b) model as a one-phase path on ``link``."""
+    return PathModel((PathPhase(link, model.a, model.b),), model.name)
+
+
+def as_linear(model) -> AllReduceModel:
+    """Normalize a cost model to the flat (a, b) view the DP consumes.
+
+    Accepts an :class:`AllReduceModel` (returned as-is — the flat case is
+    bit-identical to pre-PathModel behavior), a :class:`PathModel` or
+    anything else exposing ``flatten()`` (flattened), or a
+    :class:`HierarchicalModel` (via ``flat()``).  Objects with none of
+    those pass through and must expose ``a``/``b``/``time`` themselves.
+    """
+    if isinstance(model, AllReduceModel):
+        return model
+    if isinstance(model, HierarchicalModel):
+        return model.flat()
+    if hasattr(model, "flatten"):
+        return model.flatten()
+    return model
+
+
+def fit_path(base: PathModel,
+             link_samples: Mapping[str, Sequence[tuple[int, float]]],
+             samples: Sequence[tuple[int, float]] = ()) -> PathModel:
+    """Per-phase refit of a path from per-link (nbytes, occupancy) samples.
+
+    For each link with samples spanning >= 2 distinct sizes the link's
+    observed occupancy is least-squares fit to ``a_l + b_l * M`` (M the
+    FULL message size — the shard dilution lands in the fitted ``b_l``
+    exactly as the base path encodes it).  Rank-deficient links fall back
+    to stretch-scaling the base phase by the mean observed/predicted
+    ratio.  Links with no samples at all keep their base phase, unless
+    whole-collective ``samples`` are provided — then the whole path is
+    stretch-scaled like the flat :func:`repro.core.planner.effective_model`
+    degenerate case.
+
+    A link that appears in several phases is refit as an aggregate and the
+    correction distributed over its phases as a common stretch.
+    """
+    by_link: dict[str, list[tuple[float, float]]] = {}
+    for link, pairs in link_samples.items():
+        good = [(float(n), float(t)) for n, t in pairs if n > 0]
+        if good:
+            by_link[link] = good
+    if not by_link:
+        # no per-link telemetry: whole-collective stretch (flat fallback)
+        sized = [(float(n), float(t)) for n, t in samples if n > 0]
+        stretches = [t / self_t for n, t in sized
+                     if (self_t := base.time(n)) > 0]
+        if not stretches:
+            return base
+        return base.scaled(sum(stretches) / len(stretches))
+
+    new_phases = list(base.phases)
+    for link in base.links:
+        pairs = by_link.get(link)
+        if not pairs:
+            continue
+        idxs = [i for i, p in enumerate(base.phases) if p.link == link]
+        agg_a = sum(base.phases[i].a for i in idxs)
+        agg_b = sum(base.phases[i].b for i in idxs)
+        if len({n for n, _ in pairs}) >= 2:
+            fitted = fit([n for n, _ in pairs], [t for _, t in pairs],
+                         f"effective:{link}")
+            fa, fb = fitted.a, fitted.b
+        else:
+            agg = AllReduceModel(agg_a, agg_b, link)
+            stretches = [t / agg.time(n) for n, t in pairs
+                         if agg.time(n) > 0]
+            if not stretches:
+                continue
+            s = sum(stretches) / len(stretches)
+            fa, fb = agg_a * s, agg_b * s
+        if len(idxs) == 1:
+            i = idxs[0]
+            p = base.phases[i]
+            new_phases[i] = PathPhase(link, fa, fb, p.shard_fraction)
+        else:
+            # distribute the aggregate correction proportionally
+            ra = fa / agg_a if agg_a > 0 else 0.0
+            rb = fb / agg_b if agg_b > 0 else 0.0
+            for j, i in enumerate(idxs):
+                p = base.phases[i]
+                a_i = p.a * ra if agg_a > 0 else (fa if j == 0 else 0.0)
+                b_i = p.b * rb if agg_b > 0 else (fb if j == 0 else 0.0)
+                new_phases[i] = PathPhase(link, a_i, b_i, p.shard_fraction)
+    return base.with_phases(new_phases)
+
+
+def blend_path(old: PathModel, new: PathModel, weight: float) -> PathModel:
+    """Per-phase damped update (the path analogue of :func:`blend`)."""
+    if not 0.0 <= weight <= 1.0:
+        raise ValueError(f"blend weight must be in [0, 1], got {weight}")
+    if len(old.phases) != len(new.phases) or \
+            any(o.link != n.link for o, n in zip(old.phases, new.phases)):
+        raise ValueError(
+            f"cannot blend paths with different structure: "
+            f"{[p.link for p in old.phases]} vs "
+            f"{[p.link for p in new.phases]}")
+    return PathModel(tuple(
+        PathPhase(o.link, o.a * (1 - weight) + n.a * weight,
+                  o.b * (1 - weight) + n.b * weight, o.shard_fraction)
+        for o, n in zip(old.phases, new.phases)), new.name)
 
 
 # ---------------------------------------------------------------------------
@@ -220,15 +453,40 @@ class HierarchicalModel:
     inter: AllReduceModel       # DCN level
     intra_size: int             # chips per pod participating in level 1
 
+    def path(self, ici_link: str = "ici", dcn_link: str = "dcn"
+             ) -> PathModel:
+        """The per-link decomposition this two-level model composes.
+
+        ICI leg: RS + AG each cost ~half of a full all-reduce's bandwidth
+        term but pay the full startup; DCN leg: all-reduce on the
+        1/intra_size shard — its per-full-message-byte cost is the level
+        model's ``b`` diluted by the shard, and only that fraction of the
+        bytes crosses the link.  ``flat()``/``a``/``b`` derive from this
+        path (one source of truth), bit-identical to the pre-PathModel
+        formulas ``a = intra.a + inter.a``,
+        ``b = intra.b + inter.b / intra_size``.
+        """
+        shard = max(self.intra_size, 1)
+        return PathModel((
+            PathPhase(ici_link, self.intra.a, self.intra.b),
+            PathPhase(dcn_link, self.inter.a, self.inter.b / shard,
+                      1.0 / shard),
+        ), "hierarchical")
+
+    @functools.cached_property
+    def _default_path(self) -> PathModel:
+        # cached: a/b/time are called per bucket per iteration in the
+        # closed forms, and rebuilding the path there would put two
+        # object constructions in that hot loop
+        return self.path()
+
     @property
     def a(self) -> float:
-        # RS + AG each cost ~half of a full all-reduce's bandwidth term but
-        # pay the full startup; inter level pays its own startup.
-        return self.intra.a + self.inter.a
+        return self._default_path.a
 
     @property
     def b(self) -> float:
-        return self.intra.b + self.inter.b / max(self.intra_size, 1)
+        return self._default_path.b
 
     @property
     def name(self) -> str:  # pragma: no cover - trivial
@@ -241,7 +499,7 @@ class HierarchicalModel:
 
     def flat(self) -> AllReduceModel:
         """Collapse to a flat linear model for the planner."""
-        return AllReduceModel(self.a, self.b, "hierarchical")
+        return self._default_path.flatten()
 
 
 def production_comm_model(mesh_shape: Sequence[int],

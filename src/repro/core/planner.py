@@ -195,6 +195,7 @@ def plan_mgwfbp(specs: Sequence[TensorSpec], model: AllReduceModel) -> MergePlan
     L = len(specs)
     if L == 0:
         return MergePlan((), "mgwfbp")
+    model = cost_model.as_linear(model)
     a = model.a
     p = [float(s.nbytes) for s in specs]
     t_c = [model.time(x) for x in p]
@@ -239,6 +240,7 @@ def plan_dp_optimal(specs: Sequence[TensorSpec], model: AllReduceModel) -> Merge
     L = len(specs)
     if L == 0:
         return MergePlan((), "dp_optimal")
+    model = cost_model.as_linear(model)
     ready, acc = [], 0.0
     for s in specs:
         acc += s.t_b
@@ -322,7 +324,9 @@ class Planner:
         self.scratch_plans = 0
         self.incremental_updates = 0
         self._specs: list[TensorSpec] = list(specs)
-        self._model = model
+        # path models flatten to the (a, b) the DP consumes; a flat model
+        # passes through untouched (bit-identical to pre-path behavior)
+        self._model = cost_model.as_linear(model)
         self._rebuild()
 
     # -- public API ------------------------------------------------------
@@ -385,10 +389,11 @@ class Planner:
             dirty = min(dirty, len(self._specs))
             self._specs.extend(delta.append)
         if delta.model is not None:
-            if (delta.model.a != self._model.a or
-                    delta.model.b != self._model.b):
+            model = cost_model.as_linear(delta.model)
+            if (model.a != self._model.a or
+                    model.b != self._model.b):
                 dirty = 0                   # every edge cost changed
-            self._model = delta.model
+            self._model = model
         self._refresh(dirty)
         return self.plan()
 
@@ -611,6 +616,14 @@ def plan_contention_aware(
     iteration time, run through the same best-response machinery that
     co-plans N jobs — round for round the PR-2 loop (the pre-existing
     fixpoint tests pin the equivalence).
+
+    ``model`` may be a :class:`~repro.core.cost_model.PathModel`: the DP
+    plans on its flat composition (bit-identical for a single-phase
+    path), and if ``evaluate`` returns a third element — a mapping
+    ``link -> [(nbytes, occupancy s), ...]`` like the engine's
+    ``JobResult.link_samples`` — the refit corrects each link's
+    (a_l, b_l) from that link's own telemetry instead of smearing the
+    whole path into one effective pair.
     """
     from repro.core import coplanner    # local import: no cycle
 
@@ -620,11 +633,19 @@ def plan_contention_aware(
 
     def joint_evaluate(plans: Mapping[str, MergePlan]
                        ) -> "coplanner.CoObservation":
-        observed, samples = evaluate(plans["job"])
+        out = evaluate(plans["job"])
+        link_samples: Mapping = {}
+        if len(out) == 3:
+            observed, samples, link_samples = out
+        else:
+            observed, samples = out
         return coplanner.CoObservation(
             makespan=observed,
             jobs={"job": coplanner.JobObservation(
-                t_iter=observed, samples=tuple(samples))})
+                t_iter=observed, samples=tuple(samples),
+                link_samples=tuple(
+                    (link, tuple((int(n), float(t)) for n, t in pairs))
+                    for link, pairs in dict(link_samples).items()))})
 
     co = coplanner.CoPlanner([job], joint_evaluate, max_rounds=max_rounds,
                              damping=damping)

@@ -335,6 +335,13 @@ class JobResult:
     # collectives): for synchronous schedules this is plan bytes x iters —
     # schedule-invariant — while LocalSGD(H) moves 1/H of it.
     bytes_communicated: float = 0.0
+    # per-link occupancy per observed collective, keyed link ->
+    # (iteration, bucket) -> [full message nbytes, seconds the collective
+    # occupied that link].  Phases of one collective on the same link
+    # (e.g. a split reduce-scatter + all-gather) accumulate into one
+    # entry, so the per-link sample set mirrors ``bucket_samples`` leg by
+    # leg.  This is what per-link (a_l, b_l) refits consume.
+    link_occ: dict = dataclasses.field(default_factory=dict)
 
     @property
     def t_iters(self) -> list[float]:
@@ -353,6 +360,19 @@ class JobResult:
         deferral into the (a, b) fit."""
         return [(b.nbytes, b.duration)
                 for it in self.iterations for b in it.buckets]
+
+    @property
+    def link_samples(self) -> dict[str, list[tuple[int, float]]]:
+        """Per-link (nbytes, occupancy seconds) per observed collective.
+
+        ``nbytes`` is the FULL message size (the per-link byte dilution of
+        sharded legs lands in the fitted per-byte term, exactly as
+        :class:`repro.core.cost_model.PathPhase` encodes it); occupancy
+        includes the leg's startup and any processor-sharing stretch on
+        that link — the refit input for per-link path models
+        (:func:`repro.core.cost_model.fit_path`)."""
+        return {link: [(nb, occ) for nb, occ in per.values()]
+                for link, per in self.link_occ.items()}
 
     @property
     def link_telemetry(self) -> dict[str, tuple[float, float]]:
@@ -424,7 +444,8 @@ class _JobRun:
             if nbytes > 0 and fraction > 0 else []
         if fraction != 1.0 and phases:
             phases = [Phase(p.link, p.startup * fraction,
-                            p.seconds_per_byte * fraction) for p in phases]
+                            p.seconds_per_byte * fraction,
+                            p.shard_fraction) for p in phases]
 
         def next_phase(idx: int) -> None:
             if idx == len(phases):
@@ -436,8 +457,11 @@ class _JobRun:
 
             def transfer() -> None:
                 link = self.sim.links[ph.link]
+                # the link is charged the bytes that physically cross it:
+                # a sharded leg (shard_fraction < 1) moves only its shard
                 link.add_flow(ph.volume(nbytes), lambda: finish(),
-                              owner=self.name, nbytes=nbytes * fraction)
+                              owner=self.name,
+                              nbytes=nbytes * ph.shard_fraction * fraction)
 
             def finish() -> None:
                 args = {"iter": it, "bucket": k, "bytes": nbytes,
@@ -448,6 +472,13 @@ class _JobRun:
                     name=f"{tag}:b{k}", cat="comm", pid=self.name,
                     tid=f"link:{ph.link}", start=phase_start,
                     end=self.sim.engine.now, args=args))
+                # per-link occupancy sample (startup + contended
+                # transfer), aggregated per collective so split fractions
+                # and repeated same-link legs land in ONE sample
+                per = self.result.link_occ.setdefault(ph.link, {})
+                nb, occ = per.get((it, k), (nbytes, 0.0))
+                per[(it, k)] = (nb, occ +
+                                (self.sim.engine.now - phase_start))
                 next_phase(idx + 1)
 
             self.sim.engine.after(ph.startup, transfer)

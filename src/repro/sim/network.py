@@ -27,11 +27,24 @@ from repro.core import cost_model
 
 @dataclasses.dataclass(frozen=True)
 class Phase:
-    """One leg of a collective on one link resource."""
+    """One leg of a collective on one link resource — the engine-side
+    execution view of a :class:`~repro.core.cost_model.PathPhase`
+    (same field order; :meth:`from_path` is the ONE transcription point).
+
+    ``shard_fraction`` is the fraction of the collective's bytes that
+    physically cross this link (1.0 for a flat leg, ``1/intra_size`` for
+    the cross-pod all-reduce on the intra-pod shard) — it scales the
+    link's *byte* accounting, not its timing (``seconds_per_byte`` is
+    already per full-message byte)."""
 
     link: str
     startup: float            # latency before the transfer starts (s)
     seconds_per_byte: float   # transfer cost at full link rate (s/B)
+    shard_fraction: float = 1.0
+
+    @staticmethod
+    def from_path(p: cost_model.PathPhase) -> "Phase":
+        return Phase(p.link, p.a, p.b, p.shard_fraction)
 
     def volume(self, nbytes: float) -> float:
         """Transfer work in seconds-at-full-rate."""
@@ -39,28 +52,71 @@ class Phase:
 
 
 class Topology:
-    """Base: a single-link topology defined directly by an (a, b) model."""
+    """Base: a topology defined directly by a cost model.
 
-    def __init__(self, model: cost_model.AllReduceModel, link: str = "net",
-                 n_workers: int = 1):
-        self._model = model
-        self.link = link
+    The single source of truth is the :class:`~repro.core.cost_model.
+    PathModel`: ``linear_model()`` (the flat (a, b) the planner consumes)
+    and ``phases(nbytes)`` (how a collective occupies link resources in
+    the engine) are two views of it.  Construct from a flat
+    :class:`~repro.core.cost_model.AllReduceModel` (wrapped as a
+    one-phase path on ``link``) or directly from a multi-phase
+    ``PathModel``.
+    """
+
+    def __init__(self, model, link: str = "net", n_workers: int = 1,
+                 algorithm: str = "ring"):
+        if isinstance(model, cost_model.PathModel):
+            self._path = model
+            self._model = model.flatten()
+            self.link = model.links[0]
+        else:
+            self._model = model
+            self._path = cost_model.single_path(model, link)
+            self.link = link
         self.n_workers = n_workers
+        self.algorithm = algorithm
 
     @property
     def links(self) -> tuple[str, ...]:
-        return (self.link,)
+        return self._path.links
 
     def linear_model(self) -> cost_model.AllReduceModel:
         return self._model
 
+    def path_model(self) -> cost_model.PathModel:
+        """The per-link decomposition ``phases()``/``linear_model()``
+        are views of."""
+        return self._path
+
     def phases(self, nbytes: float) -> list[Phase]:
-        return [Phase(self.link, self._model.a, self._model.b)]
+        return [Phase.from_path(p) for p in self._path.phases]
 
     def rescale(self, n_workers: int) -> "Topology":
-        """Same physical links, different membership (elastic resize)."""
-        raise NotImplementedError(
-            f"{type(self).__name__} does not support elastic resize")
+        """Same physical links, different membership (elastic resize).
+
+        The base class knows only a fitted model, not the hardware
+        constants behind it, so it falls back to the inversion route:
+        invert the flat (a, b) through the Table-2 formula for
+        ``algorithm`` to point-to-point (alpha, beta), then re-predict
+        for the new membership (:func:`predicted_model`).  That
+        inversion is only meaningful for a SINGLE-link topology — a
+        multi-phase path's composed (a, b) mixes several links' constants
+        and inverting it would silently collapse the path onto one link —
+        so multi-phase base topologies still refuse (subclasses that know
+        their per-level constants, like ``HierarchicalTopology``, rebuild
+        exactly instead).
+        """
+        if n_workers == self.n_workers:
+            return self
+        if len(self._path.phases) > 1:
+            raise NotImplementedError(
+                f"cannot invert a {len(self._path.phases)}-phase path "
+                f"over links {self._path.links} into single-link "
+                f"constants; use a topology subclass that knows its "
+                f"per-level hardware parameters")
+        model = predicted_model(self.algorithm, self._model.a,
+                                self._model.b, self.n_workers, n_workers)
+        return Topology(model, self.link, n_workers, self.algorithm)
 
 
 class FlatTopology(Topology):
@@ -68,11 +124,10 @@ class FlatTopology(Topology):
 
     def __init__(self, algorithm: str, n_workers: int, alpha: float,
                  beta: float, gamma: float = 0.0, link: str = "net"):
-        self.algorithm = algorithm
         self.alpha, self.beta, self.gamma = alpha, beta, gamma
         model = cost_model.make_model(algorithm, n_workers, alpha, beta,
                                       gamma)
-        super().__init__(model, link, n_workers)
+        super().__init__(model, link, n_workers, algorithm)
 
     def rescale(self, n_workers: int) -> "FlatTopology":
         return FlatTopology(self.algorithm, n_workers, self.alpha,
@@ -80,10 +135,15 @@ class FlatTopology(Topology):
 
     @staticmethod
     def from_fitted(a: float, b: float, n_workers: int = 1,
-                    link: str = "net") -> "Topology":
-        """Topology from measured (a, b) — e.g. PAPER_CLUSTERS entries."""
+                    link: str = "net",
+                    algorithm: str = "ring") -> "Topology":
+        """Topology from measured (a, b) — e.g. PAPER_CLUSTERS entries.
+
+        ``algorithm`` names the collective the measurements came from; the
+        base class uses it for inversion-based :meth:`Topology.rescale`.
+        """
         return Topology(cost_model.AllReduceModel(a, b, "fitted"), link,
-                        n_workers)
+                        n_workers, algorithm)
 
 
 class HierarchicalTopology(Topology):
@@ -99,12 +159,22 @@ class HierarchicalTopology(Topology):
                  ici_bw: float = cost_model.ICI_BW_PER_LINK,
                  ici_alpha: float = cost_model.ICI_ALPHA,
                  dcn_bw: float = cost_model.DCN_BW,
-                 dcn_alpha: float = cost_model.DCN_ALPHA):
+                 dcn_alpha: float = cost_model.DCN_ALPHA,
+                 ici_link: str | None = None,
+                 dcn_link: str | None = None):
         if pods < 1 or chips_per_pod < 1:
             raise ValueError("need >= 1 pod and >= 1 chip per pod")
         self.pods, self.chips_per_pod = pods, chips_per_pod
+        # instance link names shadow the class defaults so multi-job
+        # fleets can give each job a PRIVATE ici link while sharing one
+        # dcn uplink (scenarios.hierarchical_shared_jobs)
+        self.ICI_LINK = ici_link if ici_link is not None \
+            else type(self).ICI_LINK
+        self.DCN_LINK = dcn_link if dcn_link is not None \
+            else type(self).DCN_LINK
         self._params = dict(ici_bw=ici_bw, ici_alpha=ici_alpha,
-                            dcn_bw=dcn_bw, dcn_alpha=dcn_alpha)
+                            dcn_bw=dcn_bw, dcn_alpha=dcn_alpha,
+                            ici_link=ici_link, dcn_link=dcn_link)
         intra = (cost_model.tpu_ici_ring(chips_per_pod, bw_per_link=ici_bw,
                                          alpha=ici_alpha)
                  if chips_per_pod > 1
@@ -113,28 +183,13 @@ class HierarchicalTopology(Topology):
             inter = cost_model.tpu_dcn(pods, bw=dcn_bw, alpha=dcn_alpha)
             self._hier = cost_model.HierarchicalModel(
                 intra=intra, inter=inter, intra_size=chips_per_pod)
-            model = self._hier.flat()
+            path = self._hier.path(self.ICI_LINK, self.DCN_LINK)
         else:
             self._hier = None
-            model = cost_model.AllReduceModel(intra.a, intra.b,
-                                              "tpu_ici_ring")
-        super().__init__(model, self.ICI_LINK, pods * chips_per_pod)
-
-    @property
-    def links(self) -> tuple[str, ...]:
-        return (self.ICI_LINK, self.DCN_LINK) if self._hier else \
-            (self.ICI_LINK,)
-
-    def phases(self, nbytes: float) -> list[Phase]:
-        if self._hier is None:
-            m = self.linear_model()
-            return [Phase(self.ICI_LINK, m.a, m.b)]
-        h = self._hier
-        return [
-            Phase(self.ICI_LINK, h.intra.a, h.intra.b),
-            Phase(self.DCN_LINK, h.inter.a,
-                  h.inter.b / max(h.intra_size, 1)),
-        ]
+            path = cost_model.single_path(
+                cost_model.AllReduceModel(intra.a, intra.b,
+                                          "tpu_ici_ring"), self.ICI_LINK)
+        super().__init__(path, self.ICI_LINK, pods * chips_per_pod)
 
     def rescale(self, n_workers: int) -> "HierarchicalTopology":
         """Resize by pod count; chips per pod are fixed hardware."""

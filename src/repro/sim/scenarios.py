@@ -25,7 +25,14 @@ Each builder assembles a ready-to-run :class:`ClusterSim`:
 * ``contended_two_jobs_plan`` — the PR-2 one-sided fixpoint
   (``planner.plan_contention_aware``): optimize ONE job against a frozen
   neighbour plan.  Kept as the baseline the joint co-plan is benchmarked
-  against (you control your own job; the neighbour does not cooperate).
+  against (you control your own job; the neighbour does not cooperate);
+* ``hierarchical_shared_jobs`` / ``hierarchical_jobs_plan`` — N jobs on
+  independent ICI pods sharing one DCN uplink, co-planned with per-link
+  :class:`~repro.core.cost_model.PathModel` refits (each link's
+  (a_l, b_l) from its own occupancy telemetry; ``shared_model=True``
+  pools the DCN samples of all jobs);
+* ``job_churn`` — arrival/departure mid-run: re-plan the new fleet
+  through ``coplan_incremental`` from the incumbent assignment.
 
 Builders take ``(specs, t_f)`` so callers choose the profile source
 (``benchmarks/paper_profiles.py``, ``core/profiler.py`` measurements, or
@@ -367,24 +374,51 @@ def contended_jobs_plan(jobs: Sequence[CoJobSpec], *, n_workers: int = 8,
     default).  Per-job observed times are span-based rates (pipelined
     iterations overlap, so per-iteration windows would double-count)."""
     jobs = tuple(jobs)
-    co_jobs = []
+    co_jobs = _flat_co_jobs(jobs, n_workers, algorithm, alpha, beta,
+                            gamma)
+    evaluate = _joint_evaluate(
+        lambda candidate: shared_link_jobs(
+            jobs, n_workers=n_workers, algorithm=algorithm, alpha=alpha,
+            beta=beta, gamma=gamma, iters=iters,
+            compute_mode=compute_mode, seed=seed, plans=candidate,
+            bursts=bursts), jobs)
+
+    return coplanner.coplan(co_jobs, evaluate, max_rounds=max_rounds,
+                            damping=damping, shared_model=shared_model)
+
+
+def _flat_co_jobs(jobs: Sequence[CoJobSpec], n_workers: int,
+                  algorithm: str, alpha: float, beta: float,
+                  gamma: float) -> list[CoJob]:
+    """Planning-side CoJobs for a flat shared-link fleet: each job's
+    exclusive-link model, its strategy plan as the seed baseline, and
+    the common link declared for shared-model pooling (one construction
+    point for `contended_jobs_plan` and `job_churn`)."""
+    out = []
     for j in jobs:
         n = j.n_workers if j.n_workers is not None else n_workers
         topo = FlatTopology(algorithm, n, alpha, beta, gamma)
         model = topo.linear_model()
-        co_jobs.append(CoJob(
+        out.append(CoJob(
             name=j.name, specs=j.specs, model=model, t_f=j.t_f,
             schedule=j.schedule,
             seed_plans=(planner.make_plan(j.strategy, j.specs, model),),
             links=(topo.link,)))
+    return out
 
+
+def _joint_evaluate(build_sim: Callable[[Mapping[str, MergePlan]],
+                                        ClusterSim],
+                    jobs: Sequence[CoJobSpec]) -> "coplanner.CoEvaluate":
+    """Joint-evaluation closure shared by every co-plan entry point:
+    simulate all jobs together under a candidate assignment and package
+    each job's observation — span-based rates (pipelined iterations
+    overlap, so per-iteration windows would double-count), the
+    whole-collective refit samples, and the per-link telemetry
+    (cumulative bytes/busy + the leg-by-leg occupancy samples per-link
+    path refits consume)."""
     def evaluate(candidate: Mapping[str, MergePlan]) -> CoObservation:
-        sim = shared_link_jobs(jobs, n_workers=n_workers,
-                               algorithm=algorithm, alpha=alpha, beta=beta,
-                               gamma=gamma, iters=iters,
-                               compute_mode=compute_mode, seed=seed,
-                               plans=candidate, bursts=bursts)
-        res = sim.run()
+        res = build_sim(candidate).run()
         observed = {}
         for j in jobs:
             jr = res.job(j.name)
@@ -393,11 +427,12 @@ def contended_jobs_plan(jobs: Sequence[CoJobSpec], *, n_workers: int = 8,
                 t_iter=span / len(jr.iterations),
                 samples=tuple(jr.bucket_samples),
                 link_bytes=jr.iterations[-1].link_bytes,
-                link_busy=jr.iterations[-1].link_busy)
+                link_busy=jr.iterations[-1].link_busy,
+                link_samples=tuple(
+                    (link, tuple(pairs))
+                    for link, pairs in jr.link_samples.items()))
         return CoObservation(makespan=res.makespan, jobs=observed)
-
-    return coplanner.coplan(co_jobs, evaluate, max_rounds=max_rounds,
-                            damping=damping, shared_model=shared_model)
+    return evaluate
 
 
 def contended_two_jobs_plan(specs_a: Sequence[TensorSpec], t_f_a: float,
@@ -458,6 +493,188 @@ def contended_two_jobs_plan(specs_a: Sequence[TensorSpec], t_f_a: float,
         damping=damping,
         seed_plans=(planner.make_plan(baseline_strategy, specs_a, model),),
         schedule=schedule)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical (ICI + shared DCN) co-planning.
+# ---------------------------------------------------------------------------
+
+def _pod_topology(name: str, pods: int, chips_per_pod: int,
+                  dcn_link: str, **hier_kw) -> HierarchicalTopology:
+    """One job's two-level topology: a PRIVATE ici link (per-pod fabric
+    nobody else touches) and the fleet-shared DCN uplink."""
+    return HierarchicalTopology(pods, chips_per_pod,
+                                ici_link=f"{name}.ici",
+                                dcn_link=dcn_link, **hier_kw)
+
+
+def hierarchical_shared_jobs(jobs: Sequence[CoJobSpec], *, pods: int = 2,
+                             chips_per_pod: int = 8,
+                             dcn_link: str = "dcn",
+                             iters: int = 2,
+                             compute_mode: str = "analytic", seed: int = 0,
+                             plans: Mapping[str, MergePlan] | None = None,
+                             bursts: Sequence[Burst] = (),
+                             **hier_kw) -> ClusterSim:
+    """N jobs on independent ICI pods sharing ONE DCN uplink.
+
+    Every job runs a two-level collective (reduce-scatter/all-gather on
+    its own ``<name>.ici`` link, cross-pod all-reduce on the
+    ``1/chips_per_pod`` shard over the common ``dcn`` link): the ICI legs
+    never contend, the DCN legs all do — the fleet regime the per-link
+    path models exist for.  Each job's membership is
+    ``pods * chips_per_pod``; ``plans`` pins candidate assignments
+    exactly like :func:`shared_link_jobs`; extra ``hier_kw`` forward to
+    :class:`~repro.sim.network.HierarchicalTopology` (bandwidths and
+    latencies)."""
+    plans = dict(plans or {})
+    unknown = set(plans) - {j.name for j in jobs}
+    if unknown:
+        raise ValueError(f"plans pin unknown jobs: {sorted(unknown)}")
+    out = []
+    n = pods * chips_per_pod
+    for j in jobs:
+        topo = _pod_topology(j.name, pods, chips_per_pod, dcn_link,
+                             **hier_kw)
+        plan = plans.get(j.name)
+        if plan is None:
+            plan = planner.make_plan(j.strategy, j.specs,
+                                     topo.linear_model())
+        out.append(JobSpec(name=j.name, specs=list(j.specs), plan=plan,
+                           t_f=j.t_f,
+                           workers=make_workers(n, prefix=j.name + ".w"),
+                           topology=topo, iters=iters,
+                           start_time=j.start_time,
+                           compute_mode=compute_mode, schedule=j.schedule))
+    return ClusterSim(out, seed=seed, bursts=list(bursts))
+
+
+def hierarchical_jobs_plan(jobs: Sequence[CoJobSpec], *, pods: int = 2,
+                           chips_per_pod: int = 8, dcn_link: str = "dcn",
+                           iters: int = 2,
+                           compute_mode: str = "analytic", seed: int = 0,
+                           max_rounds: int = 5, damping: float = 0.5,
+                           shared_model: bool = False,
+                           per_link: bool = True,
+                           extra_seed_plans: Mapping[str, MergePlan]
+                           | None = None,
+                           bursts: Sequence[Burst] = (),
+                           **hier_kw) -> "coplanner.CoPlanResult":
+    """Jointly co-plan N jobs on independent ICI pods + one shared DCN.
+
+    With ``per_link=True`` (the default) each job's cost model is its
+    topology's :class:`~repro.core.cost_model.PathModel` and every refit
+    corrects each link separately from that link's own occupancy
+    telemetry: the private ICI legs stay pinned at their exclusive fit
+    while the shared DCN leg absorbs the contention stretch — and
+    ``shared_model=True`` pools the DCN samples of ALL jobs into one
+    contended fit per link (the mode that was structurally impossible
+    with flat models, which could only pool whole-collective durations of
+    same-shape single-link jobs).  ``per_link=False`` is the old
+    behavior: one flat effective (a, b) per job smearing ICI and DCN
+    together — kept as the baseline the per-link refit is benchmarked
+    against.
+
+    ``extra_seed_plans`` inserts a known-good assignment (e.g. the
+    flat-refit co-plan's result) at the head of each job's seed list, so
+    the returned plan provably never loses to it on this scenario.
+    """
+    jobs = tuple(jobs)
+    co_jobs = []
+    for j in jobs:
+        topo = _pod_topology(j.name, pods, chips_per_pod, dcn_link,
+                             **hier_kw)
+        model = topo.path_model() if per_link else topo.linear_model()
+        seeds = [planner.make_plan(j.strategy, j.specs,
+                                   topo.linear_model())]
+        if extra_seed_plans and j.name in extra_seed_plans:
+            seeds.insert(0, extra_seed_plans[j.name])
+        co_jobs.append(CoJob(
+            name=j.name, specs=j.specs, model=model, t_f=j.t_f,
+            schedule=j.schedule, seed_plans=tuple(seeds),
+            links=topo.links))
+
+    evaluate = _joint_evaluate(
+        lambda candidate: hierarchical_shared_jobs(
+            jobs, pods=pods, chips_per_pod=chips_per_pod,
+            dcn_link=dcn_link, iters=iters, compute_mode=compute_mode,
+            seed=seed, plans=candidate, bursts=bursts, **hier_kw), jobs)
+
+    return coplanner.coplan(co_jobs, evaluate, max_rounds=max_rounds,
+                            damping=damping, shared_model=shared_model)
+
+
+# ---------------------------------------------------------------------------
+# Job churn: arrival / departure through the incremental co-planner.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ChurnReport:
+    """What the arrival/departure replan did."""
+
+    incumbent: "coplanner.CoPlanResult"     # converged pre-churn co-plan
+    updated: "coplanner.CoPlanResult"       # post-churn incremental co-plan
+    arrived: tuple[str, ...] = ()
+    departed: tuple[str, ...] = ()
+
+    @property
+    def incumbent_reused(self) -> dict[str, bool]:
+        """Per surviving job: did the updated assignment keep the
+        incumbent plan?"""
+        return {n: self.updated.plans[n].buckets == p.buckets
+                for n, p in self.incumbent.plans.items()
+                if n in self.updated.plans}
+
+
+def job_churn(jobs: Sequence[CoJobSpec],
+              arriving: Sequence[CoJobSpec] = (),
+              departing: Sequence[str] = (), *, n_workers: int = 8,
+              algorithm: str = "ring", alpha: float = PAPER_ALPHA,
+              beta: float = PAPER_BETA, gamma: float = PAPER_GAMMA,
+              iters: int = 2, compute_mode: str = "analytic",
+              seed: int = 0, max_rounds: int = 5, damping: float = 0.5,
+              shared_model: bool = False,
+              ) -> tuple[ClusterSim, ChurnReport]:
+    """Mid-run fleet churn: co-plan the incumbents, apply the churn
+    (``arriving`` jobs join — typically with a ``start_time`` placing
+    them mid-run — and ``departing`` names leave), then re-plan the new
+    fleet through :func:`repro.core.coplanner.coplan_incremental`, which
+    re-enters the best-response loop from the incumbent assignment
+    instead of from scratch.  Returns the post-churn cluster running the
+    updated assignment plus a :class:`ChurnReport` (the incumbent and
+    updated co-plans, and which survivors kept their plan)."""
+    incumbent = contended_jobs_plan(
+        jobs, n_workers=n_workers, algorithm=algorithm, alpha=alpha,
+        beta=beta, gamma=gamma, iters=iters, compute_mode=compute_mode,
+        seed=seed, max_rounds=max_rounds, damping=damping,
+        shared_model=shared_model)
+    gone = set(departing)
+    unknown = gone - {j.name for j in jobs}
+    if unknown:
+        raise ValueError(f"departing unknown jobs: {sorted(unknown)}")
+    fleet = tuple(j for j in jobs if j.name not in gone) + tuple(arriving)
+    if not fleet:
+        raise ValueError("churn would leave an empty fleet")
+
+    co_jobs = _flat_co_jobs(fleet, n_workers, algorithm, alpha, beta,
+                            gamma)
+    evaluate = _joint_evaluate(
+        lambda candidate: shared_link_jobs(
+            fleet, n_workers=n_workers, algorithm=algorithm, alpha=alpha,
+            beta=beta, gamma=gamma, iters=iters,
+            compute_mode=compute_mode, seed=seed, plans=candidate), fleet)
+    updated = coplanner.coplan_incremental(
+        incumbent, co_jobs, evaluate, max_rounds=max_rounds,
+        damping=damping, shared_model=shared_model)
+    sim = shared_link_jobs(fleet, n_workers=n_workers,
+                           algorithm=algorithm, alpha=alpha, beta=beta,
+                           gamma=gamma, iters=iters,
+                           compute_mode=compute_mode, seed=seed,
+                           plans=updated.plans)
+    report = ChurnReport(incumbent=incumbent, updated=updated,
+                         arrived=tuple(j.name for j in arriving),
+                         departed=tuple(departing))
+    return sim, report
 
 
 @dataclasses.dataclass
@@ -607,6 +824,23 @@ def _coplanned_three_jobs() -> ClusterSim:
     return shared_link_jobs(jobs, n_workers=8, iters=2, plans=fix.plans)
 
 
+def _two_pod_jobs(n_tensors: int = 16) -> list[CoJobSpec]:
+    a, t_f_a = trace.synthetic_specs(n_tensors, seed=7)
+    b, t_f_b = trace.synthetic_specs(n_tensors, seed=9)
+    return [CoJobSpec("pod_a", tuple(a), t_f_a),
+            CoJobSpec("pod_b", tuple(b), t_f_b)]
+
+
+def _coplanned_pod_jobs() -> ClusterSim:
+    """Shared-DCN 2-job fleet running its per-link co-planned assignment
+    (shared DCN model pooled across jobs)."""
+    jobs = _two_pod_jobs()
+    fix = hierarchical_jobs_plan(jobs, pods=2, chips_per_pod=4, iters=2,
+                                 max_rounds=2, shared_model=True)
+    return hierarchical_shared_jobs(jobs, pods=2, chips_per_pod=4,
+                                    iters=2, plans=fix.plans)
+
+
 CATALOG: dict[str, Callable[[], ClusterSim]] = {
     "paper_ring_16": lambda: paper_scaling(*_syn(), 16),
     "paper_dbt_64": lambda: paper_scaling(*_syn(), 64,
@@ -646,6 +880,19 @@ CATALOG: dict[str, Callable[[], ClusterSim]] = {
     "three_jobs_mixed": lambda: shared_link_jobs(
         _mixed_schedule_jobs(), n_workers=8, iters=2),
     "three_jobs_coplanned": _coplanned_three_jobs,
+    # hierarchical fleets: independent ICI pods sharing one DCN uplink,
+    # co-planned with per-link path models (shared DCN fit)
+    "pods_shared_dcn": lambda: hierarchical_shared_jobs(
+        _two_pod_jobs(), pods=2, chips_per_pod=4, iters=2),
+    "pods_coplanned_per_link": _coplanned_pod_jobs,
+    # fleet churn: a third job arrives mid-run; the incremental
+    # co-planner re-enters best response from the incumbent assignment
+    "job_churn": lambda: job_churn(
+        _mixed_schedule_jobs(16)[:2],
+        arriving=[CoJobSpec("late_job",
+                            *trace.synthetic_specs(12, seed=13),
+                            start_time=0.05)],
+        n_workers=8, iters=2, max_rounds=2)[0],
     "straggler_evict_contended": lambda: straggler_eviction(
         *_syn(), 8, slow_factor=3.0, contention_aware=True,
         bursts=(Burst("net", 0.0, 60.0, flows=2),))[0],

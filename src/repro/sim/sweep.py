@@ -234,13 +234,15 @@ def _localsgd_t_iter(schedule: LocalSGD, specs, plan: MergePlan, model,
 
 def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
               algorithm: str = "ring", strategy: str = "dp_incremental",
-              alpha: float, beta: float, gamma: float = 0.0,
+              alpha: float | None = None, beta: float | None = None,
+              gamma: float = 0.0,
               iters: int = 1, jitter_sigma: float = 0.0,
               slow: Mapping[int, float] | None = None,
               bursts: Sequence[Burst] = (),
               comm_mode: str = "sequential",
               schedule: Schedule | None = None,
               force_engine: bool = False,
+              topology_factory=None,
               job_name: str = "train") -> SweepResult:
     """Evaluate one profile over a scenario grid.
 
@@ -252,9 +254,19 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
     runs every point under that iteration discipline — through the
     schedule's closed form where exact (see :func:`closed_form_valid`),
     through the engine otherwise.
+
+    ``topology_factory(n_workers, bandwidth_scale) -> Topology`` swaps the
+    default flat Table-2 topology for an arbitrary one — e.g. a
+    hierarchical ICI+DCN pod whose :class:`~repro.core.cost_model.
+    PathModel` flattens to the (a, b) the closed forms consume (a sum of
+    per-link affine phases is still affine, so the fast path stays exact
+    on its single-job uncontended domain).  With a factory, ``alpha`` /
+    ``beta`` / ``algorithm`` are ignored; without one they are required.
     """
     if iters < 1:
         raise ValueError("need >= 1 iteration")
+    if topology_factory is None and (alpha is None or beta is None):
+        raise ValueError("need alpha and beta (or a topology_factory)")
     slow = dict(slow or {})
     heterogeneous = jitter_sigma != 0.0 or \
         any(f != 1.0 for f in slow.values())
@@ -278,7 +290,9 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
             jitter_sigma=jitter_sigma)
         s_max = _max_scales(workers, grid.seeds, iters, job_name)
         for bi, bw in enumerate(grid.bandwidth_scales):
-            topo = FlatTopology(algorithm, n, alpha, beta / bw, gamma)
+            topo = (topology_factory(n, bw) if topology_factory is not None
+                    else FlatTopology(algorithm, n, alpha, beta / bw,
+                                      gamma))
             model = topo.linear_model()
             if strategy == "dp_incremental":
                 if shared is None:

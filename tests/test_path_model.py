@@ -1,0 +1,564 @@
+"""Per-link path models: composition, refit, and the planning stack.
+
+Anchors:
+
+* **flat regression pin** — a single-phase :class:`PathModel` flattens to
+  its (a, b) bit for bit, and ``plan_mgwfbp`` / ``Planner`` /
+  ``plan_contention_aware`` produce bit-identical plans and round floats
+  whether they are handed the flat model or its one-phase path;
+* **hierarchical composition pin** — ``PathModel.flatten()`` is
+  bit-equal to the pre-refactor ``HierarchicalModel.flat()`` for the
+  ICI+DCN case, and ``Topology.phases`` / ``path_model`` are two views
+  of one source of truth;
+* **per-link telemetry conservation** — on a ``HierarchicalTopology``
+  the ICI link is charged the full message per collective while the DCN
+  link is charged the ``1/chips_per_pod`` shard;
+* **per-link refit** — each link's (a_l, b_l) is recovered from that
+  link's own occupancy samples, pooled per physical link in shared-model
+  mode;
+* **job churn** — ``coplan_incremental`` re-enters best response from
+  the incumbent assignment and keeps the no-worse-than-seed guarantee.
+"""
+
+import pytest
+
+from repro.core import coplanner, cost_model
+from repro.core.coplanner import (CoJob, CoObservation, CoPlanner,
+                                  JobObservation, coplan_incremental)
+from repro.core.cost_model import (AllReduceModel, PathModel, PathPhase,
+                                   blend_path, fit_path, single_path)
+from repro.core.planner import (Planner, make_plan, plan_contention_aware,
+                                plan_dp_optimal, plan_mgwfbp, plan_wfbp)
+from repro.core.simulator import simulate
+from repro.sim import scenarios, trace
+from repro.sim.engine import ClusterSim, JobSpec
+from repro.sim.network import (FlatTopology, HierarchicalTopology,
+                               Topology)
+from repro.sim.scenarios import CoJobSpec
+from repro.sim.sweep import SweepGrid, run_sweep
+from repro.sim.workers import make_workers
+
+MODEL = AllReduceModel(5e-4, 2e-9)
+
+
+# ---------------------------------------------------------------------------
+# Composition: flatten() vs the pre-refactor flat formulas.
+# ---------------------------------------------------------------------------
+
+def test_single_phase_path_flattens_bit_equal():
+    p = single_path(MODEL)
+    flat = p.flatten()
+    assert (flat.a, flat.b) == (MODEL.a, MODEL.b)
+    for nbytes in (0, 1, 1 << 20, 1 << 30):
+        assert p.time(nbytes) == MODEL.time(nbytes)
+
+
+@pytest.mark.parametrize("pods,chips", [(2, 16), (4, 16), (2, 3), (3, 7)])
+def test_hierarchical_path_flattens_bit_equal_to_flat(pods, chips):
+    """The ICI+DCN composition rule: a = sum(a_l), b = sum(b_l) with the
+    DCN phase's b already shard-diluted — bit-identical to the historic
+    ``a = intra.a + inter.a``, ``b = intra.b + inter.b / intra_size``."""
+    intra = cost_model.tpu_ici_ring(chips)
+    inter = cost_model.tpu_dcn(pods)
+    h = cost_model.HierarchicalModel(intra=intra, inter=inter,
+                                     intra_size=chips)
+    path = h.path()
+    flat = path.flatten()
+    assert flat.a == intra.a + inter.a
+    assert flat.b == intra.b + inter.b / chips
+    assert (h.flat().a, h.flat().b) == (flat.a, flat.b)
+    # shard provenance: only 1/chips of the bytes cross the DCN link
+    assert path.phases[1].shard_fraction == 1.0 / chips
+    lb = path.link_bytes(1 << 20)
+    assert lb["ici"] == float(1 << 20)
+    assert lb["dcn"] == pytest.approx((1 << 20) / chips)
+
+
+def test_topology_views_share_one_source_of_truth():
+    """linear_model() and phases() are two views of path_model()."""
+    topo = HierarchicalTopology(pods=4, chips_per_pod=16)
+    path = topo.path_model()
+    flat = topo.linear_model()
+    assert (flat.a, flat.b) == (path.a, path.b)
+    phases = topo.phases(1 << 20)
+    assert [(p.link, p.startup, p.seconds_per_byte, p.shard_fraction)
+            for p in phases] == \
+        [(p.link, p.a, p.b, p.shard_fraction) for p in path.phases]
+    assert topo.links == path.links == ("ici", "dcn")
+    # single-pod degenerate: one ICI phase only
+    single = HierarchicalTopology(pods=1, chips_per_pod=8)
+    assert single.links == ("ici",)
+    assert single.path_model().flatten().a == single.linear_model().a
+
+
+def test_topology_from_path_model():
+    path = PathModel((PathPhase("ici", 1e-5, 1e-10),
+                      PathPhase("dcn", 2e-4, 5e-11, 0.25)))
+    topo = Topology(path, n_workers=8)
+    assert topo.links == ("ici", "dcn")
+    assert topo.linear_model().a == path.a
+    assert topo.link == "ici"
+
+
+def test_path_validation():
+    with pytest.raises(ValueError):
+        PathModel(())
+    with pytest.raises(ValueError):
+        PathPhase("net", -1e-3, 1e-9)
+    with pytest.raises(ValueError):
+        PathPhase("net", 1e-3, 1e-9, 0.0)
+    with pytest.raises(ValueError):
+        PathPhase("net", 1e-3, 1e-9, 1.5)
+    with pytest.raises(ValueError):
+        blend_path(single_path(MODEL, "a"), single_path(MODEL, "b"), 0.5)
+
+
+# ---------------------------------------------------------------------------
+# Flat regression pin: every planner entry point, path vs flat model.
+# ---------------------------------------------------------------------------
+
+def test_planners_bit_identical_on_single_phase_path():
+    specs, t_f = trace.synthetic_specs(32, seed=3)
+    path = single_path(MODEL)
+    assert plan_mgwfbp(specs, path).buckets == \
+        plan_mgwfbp(specs, MODEL).buckets
+    assert plan_dp_optimal(specs, path).buckets == \
+        plan_dp_optimal(specs, MODEL).buckets
+    p_flat, p_path = Planner(specs, MODEL), Planner(specs, path)
+    assert p_path.plan().buckets == p_flat.plan().buckets
+    assert p_path.finish_time == p_flat.finish_time
+    # model swaps through a path replan stay bit-identical too
+    new = AllReduceModel(1e-3, 1e-9)
+    assert p_path.replan(single_path(new)).buckets == \
+        p_flat.replan(new).buckets
+    assert p_path.finish_time == p_flat.finish_time
+
+
+def test_contention_fixpoint_bit_identical_on_single_phase_path():
+    """plan_contention_aware(PathModel) reproduces the flat loop float
+    for float: same rounds, same observed/predicted, same best plan."""
+    specs, t_f = trace.synthetic_specs(20, seed=8)
+
+    def evaluate(plan):
+        job = JobSpec(name="j", specs=list(specs), plan=plan, t_f=t_f,
+                      workers=make_workers(4),
+                      topology=Topology(MODEL, n_workers=4))
+        jr = ClusterSim([job]).run().job("j")
+        return jr.iterations[-1].t_iter, jr.bucket_samples
+
+    flat = plan_contention_aware(specs, MODEL, evaluate, t_f=t_f)
+    path = plan_contention_aware(specs, single_path(MODEL), evaluate,
+                                 t_f=t_f)
+    assert path.plan.buckets == flat.plan.buckets
+    assert len(path.rounds) == len(flat.rounds)
+    assert [r.observed_t for r in path.rounds] == \
+        [r.observed_t for r in flat.rounds]
+    assert [r.predicted_t for r in path.rounds] == \
+        [r.predicted_t for r in flat.rounds]
+    assert (path.best_round, path.converged) == \
+        (flat.best_round, flat.converged)
+
+
+# ---------------------------------------------------------------------------
+# Base-Topology rescale fallback (fitted single-link topologies).
+# ---------------------------------------------------------------------------
+
+def test_fitted_topology_rescale_falls_back_to_inversion():
+    """Elastic resize on a fitted base Topology no longer raises: it
+    inverts the fitted (a, b) through the declared algorithm's Table-2
+    formula and re-predicts for the new membership."""
+    from repro.sim import network
+
+    a, b = cost_model.PAPER_CLUSTERS["cluster1_k80_10gbe"]
+    topo = FlatTopology.from_fitted(a, b, n_workers=8)
+    bigger = topo.rescale(32)
+    expect = network.predicted_model("ring", a, b, 8, 32)
+    assert isinstance(bigger, Topology)
+    assert bigger.n_workers == 32
+    assert bigger.linear_model().a == pytest.approx(expect.a)
+    assert bigger.linear_model().b == pytest.approx(expect.b)
+    # same membership is the identity; non-ring algorithms invert too
+    assert topo.rescale(8) is topo
+    dbt = FlatTopology.from_fitted(a, b, 8,
+                                   algorithm="double_binary_trees")
+    expect_dbt = network.predicted_model("double_binary_trees", a, b, 8, 16)
+    assert dbt.rescale(16).linear_model().a == pytest.approx(expect_dbt.a)
+    # degenerate memberships still refuse (no inversion at N < 2)
+    with pytest.raises(ValueError):
+        FlatTopology.from_fitted(a, b, 1).rescale(8)
+
+
+def test_multi_phase_base_topology_refuses_rescale():
+    """Inverting a composed multi-link (a, b) into single-link constants
+    would silently collapse the path onto one link — the base class must
+    refuse (subclasses with per-level constants rebuild exactly)."""
+    path = PathModel((PathPhase("ici", 1e-5, 1e-10),
+                      PathPhase("dcn", 2e-4, 5e-11, 0.25)))
+    topo = Topology(path, n_workers=8)
+    assert topo.rescale(8) is topo          # identity is still fine
+    with pytest.raises(NotImplementedError, match="phase"):
+        topo.rescale(16)
+    # the hierarchical subclass knows its constants and rebuilds exactly
+    hier = HierarchicalTopology(pods=2, chips_per_pod=4)
+    assert hier.rescale(16).links == hier.links
+
+
+def test_elastic_resize_on_fitted_topology_end_to_end():
+    """The elastic-replan machinery runs through the fallback rescale:
+    a mid-run resize on a paper-cluster (fitted) topology swaps workers,
+    topology and plan without NotImplementedError."""
+    specs, t_f = trace.synthetic_specs(12, seed=21)
+    a, b = cost_model.PAPER_CLUSTERS["cluster2_v100_10gbe"]
+    topo = FlatTopology.from_fitted(a, b, n_workers=4)
+
+    def hook(sim, run, it):
+        run.workers = make_workers(8)
+        run.topology = run.topology.rescale(8)
+        sim.ensure_links(run.topology)
+
+    plan = make_plan("mgwfbp", specs, topo.linear_model())
+    job = JobSpec(name="train", specs=list(specs), plan=plan, t_f=t_f,
+                  workers=make_workers(4), topology=topo, iters=3,
+                  compute_mode="analytic", hooks={0: hook})
+    res = ClusterSim([job]).run()
+    assert len(res.job("train").iterations) == 3
+
+
+# ---------------------------------------------------------------------------
+# Per-link telemetry conservation on HierarchicalTopology.
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_link_byte_conservation():
+    """ICI is charged the full message per collective; DCN only the
+    1/chips_per_pod shard that physically crosses pods."""
+    specs, t_f = trace.synthetic_specs(10, seed=17)
+    chips = 4
+    sim = scenarios.hierarchical_pods(specs, t_f, pods=2,
+                                      chips_per_pod=chips, iters=2)
+    res = sim.run()
+    jr = res.job("train")
+    tele = jr.link_telemetry
+    assert set(tele) == {"ici", "dcn"}
+    assert tele["ici"][0] == pytest.approx(jr.bytes_communicated,
+                                           abs=1e-6)
+    assert tele["dcn"][0] == pytest.approx(jr.bytes_communicated / chips,
+                                           abs=1e-6)
+    # occupancy decomposes: per collective, ici + dcn legs == the whole
+    ls = jr.link_samples
+    whole = [t for _, t in jr.bucket_samples if t > 0]
+    legs = [i + d for (_, i), (_, d) in zip(ls["ici"], ls["dcn"])]
+    assert legs == pytest.approx(whole, rel=1e-12)
+    # busy conservation on each link (single job: it gets all the share)
+    for link in ("ici", "dcn"):
+        assert sum(sim.links[link].owner_busy.values()) == \
+            pytest.approx(sim.links[link].busy_s, abs=1e-9)
+
+
+def test_shared_dcn_fleet_telemetry_conservation():
+    """Two pod jobs share only the DCN uplink: private ICI telemetry is
+    exclusively each job's own, and the shared link's per-owner bytes
+    sum to everything admitted."""
+    jobs = scenarios._two_pod_jobs(10)
+    chips = 4
+    sim = scenarios.hierarchical_shared_jobs(jobs, pods=2,
+                                             chips_per_pod=chips, iters=2)
+    res = sim.run()
+    dcn_total = 0.0
+    for j in jobs:
+        jr = res.job(j.name)
+        tele = jr.link_telemetry
+        assert set(tele) == {f"{j.name}.ici", "dcn"}
+        assert tele[f"{j.name}.ici"][0] == \
+            pytest.approx(jr.bytes_communicated, abs=1e-6)
+        assert tele["dcn"][0] == \
+            pytest.approx(jr.bytes_communicated / chips, abs=1e-6)
+        dcn_total += tele["dcn"][0]
+        # the private link is untouched by the other job
+        other = [x for x in jobs if x.name != j.name][0]
+        assert f"{other.name}.ici" not in tele
+    link = sim.links["dcn"]
+    assert sum(link.owner_bytes.values()) == pytest.approx(dcn_total,
+                                                           abs=1e-6)
+    assert sum(link.owner_busy.values()) == pytest.approx(link.busy_s,
+                                                          abs=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Per-link refit.
+# ---------------------------------------------------------------------------
+
+def _two_phase_path():
+    return PathModel((PathPhase("ici", 1e-5, 2e-10),
+                      PathPhase("dcn", 5e-4, 1e-10, 0.25)))
+
+
+def test_fit_path_recovers_per_link_models():
+    """Exact per-link samples reproduce each phase; a contended DCN leg
+    moves ONLY the DCN phase."""
+    base = _two_phase_path()
+    sizes = (1 << 18, 1 << 22)
+    stretched = {
+        "ici": [(n, base.phases[0].time(n)) for n in sizes],
+        "dcn": [(n, 2.0 * base.phases[1].time(n)) for n in sizes],
+    }
+    fitted = fit_path(base, stretched)
+    assert fitted.phases[0].a == pytest.approx(base.phases[0].a, rel=1e-9)
+    assert fitted.phases[0].b == pytest.approx(base.phases[0].b, rel=1e-9)
+    assert fitted.phases[1].a == pytest.approx(2 * base.phases[1].a,
+                                               rel=1e-9)
+    assert fitted.phases[1].b == pytest.approx(2 * base.phases[1].b,
+                                               rel=1e-9)
+    assert fitted.phases[1].shard_fraction == base.phases[1].shard_fraction
+
+
+def test_fit_path_rank_deficient_link_stretches():
+    """One distinct size on a link can only stretch that link's phase."""
+    base = _two_phase_path()
+    n = 1 << 20
+    fitted = fit_path(base, {"dcn": [(n, 3.0 * base.phases[1].time(n))]})
+    assert fitted.phases[0] == base.phases[0]
+    assert fitted.phases[1].a == pytest.approx(3 * base.phases[1].a)
+    assert fitted.phases[1].b == pytest.approx(3 * base.phases[1].b)
+
+
+def test_fit_path_no_link_samples_falls_back_to_whole_stretch():
+    base = _two_phase_path()
+    n = 1 << 20
+    fitted = fit_path(base, {}, [(n, 1.5 * base.time(n))])
+    assert fitted.a == pytest.approx(1.5 * base.a)
+    assert fitted.b == pytest.approx(1.5 * base.b)
+    assert fit_path(base, {}, []) is base
+
+
+def test_coplanner_refit_pools_per_physical_link():
+    """shared_model=True with path jobs: each job's DCN phase is refit
+    from the UNION of both jobs' DCN samples (one distinct size each —
+    only the pool spans two), while private ICI phases use own samples.
+    This is the pooling the flat-model gating had to forbid."""
+    specs, t_f = trace.synthetic_specs(6, seed=70)
+    path_a = PathModel((PathPhase("a.ici", 1e-5, 2e-10),
+                        PathPhase("dcn", 5e-4, 1e-10, 0.25)))
+    path_b = PathModel((PathPhase("b.ici", 1e-5, 2e-10),
+                        PathPhase("dcn", 5e-4, 1e-10, 0.25)))
+    true_dcn = AllReduceModel(1e-3, 4e-10)
+    jobs = [CoJob(name="a", specs=tuple(specs), model=path_a, t_f=t_f),
+            CoJob(name="b", specs=tuple(specs), model=path_b, t_f=t_f)]
+    obs = CoObservation(makespan=1.0, jobs={
+        "a": JobObservation(
+            t_iter=1.0, samples=((1 << 20, 1.0),),
+            link_samples=(
+                ("a.ici", ((1 << 20, path_a.phases[0].time(1 << 20)),)),
+                ("dcn", ((1 << 20, true_dcn.time(1 << 20)),)))),
+        "b": JobObservation(
+            t_iter=1.0, samples=((1 << 22, 1.0),),
+            link_samples=(
+                ("b.ici", ((1 << 22, path_b.phases[0].time(1 << 22)),)),
+                ("dcn", ((1 << 22, true_dcn.time(1 << 22)),)))),
+    })
+
+    def never(plans):   # pragma: no cover - _refit is driven directly
+        raise AssertionError
+
+    eff = {"a": path_a, "b": path_b}
+    CoPlanner(jobs, never, damping=1.0, shared_model=True) \
+        ._refit(obs, eff, jobs[0])
+    dcn = eff["a"].phases[1]
+    assert dcn.a == pytest.approx(true_dcn.a, rel=1e-9)
+    assert dcn.b == pytest.approx(true_dcn.b, rel=1e-9)
+    # private ICI: own (rank-deficient) sample can only stretch — here
+    # the sample equals the prediction, so the phase is unchanged
+    assert eff["a"].phases[0].a == pytest.approx(path_a.phases[0].a)
+    assert eff["b"] is path_b           # only the sub-step's job refits
+    # without shared_model the lone DCN sample cannot be LS-fit
+    eff = {"a": path_a, "b": path_b}
+    CoPlanner(jobs, never, damping=1.0)._refit(obs, eff, jobs[0])
+    ratio = eff["a"].phases[1].b / eff["a"].phases[1].a
+    assert ratio == pytest.approx(path_a.phases[1].b / path_a.phases[1].a)
+
+
+def test_hierarchical_jobs_plan_guarantees_and_path_models():
+    """The per-link co-plan keeps the no-worse-than-seed guarantee, its
+    rounds carry PathModel effective models, and the observations carry
+    the DCN leg samples the refit consumed."""
+    jobs = scenarios._two_pod_jobs(14)
+    fix = scenarios.hierarchical_jobs_plan(jobs, pods=2, chips_per_pod=4,
+                                           iters=2, max_rounds=3,
+                                           shared_model=True)
+    seed_rounds = [r for r in fix.rounds if r.kind == "seed"]
+    assert seed_rounds
+    assert fix.makespan <= min(r.makespan for r in seed_rounds) + 1e-12
+    for name in ("pod_a", "pod_b"):
+        assert isinstance(fix.models[name], PathModel)
+        assert fix.models[name].links == (f"{name}.ici", "dcn")
+    for r in fix.rounds:
+        for name in ("pod_a", "pod_b"):
+            ls = dict(r.observation.jobs[name].link_samples)
+            assert "dcn" in ls and f"{name}.ici" in ls
+            assert all(t > 0 for _, t in ls["dcn"])
+
+
+def test_hierarchical_flat_vs_path_seeded_ordering():
+    """With the flat co-plan's assignment seeded into the per-link run,
+    per-link shared ≤ per-job flat refit ≤ independent — the acceptance
+    ordering the CI smoke step asserts at benchmark scale."""
+    jobs = scenarios._two_pod_jobs(14)
+    kw = dict(pods=2, chips_per_pod=4, iters=2, max_rounds=3)
+    flat = scenarios.hierarchical_jobs_plan(jobs, per_link=False, **kw)
+    shared = scenarios.hierarchical_jobs_plan(
+        jobs, per_link=True, shared_model=True,
+        extra_seed_plans=flat.plans, **kw)
+    m_indep = scenarios.hierarchical_shared_jobs(
+        jobs, pods=2, chips_per_pod=4, iters=2).run().makespan
+    assert shared.makespan <= flat.makespan + 1e-12
+    assert flat.makespan <= m_indep + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Job churn through the incremental co-planner.
+# ---------------------------------------------------------------------------
+
+def test_coplan_incremental_validates_warm_start():
+    specs, t_f = trace.synthetic_specs(6, seed=2)
+    job = CoJob(name="j", specs=tuple(specs), model=MODEL, t_f=t_f)
+
+    def evaluate(plans):    # pragma: no cover - never reached
+        raise AssertionError
+
+    with pytest.raises(ValueError, match="unknown job"):
+        CoPlanner([job], evaluate,
+                  initial_plans={"ghost": plan_wfbp(specs)})
+    with pytest.raises(ValueError, match="unknown job"):
+        CoPlanner([job], evaluate, initial_models={"ghost": MODEL})
+    with pytest.raises(ValueError, match="covers"):
+        CoPlanner([job], evaluate,
+                  initial_plans={"j": plan_wfbp(specs[:3])})
+    # model-kind mismatches would silently flip the refit mode — refuse
+    path_job = CoJob(name="p", specs=tuple(specs),
+                     model=single_path(MODEL), t_f=t_f)
+    with pytest.raises(ValueError, match="incompatible"):
+        CoPlanner([path_job], evaluate, initial_models={"p": MODEL})
+    with pytest.raises(ValueError, match="incompatible"):
+        CoPlanner([job], evaluate,
+                  initial_models={"j": single_path(MODEL)})
+    with pytest.raises(ValueError, match="incompatible"):
+        CoPlanner([path_job], evaluate,
+                  initial_models={"p": single_path(MODEL, "other")})
+    # same-kind warm starts are accepted
+    CoPlanner([path_job], evaluate,
+              initial_models={"p": single_path(MODEL)})
+
+
+def test_coplan_incremental_drops_incompatible_incumbent_models():
+    """A flat incumbent cannot seed a per-link path job: the survivor
+    keeps its plan as warm start but refits from its own path model."""
+    jobs = scenarios._two_pod_jobs(10)
+    kw = dict(pods=2, chips_per_pod=4, iters=2, max_rounds=2)
+    flat = scenarios.hierarchical_jobs_plan(jobs, per_link=False, **kw)
+    co_jobs = []
+    for j in jobs:
+        topo = scenarios._pod_topology(j.name, 2, 4, "dcn")
+        co_jobs.append(CoJob(
+            name=j.name, specs=j.specs, model=topo.path_model(),
+            t_f=j.t_f,
+            seed_plans=(make_plan("mgwfbp", list(j.specs),
+                                  topo.linear_model()),),
+            links=topo.links))
+    evaluate = scenarios._joint_evaluate(
+        lambda candidate: scenarios.hierarchical_shared_jobs(
+            jobs, pods=2, chips_per_pod=4, iters=2, plans=candidate),
+        jobs)
+    upd = coplan_incremental(flat, co_jobs, evaluate, max_rounds=2)
+    for name in ("pod_a", "pod_b"):     # per-link refit stayed per-link
+        assert isinstance(upd.models[name], PathModel)
+    seed_rounds = [r for r in upd.rounds if r.kind == "seed"]
+    assert upd.makespan <= min(r.makespan for r in seed_rounds) + 1e-12
+
+
+def test_coplan_incremental_restart_of_fixed_point_is_immediate():
+    """Warm-restarting a converged co-plan with its own plans/models on
+    an unchanged fleet converges again without losing ground."""
+    jobs = [CoJobSpec("a", *trace.synthetic_specs(12, seed=50)),
+            CoJobSpec("b", *trace.synthetic_specs(20, seed=51))]
+    first = scenarios.contended_jobs_plan(jobs, n_workers=4, iters=2,
+                                          max_rounds=8)
+    assert first.converged
+
+    model = FlatTopology("ring", 4, scenarios.PAPER_ALPHA,
+                         scenarios.PAPER_BETA,
+                         scenarios.PAPER_GAMMA).linear_model()
+    co_jobs = [CoJob(name=j.name, specs=j.specs, model=model, t_f=j.t_f,
+                     seed_plans=(make_plan("mgwfbp", list(j.specs),
+                                           model),),
+                     links=("net",)) for j in jobs]
+    evaluate = scenarios._joint_evaluate(
+        lambda candidate: scenarios.shared_link_jobs(
+            jobs, n_workers=4, iters=2, plans=candidate), jobs)
+    again = coplan_incremental(first, co_jobs, evaluate, max_rounds=8)
+    assert again.makespan <= first.makespan + 1e-12
+
+
+def test_job_churn_arrival_keeps_seed_guarantee():
+    """An arrival re-plans through the incumbent warm start; the updated
+    assignment never loses to its seed candidates on the NEW fleet, and
+    the incumbent plans are the warm entry point."""
+    jobs = [CoJobSpec("a", *trace.synthetic_specs(12, seed=40)),
+            CoJobSpec("b", *trace.synthetic_specs(16, seed=41))]
+    late = CoJobSpec("late", *trace.synthetic_specs(10, seed=42),
+                     start_time=0.02)
+    sim, rep = scenarios.job_churn(jobs, arriving=[late], n_workers=4,
+                                   iters=2, max_rounds=3)
+    assert rep.arrived == ("late",)
+    assert set(rep.updated.plans) == {"a", "b", "late"}
+    seed_rounds = [r for r in rep.updated.rounds if r.kind == "seed"]
+    assert rep.updated.makespan <= \
+        min(r.makespan for r in seed_rounds) + 1e-12
+    # the churn loop entered from the incumbent assignment
+    first_response = [r for r in rep.updated.rounds
+                      if r.kind == "response"][0]
+    for name in ("a", "b"):
+        assert first_response.plans[name].buckets == \
+            rep.incumbent.plans[name].buckets
+    res = sim.run()
+    assert set(res.jobs) == {"a", "b", "late"}
+    assert res.job("late").iterations[0].start >= 0.02
+
+
+def test_job_churn_departure_drops_job():
+    jobs = [CoJobSpec("a", *trace.synthetic_specs(12, seed=40)),
+            CoJobSpec("b", *trace.synthetic_specs(16, seed=41)),
+            CoJobSpec("c", *trace.synthetic_specs(10, seed=43))]
+    sim, rep = scenarios.job_churn(jobs, departing=["c"], n_workers=4,
+                                   iters=2, max_rounds=3)
+    assert rep.departed == ("c",)
+    assert set(rep.updated.plans) == {"a", "b"}
+    assert set(sim.run().jobs) == {"a", "b"}
+    with pytest.raises(ValueError, match="unknown"):
+        scenarios.job_churn(jobs, departing=["ghost"], n_workers=4)
+    with pytest.raises(ValueError, match="empty fleet"):
+        scenarios.job_churn(jobs, departing=["a", "b", "c"], n_workers=4)
+
+
+# ---------------------------------------------------------------------------
+# Sweeps over hierarchical topologies.
+# ---------------------------------------------------------------------------
+
+def test_sweep_topology_factory_hierarchical():
+    """The batched closed form runs over hierarchical topologies (the
+    flattened path is still affine) and matches the engine point for
+    point."""
+    specs, t_f = trace.synthetic_specs(12, seed=5)
+    chips = 4
+    grid = SweepGrid(n_workers=(8, 16))
+
+    def factory(n, bw):
+        return HierarchicalTopology(n // chips, chips,
+                                    dcn_bw=cost_model.DCN_BW * bw)
+
+    fast = run_sweep(specs, t_f, grid, iters=2, topology_factory=factory)
+    assert not fast.used_engine.any()
+    slow = run_sweep(specs, t_f, grid, iters=2, topology_factory=factory,
+                     force_engine=True)
+    assert slow.used_engine.all()
+    assert abs(fast.t_iter - slow.t_iter).max() < 1e-9
+    with pytest.raises(ValueError, match="alpha"):
+        run_sweep(specs, t_f, grid)

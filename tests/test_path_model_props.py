@@ -1,0 +1,96 @@
+"""Path-model property tests; skipped without the hypothesis package.
+
+* ``PathModel.flatten()`` equals the sum of its phases — for random
+  phase lists, the flat affine view's time at any size matches summing
+  the per-phase affine times (the composition rule the planner's
+  exactness rests on), and merge gain under the flat view is the path's
+  total startup;
+* per-link byte accounting conserves: summing ``link_bytes`` over links
+  is the message size weighted by each phase's shard fraction;
+* ``fit_path`` on exact per-link samples is the identity (up to float
+  noise), and ``blend_path(m, m, w) == m``.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+import hypothesis  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+
+from repro.core.cost_model import (PathModel, PathPhase,  # noqa: E402
+                                   blend_path, fit_path)
+
+LINKS = st.sampled_from(["ici", "dcn", "net", "nvl"])
+PHASES = st.builds(
+    PathPhase,
+    link=LINKS,
+    a=st.floats(min_value=0.0, max_value=1e-2, allow_nan=False),
+    b=st.floats(min_value=0.0, max_value=1e-8, allow_nan=False),
+    shard_fraction=st.floats(min_value=1e-3, max_value=1.0,
+                             allow_nan=False))
+PATHS = st.builds(PathModel,
+                  st.lists(PHASES, min_size=1, max_size=5).map(tuple))
+SIZES = st.integers(min_value=1, max_value=1 << 32)
+
+
+@hypothesis.given(PATHS, SIZES)
+def test_flatten_equals_sum_of_phases(path, nbytes):
+    flat = path.flatten()
+    assert flat.a == pytest.approx(sum(p.a for p in path.phases),
+                                   rel=1e-12, abs=0.0)
+    assert flat.b == pytest.approx(sum(p.b for p in path.phases),
+                                   rel=1e-12, abs=0.0)
+    assert path.time(nbytes) == pytest.approx(
+        sum(p.time(nbytes) for p in path.phases), rel=1e-9, abs=1e-18)
+    assert flat.time(nbytes) == path.time(nbytes)
+    assert path.time(0) == 0.0
+
+
+@hypothesis.given(PATHS, SIZES, SIZES)
+def test_merge_gain_is_total_startup(path, n1, n2):
+    """Super-additivity (paper Eq. 11) survives the decomposition: the
+    gain from merging two messages is the path's summed startup."""
+    flat = path.flatten()
+    gain = flat.time(n1) + flat.time(n2) - flat.time(n1 + n2)
+    assert gain == pytest.approx(flat.a, rel=1e-6, abs=1e-15)
+
+
+@hypothesis.given(PATHS, SIZES)
+def test_link_bytes_conserve(path, nbytes):
+    by_link = path.link_bytes(nbytes)
+    assert set(by_link) == set(path.links)
+    total = sum(by_link.values())
+    expect = sum(p.shard_fraction * nbytes for p in path.phases)
+    assert total == pytest.approx(expect, rel=1e-12)
+    assert all(v <= nbytes * len(path.phases) for v in by_link.values())
+
+
+@hypothesis.given(PATHS)
+def test_fit_path_identity_on_exact_samples(path):
+    """Two exact samples per link reproduce each link's aggregate phase
+    costs (unique-link paths reproduce each phase exactly)."""
+    sizes = (1 << 16, 1 << 24)
+    samples = {
+        link: [(n, sum(p.time(n) for p in path.phases_on(link)))
+               for n in sizes]
+        for link in path.links}
+    fitted = fit_path(path, samples)
+    for link in path.links:
+        got_a = sum(p.a for p in fitted.phases_on(link))
+        got_b = sum(p.b for p in fitted.phases_on(link))
+        want_a = sum(p.a for p in path.phases_on(link))
+        want_b = sum(p.b for p in path.phases_on(link))
+        assert got_a == pytest.approx(want_a, rel=1e-6, abs=1e-12)
+        assert got_b == pytest.approx(want_b, rel=1e-6, abs=1e-18)
+
+
+@hypothesis.given(PATHS, st.floats(min_value=0.0, max_value=1.0,
+                                   allow_nan=False))
+def test_blend_path_self_is_identity(path, w):
+    blended = blend_path(path, path, w)
+    for got, want in zip(blended.phases, path.phases):
+        assert got.link == want.link
+        assert got.a == pytest.approx(want.a, rel=1e-12, abs=0.0)
+        assert got.b == pytest.approx(want.b, rel=1e-12, abs=0.0)
+        assert got.shard_fraction == want.shard_fraction
