@@ -551,6 +551,88 @@ def _hier_coplan_rows(rows: list) -> None:
                 (hier_shared.makespan, hier_flat.makespan)
 
 
+def _obs_rows(rows: list) -> None:
+    """Observability smoke (CI gate for the obs acceptance criteria):
+
+    * flight recording stays off the hot path — an instrumented run of a
+      sizable events-mode scenario finishes within 5% of the
+      uninstrumented wall time (best-of-N to shed scheduler noise);
+    * the recorded ring round-trips losslessly through JSONL;
+    * the drift monitor stays silent on a calibrated model and fires +
+      recovers on a mid-run bandwidth degradation.
+    """
+    from repro.obs.recorder import FlightRecorder, read_jsonl
+
+    specs, t_f = trace.synthetic_specs(40, seed=13)
+
+    def one_wall(rec):
+        # enough iterations that one timed sample is tens of ms — a
+        # single scheduler hiccup must not dominate the ratio
+        sim = scenarios.paper_scaling(specs, t_f, 32, iters=48,
+                                      compute_mode="events", seed=5)
+        sim.recorder = rec
+        t0 = time.perf_counter()
+        sim.run()
+        return time.perf_counter() - t0
+
+    # interleave base/instrumented pairs so slow drift in machine load
+    # (CI neighbors, turbo states) hits both sides of each pair equally,
+    # then take the median per-pair ratio: a scheduler spike poisons one
+    # pair, not the statistic (true recording cost is ~9us/iteration,
+    # ~1% of this run — the budget polices regressions, not noise)
+    ratios = []
+    rec = None
+    for _ in range(9):
+        base = one_wall(None)
+        r = FlightRecorder()
+        ratios.append(one_wall(r) / base)
+        rec = r
+    ratio = sorted(ratios)[len(ratios) // 2]
+    assert ratio <= 1.05, \
+        f"instrumented run {ratio:.3f}x uninstrumented (budget 1.05x)"
+    assert len(rec.iterations("train")) == 48
+    rows.append(("cluster_sim.obs.overhead_ratio", ratio,
+                 "instrumented / uninstrumented wall (budget <= 1.05)"))
+
+    # lossless JSONL round-trip of the recorded ring
+    fd, path = tempfile.mkstemp(suffix=".jsonl")
+    try:
+        os.close(fd)
+        rec.write(path)
+        back = read_jsonl(path)
+        assert tuple(back) == rec.records, "flight-recorder JSONL drifted"
+    finally:
+        os.unlink(path)
+    rows.append(("cluster_sim.obs.jsonl_records", len(rec.records),
+                 "records round-tripped bit-for-bit through JSONL"))
+
+    # drift monitor: silent when calibrated ...
+    calm_sim, calm = scenarios.drift_monitored(specs, t_f, iters=6,
+                                               degrade_at=None)
+    calm_sim.run()
+    assert not calm.alerts, f"false drift alerts: {calm.alerts}"
+    rows.append(("cluster_sim.obs.calibrated_residual",
+                 max(r for _, r in calm.residuals),
+                 "max EWMA residual on a calibrated model (0 alerts)"))
+
+    # ... alert -> refit -> replan -> recovered when the fabric degrades
+    drift_rec = FlightRecorder()
+    deg_sim, deg = scenarios.drift_monitored(specs, t_f, iters=8,
+                                             degrade_at=2,
+                                             degrade_factor=4.0,
+                                             recorder=drift_rec)
+    deg_sim.run()
+    assert deg.alerts and deg.replans >= 1, "degradation never alerted"
+    post = [r for i, r in deg.residuals if i > deg.alerts[-1].iteration]
+    assert post and max(post) <= deg.monitor.threshold, \
+        f"post-replan residuals not recovered: {post}"
+    assert drift_rec.events("drift_alert"), "alert missing from recorder"
+    rows.append(("cluster_sim.obs.drift_alert_iter",
+                 deg.alerts[0].iteration,
+                 f"{len(deg.alerts)} alert(s), {deg.replans} replan(s), "
+                 f"post-replan residual {max(post):.2e}"))
+
+
 def run() -> list[tuple[str, float, str]]:
     rows: list[tuple[str, float, str]] = []
     _scaling_rows(rows)
@@ -586,6 +668,13 @@ def run_hier_coplan() -> list[tuple[str, float, str]]:
     return rows
 
 
+def run_obs() -> list[tuple[str, float, str]]:
+    """Just the observability rows — the CI obs smoke step."""
+    rows: list[tuple[str, float, str]] = []
+    _obs_rows(rows)
+    return rows
+
+
 if __name__ == "__main__":
     import sys
 
@@ -595,6 +684,8 @@ if __name__ == "__main__":
         rows = run_coplan()
     elif "--hier-coplan" in sys.argv:
         rows = run_hier_coplan()
+    elif "--obs" in sys.argv:
+        rows = run_obs()
     else:
         rows = run()
     print("name,us_per_call,derived")

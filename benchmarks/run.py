@@ -18,6 +18,11 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
                      independently-planned MG-WFBP vs WFBP on shared
                      fabric, incl. a mixed-schedule 3-job fleet (CI also
                      runs `cluster_sim.py --coplan` as a smoke step)
+  obs              — observability smoke (repro.obs): instrumentation
+                     overhead budget (<= 1.05x), flight-recorder JSONL
+                     round-trip, drift monitor silent-when-calibrated /
+                     alert-refit-replan-recover on degradation (CI also
+                     runs `cluster_sim.py --obs` as a smoke step)
   planner_bench    — §4.2 one-time O(L^2) cost + the incremental planner
                      fast path (>= 10x replan speedup enforced)
   kernels_bench    — kernels  (structural tile/bandwidth notes)
@@ -26,7 +31,10 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
 Perf-trajectory tracking: the suites named in ``BENCH_JSON`` additionally
 write machine-readable ``BENCH_<suite>.json`` files (wall time of the
 whole suite plus every row) into the working directory, so CI can archive
-them and perf regressions are diffable across PRs.
+them and perf regressions are diffable across PRs.  With
+``--emit-metrics`` the run also dumps a snapshot of the metrics registry
+(``repro.obs.metrics``) to ``BENCH_metrics.json`` — planner counters,
+co-plan rounds, drift alerts, step-time histograms.
 """
 
 from __future__ import annotations
@@ -42,7 +50,14 @@ BENCH_JSON = {
     "planner_bench": "BENCH_planner.json",
     "cluster_sim": "BENCH_cluster_sim.json",
     "coplanner": "BENCH_coplanner.json",
+    "obs": "BENCH_obs.json",
 }
+
+# --emit-metrics artifact: a snapshot of the process-local metrics
+# registry (planner counters, drift alerts, sim/step histograms) taken
+# after all suites ran — the perf trajectory then includes *behavioral*
+# counters, not just wall times.
+METRICS_JSON = "BENCH_metrics.json"
 
 
 def write_bench_json(name: str, wall_s: float,
@@ -72,6 +87,7 @@ def main() -> None:
         ("scaling_sim", scaling_sim.run),
         ("cluster_sim", cluster_sim.run),
         ("coplanner", cluster_sim.run_coplan),
+        ("obs", cluster_sim.run_obs),
         ("planner_bench", planner_bench.run),
         ("kernels_bench", kernels_bench.run),
         ("roofline", roofline.run),
@@ -94,6 +110,12 @@ def main() -> None:
             if name in BENCH_JSON:
                 write_bench_json(name, time.perf_counter() - t0, [],
                                  error=f"{type(e).__name__}: {e}")
+    if "--emit-metrics" in sys.argv:
+        from repro.obs.metrics import REGISTRY
+        with open(METRICS_JSON, "w") as f:
+            json.dump(REGISTRY.snapshot().to_dict(), f, indent=1)
+        print(f"metrics.snapshot,0,{METRICS_JSON} "
+              f"({len(REGISTRY.names())} metrics)")
     if failed:
         sys.exit(1)
 

@@ -1,0 +1,98 @@
+"""Render a flight-recorder JSONL into a terminal triage summary.
+
+    PYTHONPATH=src python scripts/obs_report.py <records.jsonl>
+
+Per job: step-time percentiles (p50/p95/p99), comm/compute overlap
+fraction, per-link utilization over the job's span; then the decision /
+drift-alert event log.  Input is whatever ``FlightRecorder.write`` (or
+``repro.obs.recorder.write_jsonl``) produced — simulator runs and real
+instrumented train steps share one schema, so one report covers both.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.recorder import IterationRecord, read_jsonl  # noqa: E402
+
+
+def _pct(values: list[float], q: float) -> float:
+    """Nearest-rank percentile (no numpy dependency for a triage tool)."""
+    if not values:
+        return 0.0
+    ordered = sorted(values)
+    k = min(len(ordered) - 1, max(0, round(q * (len(ordered) - 1))))
+    return ordered[k]
+
+
+def _group(records) -> dict[str, list[IterationRecord]]:
+    jobs: dict[str, list[IterationRecord]] = {}
+    for r in records:
+        if isinstance(r, IterationRecord):
+            jobs.setdefault(f"{r.source}:{r.job}", []).append(r)
+    return jobs
+
+
+def job_summary(key: str, its: list[IterationRecord]) -> list[str]:
+    lines = [f"{key}: {len(its)} iterations"]
+    steps = [r.t_iter for r in its]
+    lines.append(
+        f"  step time   p50 {_pct(steps, 0.50) * 1e3:9.3f} ms   "
+        f"p95 {_pct(steps, 0.95) * 1e3:9.3f} ms   "
+        f"p99 {_pct(steps, 0.99) * 1e3:9.3f} ms")
+
+    # overlap: fraction of communication hidden under computation —
+    # comm spilling past backward_end is the non-overlapped tail (Eq. 8)
+    comm = sum(r.comm_total for r in its)
+    exposed = sum(max(0.0, max((b.end for b in r.buckets),
+                               default=r.backward_end) - r.backward_end)
+                  for r in its)
+    if comm > 0:
+        lines.append(f"  comm/compute overlap {max(0.0, 1 - exposed / comm):6.1%}"
+                     f"   (comm {comm * 1e3:.3f} ms, exposed "
+                     f"{exposed * 1e3:.3f} ms)")
+
+    # per-link utilization: link_busy is cumulative at each record, so
+    # the last record's value over the job's span is the honest figure
+    span = max(r.end for r in its) - min(r.start for r in its)
+    busy = dict(its[-1].link_busy)
+    nbytes = dict(its[-1].link_bytes)
+    for link in sorted(busy):
+        if span > 0:
+            lines.append(
+                f"  link {link:<12} util {busy[link] / span:6.1%}   "
+                f"({nbytes.get(link, 0) / 1e6:.2f} MB on the wire)")
+    return lines
+
+
+def render(path: str) -> str:
+    records = read_jsonl(path)
+    out = [f"flight recorder: {path} ({len(records)} records)", ""]
+    for key, its in sorted(_group(records).items()):
+        out.extend(job_summary(key, its))
+        out.append("")
+    events = [r for r in records if not isinstance(r, IterationRecord)]
+    if events:
+        out.append(f"events ({len(events)}):")
+        for e in events:
+            detail = ", ".join(f"{k}={v}" for k, v in sorted(e.args.items())
+                               if not isinstance(v, dict))
+            flag = " <-- DRIFT" if e.kind == "drift_alert" else ""
+            out.append(f"  [{e.source}] {e.kind} @ {e.time:g}: "
+                       f"{detail}{flag}")
+    return "\n".join(out)
+
+
+def main(argv: list[str]) -> int:
+    if len(argv) != 2:
+        print(__doc__)
+        return 2
+    print(render(argv[1]))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))

@@ -64,6 +64,8 @@ from typing import Callable, Mapping, Sequence
 
 from repro.core import cost_model
 from repro.core.cost_model import AllReduceModel
+from repro.obs.metrics import REGISTRY
+from repro.obs.recorder import EventRecord, plan_fingerprint
 from repro.core.planner import (FixpointResult, FixpointRound, MergePlan,
                                 Planner, TensorSpec, effective_model)
 
@@ -224,7 +226,8 @@ class CoPlanner:
                  max_rounds: int = 5, damping: float = 0.5,
                  shared_model: bool = False,
                  initial_plans: Mapping[str, MergePlan] | None = None,
-                 initial_models: Mapping[str, AllReduceModel] | None = None):
+                 initial_models: Mapping[str, AllReduceModel] | None = None,
+                 recorder=None):
         if not 0.0 < damping <= 1.0:
             raise ValueError(f"damping must be in (0, 1], got {damping}")
         if max_rounds < 1:
@@ -257,6 +260,8 @@ class CoPlanner:
         self.shared_model = shared_model
         self.initial_plans = dict(initial_plans or {})
         self.initial_models = dict(initial_models or {})
+        # optional repro.obs.recorder.FlightRecorder for round events
+        self.recorder = recorder
 
     # -- internals -------------------------------------------------------
 
@@ -352,6 +357,17 @@ class CoPlanner:
             rounds.append(round_)
             if round_.makespan < rounds[best_round].makespan:
                 best_round = len(rounds) - 1
+            REGISTRY.counter("coplanner_rounds_total",
+                             "co-planning rounds evaluated, by kind").inc(
+                                 kind=round_.kind)
+            if self.recorder is not None:
+                self.recorder.record(EventRecord(
+                    kind="coplan_round", time=float(len(rounds) - 1),
+                    source="coplanner",
+                    args={"round_kind": round_.kind,
+                          "makespan": round_.makespan,
+                          "plans": {name: plan_fingerprint(p)
+                                    for name, p in round_.plans.items()}}))
 
         # seed candidates: each job's static baselines against everyone
         # else's round-0 plan — evaluate only, no refit.

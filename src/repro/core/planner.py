@@ -53,6 +53,8 @@ from typing import Callable, Mapping, Sequence
 
 from repro.core import cost_model
 from repro.core.cost_model import AllReduceModel
+from repro.obs.metrics import REGISTRY
+from repro.obs.recorder import EventRecord, plan_fingerprint
 
 
 @dataclasses.dataclass(frozen=True)
@@ -320,9 +322,12 @@ class Planner:
 
     strategy = "dp_incremental"
 
-    def __init__(self, specs: Sequence[TensorSpec], model: AllReduceModel):
+    def __init__(self, specs: Sequence[TensorSpec], model: AllReduceModel,
+                 *, recorder=None):
         self.scratch_plans = 0
         self.incremental_updates = 0
+        # optional repro.obs.recorder.FlightRecorder for decision events
+        self.recorder = recorder
         self._specs: list[TensorSpec] = list(specs)
         # path models flatten to the (a, b) the DP consumes; a flat model
         # passes through untouched (bit-identical to pre-path behavior)
@@ -395,7 +400,19 @@ class Planner:
                 dirty = 0                   # every edge cost changed
             self._model = model
         self._refresh(dirty)
-        return self.plan()
+        REGISTRY.counter(
+            "planner_incremental_updates_total",
+            "Planner.update calls (suffix-reuse replans)").inc()
+        plan = self.plan()
+        if self.recorder is not None:
+            self.recorder.record(EventRecord(
+                kind="planner_update", time=float(self.incremental_updates),
+                source="planner",
+                args={"plan": plan_fingerprint(plan),
+                      "num_buckets": plan.num_buckets,
+                      "dirty_from": dirty,
+                      "model_a": self._model.a, "model_b": self._model.b}))
+        return plan
 
     def replan(self, model: AllReduceModel) -> MergePlan:
         """Convenience: elastic resize / (a, b) refit -> new plan."""
@@ -410,6 +427,9 @@ class Planner:
     def _rebuild(self) -> None:
         """Full state construction from the spec list (counted)."""
         self.scratch_plans += 1
+        REGISTRY.counter(
+            "planner_scratch_plans_total",
+            "Planner from-scratch DP rebuilds").inc()
         self._ready: list[float] = []
         self._pre: list[float] = [0.0]      # prefix bytes, extended index m
         acc_t = 0.0
@@ -574,6 +594,7 @@ def plan_contention_aware(
         damping: float = 0.5,
         seed_plans: Sequence[MergePlan] = (),
         schedule=None,
+        recorder=None,
 ) -> FixpointResult:
     """Close the loop the static planners leave open.
 
@@ -648,7 +669,7 @@ def plan_contention_aware(
                     for link, pairs in dict(link_samples).items()))})
 
     co = coplanner.CoPlanner([job], joint_evaluate, max_rounds=max_rounds,
-                             damping=damping)
+                             damping=damping, recorder=recorder)
     return co.run().fixpoint("job")
 
 

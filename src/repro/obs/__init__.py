@@ -1,0 +1,74 @@
+"""Observability spine: metrics, flight recorder, timeline, drift.
+
+One telemetry layer shared by the simulator (``repro.sim``), the
+planning stack (``repro.core``), and the real training loop
+(``repro.train``):
+
+* :mod:`repro.obs.metrics` — labeled Counters/Gauges/Histograms with
+  exact snapshot/delta/merge algebra (fixed exponential buckets);
+* :mod:`repro.obs.timeline` — the shared :class:`Span` type and
+  Chrome/Perfetto trace I/O, plus counter tracks (staleness, frontier
+  drift);
+* :mod:`repro.obs.recorder` — bounded flight-recorder ring of
+  per-iteration / event records with lossless JSONL round-trip;
+* :mod:`repro.obs.drift` — EWMA predicted-vs-observed residuals with
+  threshold alerts that drive refit + replan.
+
+Import order below matters: ``metrics`` and ``timeline`` are leaves,
+``recorder`` uses ``timeline``, ``drift`` uses both.  See
+``docs/observability.md``.
+"""
+
+from repro.obs.metrics import (
+    REGISTRY,
+    Counter,
+    Gauge,
+    Histogram,
+    Registry,
+    Snapshot,
+    bucket_index,
+    bucket_upper_edge,
+    counter,
+    gauge,
+    histogram,
+    merge_all,
+)
+from repro.obs.timeline import (
+    CounterSample,
+    Span,
+    chrome_counters,
+    counter_samples_from,
+    from_chrome_trace,
+    read_chrome_trace,
+    to_chrome_trace,
+    write_chrome_trace,
+)
+from repro.obs.recorder import (
+    BucketRecord,
+    EventRecord,
+    FlightRecorder,
+    IterationRecord,
+    from_iteration_result,
+    plan_fingerprint,
+    read_jsonl,
+    record_spans,
+    write_jsonl,
+)
+from repro.obs.drift import (
+    DriftAlert,
+    DriftMonitor,
+    fit_link_models,
+)
+
+__all__ = [
+    "REGISTRY", "Counter", "Gauge", "Histogram", "Registry", "Snapshot",
+    "bucket_index", "bucket_upper_edge", "counter", "gauge", "histogram",
+    "merge_all",
+    "CounterSample", "Span", "chrome_counters", "counter_samples_from",
+    "from_chrome_trace", "read_chrome_trace", "to_chrome_trace",
+    "write_chrome_trace",
+    "BucketRecord", "EventRecord", "FlightRecorder", "IterationRecord",
+    "from_iteration_result", "plan_fingerprint", "read_jsonl",
+    "record_spans", "write_jsonl",
+    "DriftAlert", "DriftMonitor", "fit_link_models",
+]

@@ -498,6 +498,15 @@ class _JobRun:
             link_bytes=tuple((l, b) for l, (b, _) in tele.items()),
             link_busy=tuple((l, s) for l, (_, s) in tele.items()))
         self.result.iterations.append(result)
+        if self.sim.recorder is not None:
+            from repro.obs.metrics import REGISTRY
+            from repro.obs.recorder import from_iteration_result
+            self.sim.recorder.record(
+                from_iteration_result(result, job=self.name))
+            REGISTRY.histogram(
+                "sim_iteration_seconds",
+                "simulated iteration wall time").observe(
+                    result.t_iter, job=self.name)
         hook = self.spec.hooks.get(result.index)
         if hook is not None:
             hook(self.sim, self, result.index)
@@ -530,12 +539,15 @@ class ClusterSim:
     """A set of jobs sharing link resources, driven by one event engine."""
 
     def __init__(self, jobs: Sequence[JobSpec], *, seed: int = 0,
-                 bursts: Sequence[Burst] = ()):
+                 bursts: Sequence[Burst] = (), recorder=None):
         names = [j.name for j in jobs]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate job names: {names}")
         self.engine = Engine()
         self.seed = seed
+        # optional repro.obs.recorder.FlightRecorder; when None (the
+        # default) the engine emits nothing and pays nothing
+        self.recorder = recorder
         self.spans: list[Span] = []
         self.links: dict[str, Link] = {}
         self._runs = [_JobRun(self, j) for j in jobs]

@@ -227,6 +227,105 @@ def elastic_resize(specs: Sequence[TensorSpec], t_f: float, *,
     return ClusterSim([job], seed=seed, bursts=list(bursts)), report
 
 
+@dataclasses.dataclass
+class DriftReport:
+    """What the always-on drift loop saw and did (filled by the hook)."""
+
+    monitor: "drift.DriftMonitor"
+    residuals: list[tuple[int, float]] = dataclasses.field(
+        default_factory=list)              # (iteration, ewma after observe)
+    replans: int = 0
+    plans: list[MergePlan] = dataclasses.field(default_factory=list)
+    models: list[cost_model.AllReduceModel] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def alerts(self):
+        return self.monitor.alerts
+
+
+def drift_monitored(specs: Sequence[TensorSpec], t_f: float, *,
+                    n_workers: int = 16, iters: int = 8,
+                    degrade_at: int | None = 2,
+                    degrade_factor: float = 4.0,
+                    threshold: float = 0.15, ewma_alpha: float = 0.5,
+                    strategy: str = "dp_incremental",
+                    algorithm: str = "ring", alpha: float = PAPER_ALPHA,
+                    beta: float = PAPER_BETA, gamma: float = PAPER_GAMMA,
+                    compute_mode: str = "analytic", seed: int = 0,
+                    recorder=None,
+                    ) -> tuple[ClusterSim, DriftReport]:
+    """The PR-2 refit fixpoint as a monitored, always-on loop.
+
+    Every iteration the hook compares the closed-form prediction of the
+    *live* plan under the *believed* (a, b) model
+    (``core.simulator.simulate``) against the iteration time the engine
+    actually delivered, feeding a :class:`repro.obs.drift.DriftMonitor`.
+    After iteration ``degrade_at`` the fabric silently degrades (per-byte
+    cost × ``degrade_factor`` — a congested or renegotiated link) while
+    the plan and model stay stale; the EWMA residual climbs, the monitor
+    alerts, and the hook reacts the way a production loop would: refit
+    the effective (a, b) from the degraded iteration's own bucket
+    timings (:func:`repro.core.planner.effective_model`), replan
+    (incrementally under ``strategy="dp_incremental"``), adopt the
+    fitted model as the new belief, and reset the monitor.  Post-replan
+    residuals drop back under threshold — the acceptance criterion the
+    drift tests pin.
+
+    ``degrade_at=None`` is the calibrated control: nothing changes
+    mid-run, so the monitor must stay silent (also pinned, and asserted
+    by the CI obs smoke).
+
+    Pass ``recorder`` (a :class:`repro.obs.recorder.FlightRecorder`) to
+    capture the whole episode — per-iteration records from the engine,
+    ``drift_alert`` events from the monitor, ``planner_update`` decision
+    events from the incremental planner — in one flight-recorder ring.
+    """
+    from repro.core.simulator import simulate
+    from repro.obs import drift
+
+    topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
+    believed = topo.linear_model()
+    plan, replan, inc = _strategy_planner(strategy, specs, believed)
+    if inc is not None and recorder is not None:
+        inc.recorder = recorder
+    monitor = drift.DriftMonitor(threshold=threshold, alpha=ewma_alpha,
+                                 warmup=1, recorder=recorder, job="train")
+    report = DriftReport(monitor=monitor, plans=[plan], models=[believed])
+    state = {"plan": plan, "model": believed}
+
+    def hook(sim: ClusterSim, run, it: int) -> None:
+        result = run.result.iterations[-1]
+        predicted = simulate(specs, state["plan"], state["model"],
+                             t_f).t_iter
+        alert = monitor.observe(it, predicted, result.t_iter)
+        report.residuals.append((it, monitor.residual()))
+        if alert is not None:
+            samples = [(b.nbytes, b.duration) for b in result.buckets]
+            fitted = planner.effective_model(
+                samples, cost_model.as_linear(state["model"]))
+            new_plan = replan(fitted)
+            run.plan = new_plan
+            state["plan"], state["model"] = new_plan, fitted
+            report.replans += 1
+            report.plans.append(new_plan)
+            report.models.append(fitted)
+            monitor.reset()
+        if it == degrade_at:
+            # the fabric degrades *silently*: topology (ground truth)
+            # changes, the planner's belief does not — that gap is what
+            # the monitor exists to close
+            run.topology = FlatTopology(algorithm, n_workers, alpha,
+                                        beta * degrade_factor, gamma)
+            sim.ensure_links(run.topology)
+
+    job = JobSpec(name="train", specs=list(specs), plan=plan, t_f=t_f,
+                  workers=make_workers(n_workers), topology=topo,
+                  iters=iters, compute_mode=compute_mode,
+                  hooks={i: hook for i in range(iters)})
+    return ClusterSim([job], seed=seed, recorder=recorder), report
+
+
 def bursty(specs: Sequence[TensorSpec], t_f: float, n_workers: int = 16,
            *, burst_flows: int = 3, duty: float = 0.5, period: float = 0.25,
            horizon_iters: int = 4, strategy: str = "mgwfbp",
@@ -851,6 +950,7 @@ CATALOG: dict[str, Callable[[], ClusterSim]] = {
     "jittery": lambda: straggler(*_syn(), 16, slow_factor=1.0,
                                  jitter_sigma=0.2, iters=4),
     "elastic_8_to_32": lambda: elastic_resize(*_syn())[0],
+    "drift_monitored": lambda: drift_monitored(*_syn())[0],
     "elastic_dbt": lambda: elastic_resize(
         *_syn(), algorithm="double_binary_trees",
         strategy="dp_incremental")[0],

@@ -13,11 +13,16 @@ Three jobs:
   and feed ``planner.replan`` — closing the elastic-replanning loop from
   ``examples/elastic_replan.py`` without peeking at the simulator's ground
   truth.
+
+The span type and Chrome-trace I/O themselves now live in
+``repro.obs.timeline`` (the shared timeline of the whole repo — engine,
+co-planner, and real train step all export through it); this module
+re-exports them so every existing ``sim.trace`` import keeps working and
+the golden traces stay byte-identical.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import json
 from typing import Iterable, Sequence
 
@@ -25,25 +30,15 @@ import numpy as np
 
 from repro.core import cost_model, planner
 from repro.core.planner import MergePlan, TensorSpec
-
-_US = 1e6   # chrome trace timestamps are microseconds
-
-
-@dataclasses.dataclass(frozen=True)
-class Span:
-    """One complete ("ph": "X") trace event."""
-
-    name: str
-    cat: str          # "compute" | "comm" | "network"
-    pid: str          # job name (or "background")
-    tid: str          # worker name or "link:<name>"
-    start: float      # seconds
-    end: float        # seconds
-    args: dict = dataclasses.field(default_factory=dict)
-
-    def __post_init__(self):
-        if self.end < self.start:
-            raise ValueError(f"span ends before it starts: {self}")
+from repro.obs.timeline import (    # noqa: F401  (re-exports)
+    CounterSample,
+    Span,
+    chrome_counters,
+    from_chrome_trace,
+    read_chrome_trace,
+    to_chrome_trace,
+    write_chrome_trace,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -87,53 +82,6 @@ def synthetic_specs(n_tensors: int, seed: int = 0, *,
     specs = [TensorSpec(f"t{i}", int(s), float(t))
              for i, (s, t) in enumerate(zip(sizes, t_b))]
     return specs, t_b_total / 3.0           # t_f ~ 1/3 of iteration compute
-
-
-# ---------------------------------------------------------------------------
-# Chrome trace export / import (round-trips exactly).
-# ---------------------------------------------------------------------------
-
-def to_chrome_trace(spans: Sequence[Span]) -> dict:
-    """Chrome/Perfetto "X" events; ``ts``/``dur`` are microseconds per the
-    trace-event spec, while ``ts_s``/``end_s`` (ignored by viewers) keep
-    the exact float seconds so a round-trip is lossless."""
-    events = []
-    for s in spans:
-        events.append({
-            "name": s.name, "cat": s.cat, "ph": "X",
-            "pid": s.pid, "tid": s.tid,
-            "ts": s.start * _US, "dur": (s.end - s.start) * _US,
-            "ts_s": s.start, "end_s": s.end,
-            "args": dict(s.args),
-        })
-    return {"traceEvents": events, "displayTimeUnit": "ms"}
-
-
-def from_chrome_trace(obj: dict) -> list[Span]:
-    spans = []
-    for ev in obj.get("traceEvents", []):
-        if ev.get("ph") != "X":
-            continue
-        if "ts_s" in ev:                      # our lossless sidecar fields
-            start, end = ev["ts_s"], ev["end_s"]
-        else:                                 # foreign chrome trace
-            start = ev["ts"] / _US
-            end = start + ev["dur"] / _US
-        spans.append(Span(name=ev["name"], cat=ev.get("cat", ""),
-                          pid=str(ev["pid"]), tid=str(ev["tid"]),
-                          start=start, end=end,
-                          args=dict(ev.get("args", {}))))
-    return spans
-
-
-def write_chrome_trace(path: str, spans: Sequence[Span]) -> None:
-    with open(path, "w") as f:
-        json.dump(to_chrome_trace(spans), f)
-
-
-def read_chrome_trace(path: str) -> list[Span]:
-    with open(path) as f:
-        return from_chrome_trace(json.load(f))
 
 
 # ---------------------------------------------------------------------------

@@ -625,3 +625,84 @@ def _masked_update(opt: Optimizer, g, p, s, step, lr, decay_mask, wd):
         wd * decay_mask * p.astype(jnp.float32)
     new_p = (p.astype(jnp.float32) - lr * mu).astype(p.dtype)
     return new_p, {"mu": mu.astype(s["mu"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Host-side observability: the measurement half of the sim->real loop.
+# ---------------------------------------------------------------------------
+
+def instrument_step(step_fn, art: StepArtifacts, *, job: str = "train",
+                    t_f: float = 0.0, recorder=None, source: str = "train",
+                    clock=None, hlo_text: str | None = None,
+                    sync: bool = True):
+    """Wrap a (jitted) step function with host-side flight recording.
+
+    Timing happens strictly OUTSIDE the jitted region — wall clock before
+    dispatch and after ``jax.block_until_ready`` — so nothing lands on the
+    device hot path (no Python callbacks inside jit, acceptance criterion
+    of the obs subsystem).  Per-bucket communication windows are not
+    host-observable, so each record carries the closed-form per-bucket
+    estimate (``core.simulator.simulate`` over the step's own plan, specs
+    and comm model — the same Eq. 7/8 replay the planner optimized
+    against) rescaled to the measured wall time and flagged
+    ``estimated_buckets`` in ``args``.  The result: a real multi-device
+    run produces :class:`repro.obs.recorder.IterationRecord`s in exactly
+    the simulator's schema, and both export into one Chrome trace
+    (``repro.obs.recorder.record_spans``).
+
+    ``hlo_text`` (the compiled step's HLO, e.g. ``jax.jit(step).lower(...)
+    .compile().as_text()``) attaches ``utils.hlo.analyze`` cost counters
+    to the first record.  ``clock`` injects a time source (deterministic
+    golden tests); ``sync=False`` skips the block-until-ready (callers
+    that already synchronize, or tests without real devices).
+    """
+    import time
+
+    from repro.core.simulator import simulate
+    from repro.obs.metrics import REGISTRY
+    from repro.obs.recorder import (BucketRecord, IterationRecord,
+                                    plan_fingerprint)
+
+    est = simulate(art.specs, art.plan, art.comm_model, t_f)
+    fingerprint = plan_fingerprint(art.plan)
+    hlo_cost = None
+    if hlo_text is not None:
+        from repro.utils import hlo as hlo_mod
+        hlo_cost = hlo_mod.analyze(hlo_text).as_dict()
+    now = clock if clock is not None else time.perf_counter
+    hist = REGISTRY.histogram("train_step_seconds",
+                              "real train-step wall time")
+    step_idx = 0
+
+    def wrapped(state, batch):
+        nonlocal step_idx
+        t0 = now()
+        out = step_fn(state, batch)
+        if sync:
+            out = jax.block_until_ready(out)
+        t1 = now()
+        hist.observe(t1 - t0, job=job)
+        if recorder is not None:
+            # map the closed-form timeline (backward-origin clock, total
+            # span est.t_iter) onto the measured wall window [t0, t1]
+            scale = (t1 - t0) / est.t_iter if est.t_iter > 0 else 0.0
+            buckets = tuple(
+                BucketRecord(bucket=e.bucket, nbytes=e.nbytes,
+                             ready=t0 + (t_f + e.ready) * scale,
+                             start=t0 + (t_f + e.start) * scale,
+                             end=t0 + (t_f + e.end) * scale)
+                for e in est.events)
+            args = {"plan": fingerprint, "estimated_buckets": True,
+                    "predicted_t_iter": est.t_iter,
+                    "overlap_ratio": est.overlap_ratio}
+            if step_idx == 0 and hlo_cost is not None:
+                args["hlo_cost"] = hlo_cost
+            recorder.record(IterationRecord(
+                source=source, job=job, iteration=step_idx,
+                start=t0, end=t1,
+                backward_end=t0 + (t_f + est.t_b_total) * scale,
+                buckets=buckets, args=args))
+        step_idx += 1
+        return out
+
+    return wrapped
