@@ -23,6 +23,11 @@ runs the scenarios only an event engine can express:
     and mixed-schedule 3-job fleets must beat the one-sided PR-2 fixpoint
     and independently-planned MG-WFBP on joint makespan — its own suite,
     archived as BENCH_coplanner.json)
+  * fault injection        (repro.sim.faults + repro.train.resilience: one
+    seeded FaultPlan against the resilience controller and the naive
+    restore-everything baseline; goodput/MTTR/replay bars plus the
+    determinism bar — its own suite, archived as BENCH_faults.json via
+    ``--faults``)
 
 Every scenario's timeline round-trips through Chrome-trace JSON
 (``repro.sim.trace``), which is also asserted here.  ``python
@@ -633,6 +638,68 @@ def _obs_rows(rows: list) -> None:
                  f"post-replan residual {max(post):.2e}"))
 
 
+def _fault_rows(rows: list) -> None:
+    """Fault injection + resilience controller vs the naive baseline.
+
+    One seeded FaultPlan (crash, preemption with notice, link flap, slow
+    host, checkpoint failure) hits two otherwise identical runs; the
+    acceptance bars: controller goodput strictly above the baseline's,
+    every fault recovered within a bounded number of iterations, and the
+    whole thing deterministic (same seed -> identical flight-recorder
+    stream)."""
+    from repro.obs.recorder import FlightRecorder
+    from repro.sim import faults
+
+    specs, t_f = trace.synthetic_specs(48, seed=7)
+    t_iter_est = t_f + sum(s.t_b for s in specs)
+    iters = 30
+    plan = faults.FaultPlan(events=(
+        faults.WorkerCrash(5.2 * t_iter_est, worker="w6"),
+        faults.Preemption(11.5 * t_iter_est, worker="w3",
+                          notice_s=3 * t_iter_est),
+        faults.LinkDegradation(16.3 * t_iter_est, link="net", factor=0.4,
+                               duration=4 * t_iter_est),
+        faults.SlowHostOnset(20.1 * t_iter_est, worker="w1", factor=3.0),
+        faults.CheckpointFailure(8.0 * t_iter_est, count=1),
+    ), seed=7)
+
+    def one(resilient, recorder=None):
+        sim, rep = scenarios.faulty_long_run(
+            specs, t_f, iters=iters, plan=plan, resilient=resilient,
+            recorder=recorder)
+        sim.run()
+        return rep
+
+    rec_a, rec_b = FlightRecorder(16384), FlightRecorder(16384)
+    ctrl = one(True, rec_a)
+    naive = one(False)
+    again = one(True, rec_b)
+    a, b = ctrl.availability, naive.availability
+    assert a.goodput > b.goodput + EPS, (a.goodput, b.goodput)
+    assert a.unrecovered == 0, a
+    bound = max((i.steps_to_recover or 0)
+                for i in ctrl.controller.incidents)
+    assert bound <= 3, ctrl.controller.incidents
+    assert rec_a.records == rec_b.records, "fault run not deterministic"
+    rows.append(("cluster_sim.faults.controller_goodput", a.goodput,
+                 f"useful steps/s ({a.useful_steps} useful, "
+                 f"{a.wasted_steps} wasted)"))
+    rows.append(("cluster_sim.faults.baseline_goodput", b.goodput,
+                 f"naive restore-everything ({b.useful_steps} useful, "
+                 f"{b.wasted_steps} wasted)"))
+    rows.append(("cluster_sim.faults.goodput_gain", a.goodput / b.goodput,
+                 "controller / naive (>1 = controller wins)"))
+    rows.append(("cluster_sim.faults.mttr_p95_ms", a.mttr_p95 * 1e3,
+                 f"{len(a.mttr)} incidents recovered, "
+                 f"max {bound} iteration(s) to recover"))
+    rows.append(("cluster_sim.faults.replayed_fraction_naive",
+                 b.replayed_fraction,
+                 f"controller replays {a.replayed_fraction:.3f}"))
+    rows.append(("cluster_sim.faults.recorder_events",
+                 len(rec_a.records),
+                 "identical across two seeded runs (determinism)"))
+
+
 def run() -> list[tuple[str, float, str]]:
     rows: list[tuple[str, float, str]] = []
     _scaling_rows(rows)
@@ -675,6 +742,14 @@ def run_obs() -> list[tuple[str, float, str]]:
     return rows
 
 
+def run_faults() -> list[tuple[str, float, str]]:
+    """Just the fault-injection rows — the CI faults smoke step
+    (BENCH_faults.json)."""
+    rows: list[tuple[str, float, str]] = []
+    _fault_rows(rows)
+    return rows
+
+
 if __name__ == "__main__":
     import sys
 
@@ -686,6 +761,8 @@ if __name__ == "__main__":
         rows = run_hier_coplan()
     elif "--obs" in sys.argv:
         rows = run_obs()
+    elif "--faults" in sys.argv:
+        rows = run_faults()
     else:
         rows = run()
     print("name,us_per_call,derived")

@@ -23,6 +23,10 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
                      round-trip, drift monitor silent-when-calibrated /
                      alert-refit-replan-recover on degradation (CI also
                      runs `cluster_sim.py --obs` as a smoke step)
+  faults           — fault injection + resilience controller: seeded
+                     FaultPlan vs naive baseline, goodput/MTTR/replayed
+                     fraction and the determinism bar (CI also runs
+                     `cluster_sim.py --faults` as a smoke step)
   planner_bench    — §4.2 one-time O(L^2) cost + the incremental planner
                      fast path (>= 10x replan speedup enforced)
   kernels_bench    — kernels  (structural tile/bandwidth notes)
@@ -51,6 +55,7 @@ BENCH_JSON = {
     "cluster_sim": "BENCH_cluster_sim.json",
     "coplanner": "BENCH_coplanner.json",
     "obs": "BENCH_obs.json",
+    "faults": "BENCH_faults.json",
 }
 
 # --emit-metrics artifact: a snapshot of the process-local metrics
@@ -88,6 +93,7 @@ def main() -> None:
         ("cluster_sim", cluster_sim.run),
         ("coplanner", cluster_sim.run_coplan),
         ("obs", cluster_sim.run_obs),
+        ("faults", cluster_sim.run_faults),
         ("planner_bench", planner_bench.run),
         ("kernels_bench", kernels_bench.run),
         ("roofline", roofline.run),

@@ -3,8 +3,11 @@
     PYTHONPATH=src python scripts/obs_report.py <records.jsonl>
 
 Per job: step-time percentiles (p50/p95/p99), comm/compute overlap
-fraction, per-link utilization over the job's span; then the decision /
-drift-alert event log.  Input is whatever ``FlightRecorder.write`` (or
+fraction, per-link utilization over the job's span; then a recovery
+section when the stream holds resilience events (injected faults,
+recoveries with MTTR, goodput, per-fault-kind counts — see
+``repro.train.resilience``); then the decision / drift-alert event log.
+Input is whatever ``FlightRecorder.write`` (or
 ``repro.obs.recorder.write_jsonl``) produced — simulator runs and real
 instrumented train steps share one schema, so one report covers both.
 """
@@ -68,11 +71,69 @@ def job_summary(key: str, its: list[IterationRecord]) -> list[str]:
     return lines
 
 
+def recovery_summary(records) -> list[str]:
+    """The resilience view of an event stream: faults injected/detected,
+    recoveries with MTTR, wasted steps, the final availability line."""
+    events = [r for r in records if not isinstance(r, IterationRecord)]
+    recoveries = [e for e in events if e.kind == "recovery"]
+
+    def kind_counts(kind: str) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for e in events:
+            if e.kind == kind:
+                k = str(e.args.get("fault", "?"))
+                counts[k] = counts.get(k, 0) + 1
+        return counts
+
+    injected = kind_counts("fault_injected")
+    detected = kind_counts("fault_detected")
+    if not injected and not detected and not recoveries:
+        return []
+    lines = ["recovery:"]
+    if injected:
+        lines.append("  injected    " + "  ".join(
+            f"{k}={n}" for k, n in sorted(injected.items())))
+    if detected:
+        lines.append("  detected    " + "  ".join(
+            f"{k}={n}" for k, n in sorted(detected.items())))
+    mttrs = [float(e.args["mttr"]) for e in recoveries
+             if e.args.get("mttr") is not None]
+    rec_kinds: dict[str, int] = {}
+    for e in recoveries:
+        k = str(e.args.get("fault", "?"))
+        rec_kinds[k] = rec_kinds.get(k, 0) + 1
+    if recoveries:
+        lines.append("  recovered   " + "  ".join(
+            f"{k}={n}" for k, n in sorted(rec_kinds.items())))
+        lines.append(
+            f"  mttr        p50 {_pct(mttrs, 0.50) * 1e3:9.3f} ms   "
+            f"p95 {_pct(mttrs, 0.95) * 1e3:9.3f} ms   "
+            f"max {max(mttrs) * 1e3:9.3f} ms")
+    discarded = sum(1 for e in events if e.kind == "step_discarded")
+    ckpt_fails = sum(1 for e in events if e.kind == "ckpt_fail")
+    if discarded or ckpt_fails:
+        lines.append(f"  wasted      discarded_steps={discarded}  "
+                     f"ckpt_failures={ckpt_fails}")
+    for e in events:
+        if e.kind == "availability":
+            lines.append(
+                f"  availability goodput={e.args.get('goodput', 0):.2f} "
+                f"steps/s  useful={e.args.get('useful_steps')}  "
+                f"wasted={e.args.get('wasted_steps')}  "
+                f"replayed={e.args.get('replayed_fraction', 0):.3f}  "
+                f"unrecovered={e.args.get('unrecovered')}")
+    return lines
+
+
 def render(path: str) -> str:
     records = read_jsonl(path)
     out = [f"flight recorder: {path} ({len(records)} records)", ""]
     for key, its in sorted(_group(records).items()):
         out.extend(job_summary(key, its))
+        out.append("")
+    recovery = recovery_summary(records)
+    if recovery:
+        out.extend(recovery)
         out.append("")
     events = [r for r in records if not isinstance(r, IterationRecord)]
     if events:

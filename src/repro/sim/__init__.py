@@ -64,6 +64,16 @@ from repro.sim.trace import (
     to_chrome_trace,
     write_chrome_trace,
 )
+from repro.sim.faults import (
+    CheckpointFailure,
+    FaultEvent,
+    FaultInjector,
+    FaultPlan,
+    LinkDegradation,
+    Preemption,
+    SlowHostOnset,
+    WorkerCrash,
+)
 from repro.sim.workers import WorkerProfile, make_workers, scale_array
 from repro.sim import scenarios
 
@@ -83,5 +93,7 @@ __all__ = [
     "refit_model", "replan_from_samples", "specs_from_json",
     "specs_from_rows", "specs_to_json", "synthetic_specs",
     "to_chrome_trace", "write_chrome_trace",
+    "CheckpointFailure", "FaultEvent", "FaultInjector", "FaultPlan",
+    "LinkDegradation", "Preemption", "SlowHostOnset", "WorkerCrash",
     "WorkerProfile", "make_workers", "scale_array", "scenarios",
 ]

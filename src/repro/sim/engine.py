@@ -127,6 +127,12 @@ class Link:
         self._last = 0.0
         self._gen = 0
         self._seq = 0
+        # capacity multiplier: 1.0 = healthy; a degraded/flapping link
+        # (repro.sim.faults.LinkDegradation) runs at rate_scale < 1, so
+        # every live flow drains proportionally slower.  Only the service
+        # clock scales — busy/share attribution still measures wall time,
+        # preserving the conservation law telemetry tests assert.
+        self.rate_scale = 1.0
         self.busy_s = 0.0         # wall seconds with >= 1 live flow
         self.owner_bytes: dict[str, float] = {}
         self.owner_busy: dict[str, float] = {}
@@ -144,7 +150,7 @@ class Link:
         if self._heap and now > self._last:
             dt = now - self._last
             per_flow = dt / self._claimants()
-            self._service += per_flow
+            self._service += per_flow * self.rate_scale
             self.busy_s += dt
             busy = self.owner_busy
             for owner, k in self._owner_flows.items():
@@ -171,6 +177,17 @@ class Link:
         self._seq += 1
         self._reschedule()
 
+    def set_rate_scale(self, scale: float) -> None:
+        """Change the link's capacity multiplier (fault injection: a
+        degradation window sets < 1, restoration sets it back).  Settles
+        accrued service at the old rate first, then reschedules the next
+        completion at the new one."""
+        if not (scale > 0) or not np.isfinite(scale):
+            raise ValueError(f"rate_scale must be finite and > 0: {scale}")
+        self._advance()
+        self.rate_scale = scale
+        self._reschedule()
+
     def add_background(self, count: int = 1) -> None:
         self._advance()
         self.background += count
@@ -186,7 +203,8 @@ class Link:
         if not self._heap:
             return
         gen = self._gen
-        t_next = (self._heap[0].target - self._service) * self._claimants()
+        t_next = (self._heap[0].target - self._service) \
+            * self._claimants() / self.rate_scale
         self.engine.after(max(t_next, 0.0), lambda: self._complete(gen))
 
     def _complete(self, gen: int) -> None:
@@ -201,7 +219,8 @@ class Link:
             # absolute epsilon, plus: a remainder too small for `now + dt`
             # to advance the clock can never drain — count it done (the
             # error is below one float ulp of the current timestamp).
-            if remaining <= _EPS or now + remaining * c <= now:
+            if remaining <= _EPS \
+                    or now + remaining * c / self.rate_scale <= now:
                 f = heapq.heappop(self._heap)
                 self._owner_flows[f.owner] -= 1
                 done.append(f)
@@ -407,6 +426,11 @@ class _JobRun:
         self.topology = spec.topology
         self.result = JobResult(spec.name, [])
         self.it = 0
+        # earliest sim time the next iteration may start — fault hooks
+        # push it forward (downtime: detection, restore, drain) and every
+        # schedule driver funnels its next-iteration start through
+        # next_iteration() so the pause is schedule-agnostic
+        self.resume_at = 0.0
         if spec.schedule is None:
             from repro.sim.schedules import BSP  # lazy: no import cycle
             self.schedule = BSP()
@@ -513,6 +537,21 @@ class _JobRun:
         self.it = result.index + 1
         return self.it < self.spec.iters
 
+    def pause_until(self, t: float) -> None:
+        """Hold the next iteration until sim time ``t`` (monotone max —
+        overlapping downtimes extend, never shrink, the pause)."""
+        if not np.isfinite(t):
+            raise ValueError(f"pause_until needs a finite time, got {t}")
+        self.resume_at = max(self.resume_at, t)
+
+    def next_iteration(self, start_fn: Callable[[], None]) -> None:
+        """Start the next iteration now, or at ``resume_at`` if a fault
+        hook paused the job.  All schedule drivers route through here."""
+        if self.resume_at > self.sim.engine.now:
+            self.sim.engine.at(self.resume_at, start_fn)
+        else:
+            start_fn()
+
 
 # ---------------------------------------------------------------------------
 # Cluster.
@@ -565,6 +604,14 @@ class ClusterSim:
                              pid="background", tid=f"link:{b.link}",
                              start=b.start, end=b.end,
                              args={"flows": b.flows}))
+
+    def job_run(self, name: str) -> _JobRun:
+        """The live run context for one job (fault injectors and
+        scenario hooks mutate plan/workers/topology through it)."""
+        for r in self._runs:
+            if r.name == name:
+                return r
+        raise KeyError(f"no job named {name!r}")
 
     def ensure_link(self, name: str) -> Link:
         if name not in self.links:

@@ -1,0 +1,331 @@
+"""Deterministic fault injection for the cluster simulator.
+
+A :class:`FaultPlan` is a seeded, typed schedule of infrastructure
+faults — the failure taxonomy of long S-SGD runs, where one bad worker
+or link stalls the whole synchronous fleet:
+
+* :class:`WorkerCrash` — fail-stop: the worker vanishes at ``time``;
+  the in-flight iteration's gradient sync is lost and the supervisor
+  discovers it at the next iteration boundary.
+* :class:`Preemption` — a crash with advance notice (spot/maintenance):
+  the notice fires at ``time`` and the worker dies at ``time +
+  notice_s`` unless the supervisor drains it first.
+* :class:`LinkDegradation` — a bandwidth cut (or flap when short): the
+  link runs at ``factor`` of its capacity for ``duration`` seconds.
+  Overlapping windows stack multiplicatively.
+* :class:`SlowHostOnset` — gray failure: the worker's compute slows by
+  ``factor`` from ``time`` on (thermal throttling, a noisy neighbour);
+  nothing crashes, the straggler monitor has to notice.
+* :class:`CheckpointFailure` — the next ``count`` checkpoint writes
+  fail (full disk, flaky object store).
+
+:class:`FaultInjector` arms a plan on a :class:`~repro.sim.engine
+.ClusterSim` through ``Engine.at`` hooks, so injection is part of the
+deterministic event order — same seed, same trace, golden-comparable
+flight-recorder output.  Physical effects the fabric can express
+directly (link rate, compute slowdown) are applied by the injector
+itself; fail-stop effects are exposed as supervisor *views*
+(:meth:`FaultInjector.take_crashes` etc.) because detecting and
+repairing them is exactly the resilience controller's job
+(``repro.sim.scenarios.faulty_long_run`` closes that loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import ClassVar, Sequence
+
+from repro.obs.recorder import EventRecord
+from repro.sim.trace import Span
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """Base: something goes wrong at ``time`` (sim seconds)."""
+
+    time: float
+    kind: ClassVar[str] = "fault"
+
+    def __post_init__(self):
+        if not self.time >= 0:
+            raise ValueError(f"fault time must be >= 0, got {self.time}")
+
+    def args(self) -> dict:
+        """JSON-safe payload for traces and flight-recorder events."""
+        d = dataclasses.asdict(self)
+        d.pop("time")
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkerCrash(FaultEvent):
+    worker: str = ""
+    kind: ClassVar[str] = "crash"
+
+
+@dataclasses.dataclass(frozen=True)
+class Preemption(FaultEvent):
+    worker: str = ""
+    notice_s: float = 0.5
+    kind: ClassVar[str] = "preempt"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not self.notice_s >= 0:
+            raise ValueError(f"notice_s must be >= 0: {self.notice_s}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDegradation(FaultEvent):
+    link: str = "net"
+    factor: float = 0.5          # capacity multiplier during the window
+    duration: float = 1.0
+    kind: ClassVar[str] = "link_degrade"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not 0 < self.factor <= 1:
+            raise ValueError(f"factor must be in (0, 1]: {self.factor}")
+        if not self.duration > 0:
+            raise ValueError(f"duration must be > 0: {self.duration}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlowHostOnset(FaultEvent):
+    worker: str = ""
+    factor: float = 3.0          # compute slowdown multiplier (> 1)
+    kind: ClassVar[str] = "slow_host"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if not self.factor > 1:
+            raise ValueError(f"slowdown factor must be > 1: {self.factor}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointFailure(FaultEvent):
+    count: int = 1               # how many consecutive writes fail
+    kind: ClassVar[str] = "ckpt_fail"
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.count < 1:
+            raise ValueError(f"count must be >= 1: {self.count}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable, time-sorted fault schedule.
+
+    Build one explicitly from events, or draw a reproducible random one
+    with :meth:`random` — either way the plan is pure data, so the same
+    plan against the same cluster yields bit-identical traces.
+    """
+
+    events: tuple[FaultEvent, ...] = ()
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "events",
+            tuple(sorted(self.events, key=lambda e: e.time)))
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+    def of_kind(self, kind: str) -> tuple[FaultEvent, ...]:
+        return tuple(e for e in self.events if e.kind == kind)
+
+    @classmethod
+    def random(cls, seed: int, horizon: float,
+               workers: Sequence[str], links: Sequence[str] = (), *,
+               n_crashes: int = 1, n_preemptions: int = 1,
+               n_degradations: int = 1, n_slow: int = 1,
+               n_ckpt_failures: int = 1) -> "FaultPlan":
+        """A seeded random plan over ``(0, horizon)``.
+
+        Kinds are drawn in a fixed order so the plan is a pure function
+        of the arguments.  Worker-targeted events pick distinct workers
+        where possible (a crash and a preemption never target the same
+        host, so the supervisor's N−k floor is predictable).
+        """
+        if horizon <= 0:
+            raise ValueError(f"horizon must be > 0, got {horizon}")
+        rng = random.Random(seed)
+        pool = list(workers)
+        rng.shuffle(pool)
+
+        def take_worker() -> str:
+            return pool.pop() if pool else rng.choice(list(workers))
+
+        def when(lo: float = 0.05, hi: float = 0.85) -> float:
+            return horizon * rng.uniform(lo, hi)
+
+        events: list[FaultEvent] = []
+        for _ in range(n_crashes):
+            events.append(WorkerCrash(when(), worker=take_worker()))
+        for _ in range(n_preemptions):
+            events.append(Preemption(
+                when(), worker=take_worker(),
+                notice_s=horizon * rng.uniform(0.02, 0.08)))
+        for _ in range(n_degradations):
+            if not links:
+                break
+            events.append(LinkDegradation(
+                when(), link=rng.choice(list(links)),
+                factor=rng.uniform(0.25, 0.7),
+                duration=horizon * rng.uniform(0.05, 0.25)))
+        for _ in range(n_slow):
+            events.append(SlowHostOnset(
+                when(), worker=take_worker(),
+                factor=rng.uniform(2.0, 5.0)))
+        for _ in range(n_ckpt_failures):
+            events.append(CheckpointFailure(when(), count=rng.randint(1, 2)))
+        return cls(events=tuple(events), seed=seed)
+
+
+class FaultInjector:
+    """Arms a :class:`FaultPlan` on a live :class:`ClusterSim`.
+
+    Call :meth:`arm` once before ``sim.run()``.  Fabric-level effects
+    (link rate, host slowdown) are applied immediately at fire time;
+    fail-stop effects accumulate in supervisor views that a scenario
+    hook drains at iteration boundaries:
+
+    * :meth:`take_crashes` — workers that died since the last call
+      (crashes, plus preemptions whose deadline passed undrained);
+    * :meth:`take_notices` — preemption notices awaiting a drain
+      decision (call :meth:`mark_drained` once handled);
+    * :meth:`take_slow_hosts` / :meth:`take_degradations` — gray
+      failures the controller may react to (evict / replan);
+    * :meth:`take_ckpt_failure` — consume one budgeted write failure.
+
+    Every fired event lands in the trace (a ``fault`` span) and the
+    flight recorder (``fault_injected``), stamped with sim time — the
+    determinism tests golden-compare exactly this stream.
+    """
+
+    def __init__(self, sim, plan: FaultPlan, job: str):
+        self.sim = sim
+        self.plan = plan
+        self.job = job
+        self.fired: list[tuple[float, FaultEvent]] = []
+        self._crashes: list[tuple[str, float, str]] = []   # worker, t, kind
+        self._notices: list[dict] = []
+        self._slow: list[tuple[str, float, float]] = []    # worker, t, factor
+        self._degradations: list[dict] = []
+        self._ckpt_budget = 0
+        self._link_factors: dict[str, list[float]] = {}
+        self._armed = False
+
+    # -- arming -----------------------------------------------------------
+
+    def arm(self) -> None:
+        if self._armed:
+            raise RuntimeError("FaultInjector.arm called twice")
+        self._armed = True
+        for e in self.plan.events:
+            self.sim.engine.at(e.time, lambda e=e: self._fire(e))
+
+    def _record(self, e: FaultEvent, t: float, **extra) -> None:
+        args = {**e.args(), **extra}
+        self.fired.append((t, e))
+        self.sim.record(Span(
+            name=f"fault:{e.kind}", cat="fault", pid="faults",
+            tid=self.job, start=t, end=t, args=args))
+        if self.sim.recorder is not None:
+            self.sim.recorder.record(EventRecord(
+                kind="fault_injected", time=t, source="sim",
+                job=self.job, args={"fault": e.kind, **args}))
+
+    def _fire(self, e: FaultEvent) -> None:
+        t = self.sim.engine.now
+        self._record(e, t)
+        if isinstance(e, WorkerCrash):
+            self._crashes.append((e.worker, t, "crash"))
+        elif isinstance(e, Preemption):
+            note = {"worker": e.worker, "at": t,
+                    "deadline": t + e.notice_s, "drained": False}
+            self._notices.append(note)
+            self.sim.engine.at(
+                note["deadline"], lambda n=note: self._preempt_kill(n))
+        elif isinstance(e, LinkDegradation):
+            self._degrade(e.link, e.factor)
+            self._degradations.append(
+                {"link": e.link, "at": t, "factor": e.factor,
+                 "until": t + e.duration})
+            self.sim.engine.at(
+                t + e.duration, lambda e=e: self._restore(e.link, e.factor))
+        elif isinstance(e, SlowHostOnset):
+            self._slow_host(e.worker, e.factor)
+            self._slow.append((e.worker, t, e.factor))
+        elif isinstance(e, CheckpointFailure):
+            self._ckpt_budget += e.count
+
+    # -- physical effects -------------------------------------------------
+
+    def _apply_rate(self, link: str) -> None:
+        scale = 1.0
+        for f in self._link_factors.get(link, ()):  # windows stack
+            scale *= f
+        self.sim.ensure_link(link).set_rate_scale(scale)
+
+    def _degrade(self, link: str, factor: float) -> None:
+        self._link_factors.setdefault(link, []).append(factor)
+        self._apply_rate(link)
+
+    def _restore(self, link: str, factor: float) -> None:
+        self._link_factors.get(link, [factor]).remove(factor)
+        self._apply_rate(link)
+        self.sim.record(Span(
+            name="fault:link_restore", cat="fault", pid="faults",
+            tid=self.job, start=self.sim.engine.now,
+            end=self.sim.engine.now, args={"link": link}))
+
+    def _slow_host(self, worker: str, factor: float) -> None:
+        run = self.sim.job_run(self.job)
+        run.workers = [
+            dataclasses.replace(w, slowdown=w.slowdown * factor)
+            if w.name == worker else w for w in run.workers]
+
+    def _preempt_kill(self, note: dict) -> None:
+        if not note["drained"]:
+            self._crashes.append(
+                (note["worker"], self.sim.engine.now, "preempt"))
+
+    # -- supervisor views -------------------------------------------------
+
+    def take_crashes(self) -> list[tuple[str, float, str]]:
+        """Workers dead since the last call: (name, time, cause) where
+        cause is ``"crash"`` or ``"preempt"`` (deadline expired)."""
+        out, self._crashes = self._crashes, []
+        return out
+
+    def take_notices(self) -> list[dict]:
+        """Open preemption notices (not yet drained, deadline ahead)."""
+        now = self.sim.engine.now
+        return [n for n in self._notices
+                if not n["drained"] and n["deadline"] > now]
+
+    def mark_drained(self, worker: str) -> None:
+        """The supervisor checkpointed + evicted ``worker`` before its
+        preemption deadline; the kill becomes a no-op."""
+        for n in self._notices:
+            if n["worker"] == worker:
+                n["drained"] = True
+
+    def take_slow_hosts(self) -> list[tuple[str, float, float]]:
+        out, self._slow = self._slow, []
+        return out
+
+    def take_degradations(self) -> list[dict]:
+        out, self._degradations = self._degradations, []
+        return out
+
+    def take_ckpt_failure(self) -> bool:
+        """Consume one budgeted checkpoint-write failure, if any."""
+        if self._ckpt_budget > 0:
+            self._ckpt_budget -= 1
+            return True
+        return False

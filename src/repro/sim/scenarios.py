@@ -32,7 +32,12 @@ Each builder assembles a ready-to-run :class:`ClusterSim`:
   (a_l, b_l) from its own occupancy telemetry; ``shared_model=True``
   pools the DCN samples of all jobs);
 * ``job_churn`` — arrival/departure mid-run: re-plan the new fleet
-  through ``coplan_incremental`` from the incumbent assignment.
+  through ``coplan_incremental`` from the incumbent assignment;
+* ``faulty_long_run`` — a seeded :class:`~repro.sim.faults.FaultPlan`
+  (crashes, preemptions, link flaps, slow hosts, checkpoint failures)
+  against a ``repro.train.resilience`` controller vs. the naive
+  restore-everything baseline, with an availability report (goodput,
+  MTTR p95, replayed fraction).
 
 Builders take ``(specs, t_f)`` so callers choose the profile source
 (``benchmarks/paper_profiles.py``, ``core/profiler.py`` measurements, or
@@ -58,7 +63,7 @@ from repro.sim.engine import ClusterSim, JobSpec
 from repro.sim.network import Burst, FlatTopology, HierarchicalTopology
 from repro.sim.schedules import (LocalSGD, OneFoneB, PipelinedAllReduce,
                                  Schedule)
-from repro.sim.workers import make_workers
+from repro.sim.workers import WorkerProfile, make_workers
 
 # Point-to-point constants matching the paper's fitted cluster 1 at N=8
 # (ring: a = 2(N-1)alpha -> alpha = 972us/14; b -> beta per byte).  These
@@ -855,8 +860,7 @@ def straggler_eviction(specs: Sequence[TensorSpec], t_f: float,
             return
         keep = [w for w in run.workers if w.name not in flagged]
         for name in flagged:            # forget the evicted hosts' stats
-            monitor.ewma.pop(name, None)
-            monitor.counts.pop(name, None)
+            monitor.forget(name)
         run.workers = keep
         run.topology = run.topology.rescale(len(keep))
         if contention_aware:
@@ -879,6 +883,236 @@ def straggler_eviction(specs: Sequence[TensorSpec], t_f: float,
                   topology=topo, iters=iters, compute_mode=compute_mode,
                   hooks={i: hook for i in range(iters)})
     return ClusterSim([job], seed=seed, bursts=list(bursts)), report
+
+
+@dataclasses.dataclass
+class FaultyRunReport:
+    """What one faulty long run did, and how well it survived.
+
+    ``availability`` (a :class:`repro.train.resilience
+    .AvailabilityReport`) is filled in by the final iteration hook, so it
+    is valid as soon as ``sim.run()`` returns."""
+
+    controller: object                  # train.resilience controller
+    injector: "faults.FaultInjector"
+    resilient: bool
+    availability: object = None
+    evictions: list[tuple[int, str, str]] = \
+        dataclasses.field(default_factory=list)     # (iter, worker, cause)
+    readmissions: list[tuple[int, str]] = \
+        dataclasses.field(default_factory=list)
+    replans: int = 0
+
+
+def faulty_long_run(specs: Sequence[TensorSpec], t_f: float, *,
+                    n_workers: int = 8, iters: int = 30,
+                    plan: "faults.FaultPlan | None" = None,
+                    resilient: bool = True, ckpt_every: int = 5,
+                    strategy: str = "dp_incremental",
+                    algorithm: str = "ring",
+                    alpha: float = PAPER_ALPHA, beta: float = PAPER_BETA,
+                    gamma: float = PAPER_GAMMA,
+                    compute_mode: str = "analytic", seed: int = 0,
+                    policy=None, recorder=None,
+                    ) -> tuple[ClusterSim, FaultyRunReport]:
+    """A long-running service under a fault schedule: the tentpole demo.
+
+    A seeded :class:`~repro.sim.faults.FaultPlan` (crashes, preemptions
+    with notice, link degradation windows, slow-host onsets, checkpoint
+    write failures) is armed on the engine, and a supervisor hook at
+    every iteration boundary drives a
+    :class:`repro.train.resilience.ResilienceController` through the
+    injector's views.  Two policies share the identical physical world:
+
+    * ``resilient=True`` — the controller: crashed workers are evicted
+      (surviving data-parallel replicas keep the model, so no restore is
+      needed), the topology rescales and the plan is recomputed
+      incrementally; preemption notices trigger a proactive drain
+      (checkpoint + evict before the deadline — no lost work); flagged
+      slow hosts are evicted via the straggler monitor; link windows
+      trigger an effective-model refit + replan; replacements are
+      re-admitted after a provisioning delay.
+    * ``resilient=False`` — the naive baseline: every fail-stop costs a
+      full detection + re-provision + checkpoint-restore outage that
+      keeps N fixed and replays every step since the last checkpoint;
+      notices are ignored; slow hosts drag the synchronous max forever.
+
+    The report's availability numbers (goodput, MTTR p95, replayed
+    fraction) are the paper-style comparison the pinned tests assert:
+    controller goodput strictly above baseline, bounded recovery.
+    """
+    from repro.sim import faults
+    from repro.train import resilience  # lazy: keeps sim importable light
+
+    topo = FlatTopology(algorithm, n_workers, alpha, beta, gamma)
+    mplan, replan, inc = _strategy_planner(strategy, specs,
+                                           topo.linear_model())
+    workers = make_workers(n_workers)
+    if plan is None:
+        t_iter_est = t_f + sum(s.t_b for s in specs)
+        plan = faults.FaultPlan.random(
+            seed, iters * t_iter_est, [w.name for w in workers],
+            links=["net"])
+    pol = policy or resilience.ResiliencePolicy(seed=seed)
+    ctrl = resilience.ResilienceController(
+        pol, n_workers=n_workers, recorder=recorder, source="sim",
+        job="train")
+
+    job = JobSpec(name="train", specs=list(specs), plan=mplan, t_f=t_f,
+                  workers=workers, topology=topo, iters=iters,
+                  compute_mode=compute_mode)
+    sim = ClusterSim([job], seed=seed, recorder=recorder)
+    inj = faults.FaultInjector(sim, plan, "train")
+    inj.arm()
+    report = FaultyRunReport(controller=ctrl, injector=inj,
+                             resilient=resilient)
+    # hook-closure state: replacement workers awaiting provisioning and
+    # the currently-degraded link windows (to replan back when they end)
+    pending_readmit: list[tuple[float, str]] = []
+    active_deg: list[float] = []
+    replacements = [0]
+
+    def rebuild(run, keep) -> None:
+        run.workers = keep
+        run.topology = run.topology.rescale(len(keep))
+        sim.ensure_links(run.topology)
+        run.plan = replan(run.topology.linear_model())
+        report.replans += 1
+
+    def spawn_name() -> str:
+        replacements[0] += 1
+        return f"r{replacements[0]}"
+
+    def take_checkpoint(now: float) -> None:
+        if inj.take_ckpt_failure():
+            ctrl.checkpoint_failed(now)
+        else:
+            ctrl.checkpoint_saved(ctrl.committed_step, now)
+
+    def hook(sim: ClusterSim, run, it: int) -> None:
+        now = sim.engine.now
+        res = run.result.iterations[-1]
+        alive = {w.name for w in run.workers}
+        crashes = [(w, t, cause) for w, t, cause in inj.take_crashes()
+                   if w in alive]
+        slow_onsets = inj.take_slow_hosts()
+        degradations = inj.take_degradations()
+
+        # 1. the just-finished iteration: lost if a member crashed
+        #    mid-flight (the synchronous sync never completed validly)
+        flagged: list[str] = []
+        if crashes:
+            ctrl.discard_step(now)
+        elif resilient:
+            flagged = ctrl.step_ok(now, res.t_iter, res.worker_compute)
+        else:
+            ctrl.step_ok(now, res.t_iter)
+
+        # 2. fail-stop repair
+        for w, t_crash, cause in crashes:
+            ctrl.fault_detected(cause, now + pol.detect_s, t_crash,
+                                worker=w)
+        if crashes:
+            names = [w for w, _, _ in crashes]
+            if resilient and len(run.workers) - len(names) >= \
+                    pol.min_workers:
+                # evict + degrade to N-k: DP survivors keep the model
+                rebuild(run, [w for w in run.workers
+                              if w.name not in names])
+                ctrl.evict(names, now, kind="evict_crash")
+                run.pause_until(now + pol.detect_s + pol.evict_s)
+                for w, _, cause in crashes:
+                    pending_readmit.append(
+                        (now + pol.provision_s, spawn_name()))
+                    report.evictions.append((it, w, cause))
+            else:
+                # naive: keep N — wait out re-provision, restore from
+                # the last checkpoint, replay everything since
+                run.workers = [
+                    WorkerProfile(spawn_name(),
+                                  jitter_sigma=w.jitter_sigma)
+                    if w.name in names else w for w in run.workers]
+                ctrl.restored(ctrl.last_ckpt_step, now)
+                run.pause_until(now + pol.detect_s + pol.provision_s
+                                + pol.restore_s)
+
+        # 3. preemption notices: drain proactively (controller only)
+        if resilient:
+            for note in inj.take_notices():
+                w = note["worker"]
+                if w not in {x.name for x in run.workers}:
+                    continue
+                ctrl.fault_detected("preempt", now, note["at"], worker=w)
+                if len(run.workers) - 1 < pol.min_workers:
+                    continue
+                inj.mark_drained(w)
+                take_checkpoint(now)
+                rebuild(run, [x for x in run.workers if x.name != w])
+                ctrl.evict([w], now, kind="preempt_drain")
+                run.pause_until(now + pol.ckpt_s + pol.evict_s)
+                pending_readmit.append(
+                    (now + pol.provision_s, spawn_name()))
+                report.evictions.append((it, w, "preempt_drain"))
+
+        # 4. gray failures: slow hosts (monitor-driven) + link windows
+        if resilient and slow_onsets:
+            for w, t_on, factor in slow_onsets:
+                ctrl.fault_detected("slow_host", now, t_on, worker=w)
+        if resilient and flagged:
+            keep = [w for w in run.workers if w.name not in flagged]
+            if len(keep) >= pol.min_workers:
+                rebuild(run, keep)
+                ctrl.evict(flagged, now, kind="evict_straggler")
+                run.pause_until(now + pol.evict_s)
+                for w in flagged:
+                    pending_readmit.append(
+                        (now + pol.provision_s, spawn_name()))
+                    report.evictions.append((it, w, "straggler"))
+        if resilient and degradations:
+            for d in degradations:
+                ctrl.fault_detected("link_degrade", now, d["at"],
+                                    worker=d["link"])
+                active_deg.append(d["until"])
+            # refit an effective model from what the collectives
+            # actually experienced on the degraded fabric, replan
+            samples = [(b.nbytes, b.duration) for b in res.buckets]
+            if samples:
+                eff = planner.effective_model(
+                    samples, cost_model.as_linear(
+                        run.topology.linear_model()))
+                run.plan = replan(eff)
+                report.replans += 1
+                ctrl.replanned(now, reason="link_degrade")
+        if resilient and active_deg and now > max(active_deg):
+            # every window closed: plan back onto the healthy fabric
+            active_deg.clear()
+            run.plan = replan(run.topology.linear_model())
+            report.replans += 1
+            ctrl.replanned(now, reason="link_restored")
+
+        # 5. re-admit provisioned replacements (controller only)
+        if resilient:
+            ready = [x for x in pending_readmit if x[0] <= now]
+            if ready:
+                pending_readmit[:] = [x for x in pending_readmit
+                                      if x[0] > now]
+                names = [n for _, n in ready]
+                rebuild(run, list(run.workers) + [
+                    WorkerProfile(n) for n in names])
+                ctrl.readmit(names, now)
+                run.pause_until(now + pol.readmit_s)
+                for n in names:
+                    report.readmissions.append((it, n))
+
+        # 6. checkpoint cadence (write failures come from the injector)
+        if (it + 1) % ckpt_every == 0:
+            take_checkpoint(now)
+
+        if it == iters - 1:
+            report.availability = ctrl.report(now)
+
+    job.hooks = {i: hook for i in range(iters)}
+    return sim, report
 
 
 def hierarchical_pods(specs: Sequence[TensorSpec], t_f: float, *,
@@ -996,4 +1230,9 @@ CATALOG: dict[str, Callable[[], ClusterSim]] = {
     "straggler_evict_contended": lambda: straggler_eviction(
         *_syn(), 8, slow_factor=3.0, contention_aware=True,
         bursts=(Burst("net", 0.0, 60.0, flows=2),))[0],
+    # fault injection: same seeded fault schedule, with and without the
+    # resilience controller (repro.sim.faults + repro.train.resilience)
+    "faulty_long_run": lambda: faulty_long_run(*_syn())[0],
+    "faulty_long_run_naive": lambda: faulty_long_run(
+        *_syn(), resilient=False)[0],
 }

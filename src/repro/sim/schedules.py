@@ -291,7 +291,7 @@ class _SyncDriver:
 
     def _finish_iteration(self) -> None:
         if self.run.finish_iteration(self._make_result()):
-            self.start_iteration()
+            self.run.next_iteration(self.start_iteration)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -474,7 +474,7 @@ class _LocalSGDDriver(_SyncDriver):
         # only the sync step closes the round: its index is the round's
         # last, so its return value alone decides continuation
         if run.finish_iteration(sync_result):
-            self.start_iteration()
+            run.next_iteration(self.start_iteration)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -679,13 +679,26 @@ class _PipelinedDriver:
                 for wi, w in enumerate(run.workers)),
             staleness=0)
         if run.finish_iteration(result):
-            if len(run.workers) != len(bwd_end):
+            if run.resume_at > run.sim.engine.now:
+                # a fault hook paused the job: the pipelined overlap is
+                # broken anyway, so resynchronize the whole fleet at the
+                # resume point (starts and the all-gather frontier alike)
+                t = run.resume_at
+
+                def resume(t: float = t) -> None:
+                    self._start_iteration(
+                        np.full(len(run.workers), t, dtype=np.float64),
+                        ag_done=t)
+
+                run.sim.engine.at(t, resume)
+            elif len(run.workers) != len(bwd_end):
                 # membership changed by a hook: resynchronize the fleet
                 nxt = np.full(len(run.workers), max(bwd_max, rs_done),
                               dtype=np.float64)
+                self._start_iteration(nxt, ag_done=now)
             else:
                 nxt = np.maximum(bwd_end, rs_done)
-            self._start_iteration(nxt, ag_done=now)
+                self._start_iteration(nxt, ag_done=now)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -11,10 +11,17 @@ Leaves are saved from each host's *addressable* shards, which makes the
 scheme multi-host-correct: every host writes its own ``shard_<pid>.npz``
 and restore re-assembles with ``jax.make_array_from_single_device_arrays``
 (single-host here, but the code path is the production one).  Writes go to
-a temp dir first and are renamed into place, so a crash mid-write can never
-corrupt LATEST.  ``AsyncCheckpointer`` moves serialization off the training
-thread (fault tolerance requirement: checkpoint cadence must not stall the
-step loop).
+a temp dir first, every file is fsynced before the rename, and the rename
+is atomic — so a crash at ANY point mid-save can never corrupt LATEST or
+publish a torn step directory (property-tested at every kill point in
+tests/test_checkpoint.py).  ``latest_step`` additionally falls back to
+scanning ``step_*`` directories when LATEST is missing or points at a
+missing/corrupt tag, so a crash between the step-dir rename and the
+LATEST update still resumes from the newest complete step.
+``clean_stale_tmp`` sweeps half-written ``.tmp_*`` wreckage on startup and
+``gc_keep_last`` bounds disk growth; ``AsyncCheckpointer`` runs both and
+moves serialization off the training thread (fault tolerance requirement:
+checkpoint cadence must not stall the step loop).
 """
 
 from __future__ import annotations
@@ -54,8 +61,30 @@ def _from_savable(arr: np.ndarray, dtype_str: str) -> np.ndarray:
     return arr.view(jnp.dtype(dtype_str))
 
 
+def _fsync_dir(path: str) -> None:
+    """Durably record a directory's entries (the rename itself) — best
+    effort on filesystems/platforms without directory fsync."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover — e.g. Windows
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(ckpt_dir: str, step: int, state: Any, extra: dict | None = None):
-    """Synchronous sharded save with atomic LATEST update."""
+    """Synchronous sharded save with atomic LATEST update.
+
+    Durability order: shard and meta are written AND fsynced inside the
+    temp dir, the temp dir is renamed into place (then the parent
+    directory fsynced so the rename survives power loss), and only then
+    is LATEST atomically replaced — so LATEST can never point at a step
+    that is not fully on disk.
+    """
     tag = f"step_{step:08d}"
     tmp = os.path.join(ckpt_dir, f".tmp_{tag}")
     final = os.path.join(ckpt_dir, tag)
@@ -70,32 +99,117 @@ def save(ckpt_dir: str, step: int, state: Any, extra: dict | None = None):
         meta_leaves.append({"path": path, "shape": list(arr.shape),
                             "dtype": str(arr.dtype)})
     pid = jax.process_index()
-    np.savez(os.path.join(tmp, f"shard_{pid:05d}.npz"), **arrays)
+    with open(os.path.join(tmp, f"shard_{pid:05d}.npz"), "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
     meta = {"step": int(step), "leaves": meta_leaves,
             "extra": extra or {}, "num_shards": jax.process_count()}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
         json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(ckpt_dir)
     latest_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
     with open(latest_tmp, "w") as f:
         f.write(tag)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    _fsync_dir(ckpt_dir)
     return final
 
 
-def latest_step(ckpt_dir: str) -> int | None:
-    p = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(p):
-        return None
-    with open(p) as f:
-        tag = f.read().strip()
+def _step_of(ckpt_dir: str, tag: str) -> int | None:
+    """The step recorded in a tag directory's meta.json, or None if the
+    directory is missing, torn, or unparseable."""
     meta_path = os.path.join(ckpt_dir, tag, "meta.json")
-    if not os.path.exists(meta_path):
+    try:
+        with open(meta_path) as f:
+            return int(json.load(f)["step"])
+    except (OSError, ValueError, KeyError, TypeError):
         return None
-    with open(meta_path) as f:
-        return json.load(f)["step"]
+
+
+def scan_steps(ckpt_dir: str) -> list[int]:
+    """All complete checkpoint steps on disk (valid meta.json),
+    ascending — the ground truth LATEST is only a cache of."""
+    try:
+        tags = os.listdir(ckpt_dir)
+    except OSError:
+        return []
+    steps = [_step_of(ckpt_dir, t) for t in tags
+             if t.startswith("step_") and not t.endswith(".tmp")]
+    return sorted(s for s in steps if s is not None)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    """Newest complete checkpoint step.
+
+    Trusts LATEST when it points at a complete step directory; when
+    LATEST is missing, stale, or points at a missing/corrupt tag (e.g. a
+    crash landed between the step-dir rename and the LATEST update),
+    falls back to scanning ``step_*`` directories instead of reporting
+    no checkpoint while complete ones exist.
+    """
+    p = os.path.join(ckpt_dir, "LATEST")
+    if os.path.exists(p):
+        with open(p) as f:
+            tag = f.read().strip()
+        step = _step_of(ckpt_dir, tag)
+        if step is not None:
+            return step
+    steps = scan_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def clean_stale_tmp(ckpt_dir: str) -> list[str]:
+    """Remove half-written ``.tmp_*`` dirs and ``.LATEST.tmp`` left by a
+    crash mid-save.  Returns the paths removed (for logging)."""
+    removed = []
+    try:
+        entries = os.listdir(ckpt_dir)
+    except OSError:
+        return removed
+    for name in entries:
+        if not (name.startswith(".tmp_") or name == ".LATEST.tmp"):
+            continue
+        path = os.path.join(ckpt_dir, name)
+        if os.path.isdir(path):
+            shutil.rmtree(path, ignore_errors=True)
+        else:
+            try:
+                os.remove(path)
+            except OSError:  # pragma: no cover — racing cleaner
+                continue
+        removed.append(path)
+    return removed
+
+
+def gc_keep_last(ckpt_dir: str, keep: int) -> list[int]:
+    """Delete all but the newest ``keep`` complete checkpoints (the tag
+    LATEST names is always kept).  Returns the steps removed."""
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    steps = scan_steps(ckpt_dir)
+    pinned = set(steps[-keep:])
+    p = os.path.join(ckpt_dir, "LATEST")
+    if os.path.exists(p):
+        with open(p) as f:
+            latest = _step_of(ckpt_dir, f.read().strip())
+        if latest is not None:
+            pinned.add(latest)
+    removed = []
+    for s in steps:
+        if s in pinned:
+            continue
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+        removed.append(s)
+    return removed
 
 
 def restore(ckpt_dir: str, state_like: Any, step: int | None = None):
@@ -139,11 +253,20 @@ def restore(ckpt_dir: str, state_like: Any, step: int | None = None):
 
 
 class AsyncCheckpointer:
-    """Serializes saves on a daemon thread; at most one pending save."""
+    """Serializes saves on a daemon thread; at most one pending save.
 
-    def __init__(self, ckpt_dir: str):
+    On construction it sweeps stale ``.tmp_*`` wreckage from a previous
+    crash; pass ``keep_last`` to garbage-collect older step dirs after
+    every successful save (LATEST's tag is never collected).
+    """
+
+    def __init__(self, ckpt_dir: str, keep_last: int | None = None):
+        if keep_last is not None and keep_last < 1:
+            raise ValueError(f"keep_last must be >= 1, got {keep_last}")
         self.ckpt_dir = ckpt_dir
+        self.keep_last = keep_last
         os.makedirs(ckpt_dir, exist_ok=True)
+        clean_stale_tmp(ckpt_dir)
         self._pending: threading.Thread | None = None
         self._error: Exception | None = None
 
@@ -157,6 +280,8 @@ class AsyncCheckpointer:
         def run():
             try:
                 save(self.ckpt_dir, step, host_state, extra)
+                if self.keep_last is not None:
+                    gc_keep_last(self.ckpt_dir, self.keep_last)
             except Exception as e:  # pragma: no cover
                 self._error = e
 

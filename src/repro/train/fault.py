@@ -6,9 +6,11 @@ Mechanisms (scaled-down but production-shaped — see DESIGN.md §4 for the
 * **checkpoint/restart** — ``run_with_recovery`` wraps the step loop;
   any step exception triggers restore-from-LATEST and replay.  The data
   pipeline is a pure function of the step index, so replayed batches are
-  byte-identical.
+  byte-identical.  Restores are budgeted: a persistent failure re-raises
+  once ``max_restores`` is spent instead of looping on the same tag.
 * **step retry with backoff** — transient failures (preempted host,
-  flaky interconnect) retry the same step before escalating.
+  flaky interconnect) retry the same step after a seeded exponential
+  backoff with jitter before escalating to a restore.
 * **elastic re-plan** — on membership change the MG-WFBP plan depends on
   the cluster only through the all-reduce model's (a, b); ``replan_for``
   recomputes the plan for a new mesh and the caller rebuilds the step.
@@ -36,36 +38,34 @@ log = logging.getLogger("repro.fault")
 def run_with_recovery(step_fn: Callable, state, pipeline, ckpt: "checkpoint.AsyncCheckpointer",
                       start_step: int, num_steps: int,
                       ckpt_every: int = 50, max_retries: int = 3,
-                      state_template=None, on_metrics=None):
-    """Drive the training loop with retry + restore-on-failure."""
-    step = start_step
-    retries = 0
-    while step < num_steps:
-        batch = pipeline.batch_at(step)
-        try:
-            t0 = time.perf_counter()
-            state, metrics = step_fn(state, batch)
-            dt = time.perf_counter() - t0
-            if on_metrics:
-                on_metrics(step, metrics, dt)
-            retries = 0
-            step += 1
-            if step % ckpt_every == 0:
-                ckpt.save(step, state)
-        except Exception as e:  # noqa: BLE001 — any step failure
-            retries += 1
-            log.warning("step %d failed (%s); retry %d/%d", step, e,
-                        retries, max_retries)
-            if retries > max_retries:
-                latest = checkpoint.latest_step(ckpt.ckpt_dir)
-                if latest is None:
-                    raise
-                log.warning("restoring from checkpoint step %d", latest)
-                state, step, _ = checkpoint.restore(
-                    ckpt.ckpt_dir, state_template or state)
-                retries = 0
-    ckpt.save(step, state)
-    ckpt.wait()
+                      state_template=None, on_metrics=None, *,
+                      max_restores: int = 3, backoff_base: float = 0.05,
+                      backoff_factor: float = 2.0, backoff_max: float = 2.0,
+                      jitter: float = 0.25, seed: int = 0,
+                      sleep_fn: Callable[[float], None] = time.sleep):
+    """Drive the training loop with retry + restore-on-failure.
+
+    Each failed step retries after a seeded exponential backoff with
+    jitter; after ``max_retries`` consecutive failures the loop restores
+    from the latest checkpoint, and after ``max_restores`` restores a
+    persistent failure re-raises instead of looping on the same tag.
+
+    This is the compatibility wrapper over the full supervisor state
+    machine in :mod:`repro.train.resilience` (which adds straggler
+    eviction, graceful degradation and availability metrics on top);
+    both share one retry/restore policy.
+    """
+    from repro.train import resilience
+
+    policy = resilience.ResiliencePolicy(
+        max_retries=max_retries, max_restores=max_restores,
+        backoff_base=backoff_base, backoff_factor=backoff_factor,
+        backoff_max=backoff_max, jitter=jitter, seed=seed)
+    state, step, _ctrl = resilience.run_supervised(
+        step_fn, state, pipeline, ckpt, start_step, num_steps,
+        ckpt_every=ckpt_every, policy=policy,
+        state_template=state_template, on_metrics=on_metrics,
+        sleep_fn=sleep_fn)
     return state, step
 
 
@@ -97,10 +97,20 @@ class StragglerMonitor:
         self.ewma[host] = (1 - self.alpha) * prev + self.alpha * step_time
         self.counts[host] += 1
 
+    def forget(self, host: str) -> None:
+        """Drop an evicted host's statistics so its EWMA stops skewing
+        the fleet median (and a replacement reusing the name warms up
+        from scratch)."""
+        self.ewma.pop(host, None)
+        self.counts.pop(host, None)
+
     def stragglers(self) -> list[str]:
         ready = {h: t for h, t in self.ewma.items()
                  if self.counts[h] >= self.warmup}
         if len(ready) < 2:
             return []
-        med = sorted(ready.values())[len(ready) // 2]
+        ordered = sorted(ready.values())
+        mid = len(ordered) // 2
+        med = ordered[mid] if len(ordered) % 2 else \
+            0.5 * (ordered[mid - 1] + ordered[mid])
         return [h for h, t in ready.items() if t > self.threshold * med]

@@ -1,0 +1,461 @@
+"""Resilience supervisor: one state machine from step retry to N−k.
+
+``run_with_recovery`` (repro.train.fault) handles the two innermost
+rungs of the recovery ladder — retry a failed step, restore from a
+checkpoint.  Long runs on real fleets need the whole ladder, with every
+rung observable:
+
+    retry (exponential backoff + jitter)
+      → restore from checkpoint (bounded budget, then re-raise)
+        → evict stragglers / crashed workers (StragglerMonitor + the
+          launcher's membership-change machinery)
+          → degrade gracefully to N−k (model rescale via invert_model +
+            incremental replan)
+            → re-admit replacement workers
+
+:class:`ResilienceController` is that ladder as a clock-agnostic state
+machine: callers feed it step completions, step failures and detected
+faults (with an explicit timestamp — wall seconds in the real loop, sim
+seconds in ``repro.sim.scenarios.faulty_long_run``) and it returns the
+next action while keeping SLA-grade books: useful vs replayed steps,
+per-incident MTTR, recovery counts by kind.  Every transition lands in
+the PR-6 observability spine — ``EventRecord``s in the flight recorder
+and ``resilience_*`` metrics in the registry:
+
+* ``resilience_recoveries_total{kind}``  — incidents recovered, by fault
+  kind;
+* ``resilience_actions_total{kind}``     — recovery actions taken
+  (retry / restore / evict / degrade / readmit / drain / replan);
+* ``resilience_mttr_seconds``            — histogram of time from fault
+  occurrence to the first useful step after recovery;
+* ``resilience_wasted_steps_total``      — replayed or discarded steps;
+* ``resilience_goodput{job}``            — useful steps per wall second.
+
+:func:`run_supervised` drives a real training loop through the
+controller (subsuming ``run_with_recovery``, which is now a thin wrapper
+over it); the simulator twin lives in ``repro.sim.scenarios``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import random
+import time
+from typing import Callable, Iterable, Sequence
+
+from repro.obs.metrics import REGISTRY
+from repro.obs.recorder import EventRecord
+from repro.train import checkpoint
+from repro.train.fault import StragglerMonitor
+
+log = logging.getLogger("repro.resilience")
+
+# controller states
+RUNNING = "running"        # steps completing normally
+BACKOFF = "backoff"        # a step failed; waiting to retry
+RESTORING = "restoring"    # retries exhausted; replaying from checkpoint
+HALTED = "halted"          # budgets exhausted; the failure re-raised
+
+
+@dataclasses.dataclass(frozen=True)
+class ResiliencePolicy:
+    """Knobs of the recovery ladder.
+
+    The timing constants in the second block parameterize the *modeled*
+    costs the simulator charges for control actions (detection latency,
+    restore/drain downtime, replacement provisioning); the real loop
+    pays actual wall time instead and ignores them.
+    """
+
+    # step retry: delay = min(base * factor**(attempt-1), max), then
+    # ±jitter fraction of itself (seeded — reruns back off identically)
+    max_retries: int = 3
+    backoff_base: float = 0.05
+    backoff_factor: float = 2.0
+    backoff_max: float = 2.0
+    jitter: float = 0.25
+    # escalation: restores before a persistent failure re-raises
+    max_restores: int = 3
+    # membership: never degrade below min_workers
+    min_workers: int = 2
+    straggler_threshold: float = 1.5
+    straggler_warmup: int = 3
+    # modeled control-action costs (simulator scale: seconds of sim time)
+    detect_s: float = 0.02        # fail-stop detection latency
+    restore_s: float = 0.05       # checkpoint restore downtime
+    ckpt_s: float = 0.005         # checkpoint write stall
+    evict_s: float = 0.01         # rescale + replan + resume
+    provision_s: float = 0.3      # replacement worker provisioning
+    readmit_s: float = 0.02       # state sync for a re-admitted worker
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.max_retries < 0 or self.max_restores < 0:
+            raise ValueError(f"negative budget: {self}")
+        if self.backoff_base < 0 or self.backoff_factor < 1 \
+                or self.backoff_max < self.backoff_base:
+            raise ValueError(f"bad backoff ladder: {self}")
+        if not 0 <= self.jitter <= 1:
+            raise ValueError(f"jitter must be in [0, 1]: {self}")
+        if self.min_workers < 1:
+            raise ValueError(f"min_workers must be >= 1: {self}")
+
+    def backoff(self, attempt: int, salt: int = 0) -> float:
+        """Deterministic exponential backoff with jitter; attempt >= 1.
+
+        ``salt`` decorrelates successive incidents (the controller feeds
+        a monotone draw counter) while keeping the whole sequence a pure
+        function of the seed."""
+        d = min(self.backoff_base * self.backoff_factor ** (attempt - 1),
+                self.backoff_max)
+        u = random.Random(f"{self.seed}:{attempt}:{salt}").uniform(-1.0, 1.0)
+        return max(0.0, d * (1.0 + self.jitter * u))
+
+
+@dataclasses.dataclass
+class Incident:
+    """One fault from occurrence to recovery (recovered is None while
+    open; MTTR = recovered - occurred once closed)."""
+
+    kind: str
+    occurred: float
+    detected: float
+    worker: str = ""
+    opened_at_step: int = 0
+    recovered: float | None = None
+    closed_at_step: int | None = None
+
+    @property
+    def mttr(self) -> float | None:
+        return None if self.recovered is None \
+            else self.recovered - self.occurred
+
+    @property
+    def steps_to_recover(self) -> int | None:
+        """Useful-step distance from detection to recovery — what the
+        bounded-recovery acceptance tests pin."""
+        return None if self.closed_at_step is None \
+            else self.closed_at_step - self.opened_at_step
+
+
+def _quantile(values: Sequence[float], q: float) -> float:
+    if not values:
+        return 0.0
+    ordered = sorted(values)
+    k = min(len(ordered) - 1, max(0, round(q * (len(ordered) - 1))))
+    return ordered[k]
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityReport:
+    """The SLA view of one run."""
+
+    wall: float
+    useful_steps: int
+    wasted_steps: int
+    goodput: float                       # useful steps / wall second
+    mttr: tuple[float, ...]              # per recovered incident
+    mttr_p95: float
+    recoveries: dict[str, int]           # incident kind -> recovered count
+    actions: dict[str, int]              # action kind -> count
+    replayed_fraction: float             # wasted / (useful + wasted)
+    unrecovered: int                     # incidents still open at the end
+    state: str
+
+    def row_args(self) -> dict:
+        """Flat JSON-safe summary (the final ``availability`` event and
+        the bench rows both embed this)."""
+        return {"wall": self.wall, "useful_steps": self.useful_steps,
+                "wasted_steps": self.wasted_steps, "goodput": self.goodput,
+                "mttr_p95": self.mttr_p95,
+                "replayed_fraction": self.replayed_fraction,
+                "unrecovered": self.unrecovered, "state": self.state,
+                "recoveries": dict(self.recoveries),
+                "actions": dict(self.actions)}
+
+
+class ResilienceController:
+    """The recovery ladder as an explicit state machine.
+
+    Clock-agnostic: every entry point takes ``t_now`` in the caller's
+    clock, so one controller serves the real training loop (wall
+    seconds) and the cluster simulator (sim seconds).  The controller
+    only *decides and accounts*; callers perform the actions (sleep,
+    restore, membership change) with whatever machinery their world has.
+    """
+
+    def __init__(self, policy: ResiliencePolicy | None = None, *,
+                 n_workers: int = 1, recorder=None, source: str = "train",
+                 job: str = "train", start_step: int = 0):
+        self.policy = policy or ResiliencePolicy()
+        self.recorder = recorder
+        self.source = source
+        self.job = job
+        self.state = RUNNING
+        self.retries = 0
+        self.restores_left = self.policy.max_restores
+        self.n_nominal = n_workers
+        self.n_active = n_workers
+        # logical training progress: committed_step is the next step to
+        # run; high_water marks the furthest progress ever reached, so a
+        # post-restore step below it is a replay (wasted work)
+        self.committed_step = start_step
+        self.high_water = start_step
+        self.last_ckpt_step = start_step
+        self.useful_steps = 0
+        self.wasted_steps = 0
+        self.incidents: list[Incident] = []
+        self.monitor = StragglerMonitor(
+            threshold=self.policy.straggler_threshold,
+            warmup=self.policy.straggler_warmup)
+        self._actions: dict[str, int] = {}
+        self._draws = 0
+
+    # -- observability ----------------------------------------------------
+
+    def _emit(self, kind: str, t: float, **args) -> None:
+        if self.recorder is not None:
+            self.recorder.record(EventRecord(
+                kind=kind, time=float(t), source=self.source,
+                job=self.job, args=args))
+
+    def _action(self, kind: str, t: float, **args) -> None:
+        self._actions[kind] = self._actions.get(kind, 0) + 1
+        REGISTRY.counter(
+            "resilience_actions_total",
+            "recovery actions taken, by kind").inc(kind=kind)
+        self._emit(kind, t, **args)
+
+    @property
+    def degraded(self) -> bool:
+        return self.n_active < self.n_nominal
+
+    @property
+    def open_incidents(self) -> list[Incident]:
+        return [i for i in self.incidents if i.recovered is None]
+
+    # -- the ladder -------------------------------------------------------
+
+    def step_ok(self, t_now: float, dt: float,
+                worker_times: Iterable[tuple[str, float]] = ()
+                ) -> list[str]:
+        """One step completed.  Closes open incidents (first useful step
+        after a fault = recovery), classifies the step useful vs replay,
+        and returns hosts the straggler monitor now flags (the caller
+        owns the eviction)."""
+        replay = self.committed_step < self.high_water
+        if replay:
+            self.wasted_steps += 1
+            REGISTRY.counter(
+                "resilience_wasted_steps_total",
+                "replayed or discarded training steps").inc(kind="replay")
+        else:
+            self.useful_steps += 1
+        self.committed_step += 1
+        self.high_water = max(self.high_water, self.committed_step)
+        self.retries = 0
+        if not replay:
+            # recovery means useful progress, not replaying old ground
+            for inc in self.open_incidents:
+                inc.recovered = t_now
+                inc.closed_at_step = self.committed_step
+                REGISTRY.counter(
+                    "resilience_recoveries_total",
+                    "incidents recovered, by fault kind").inc(
+                        kind=inc.kind)
+                REGISTRY.histogram(
+                    "resilience_mttr_seconds",
+                    "fault occurrence to first useful step").observe(
+                        inc.mttr)
+                self._emit("recovery", t_now, fault=inc.kind,
+                           worker=inc.worker, mttr=inc.mttr,
+                           steps=inc.steps_to_recover)
+            self.state = RUNNING
+        for host, seconds in worker_times:
+            self.monitor.record(host, seconds)
+        return self.monitor.stragglers()
+
+    def step_failed(self, t_now: float,
+                    error: object = None) -> tuple[str, float]:
+        """One step failed.  Returns (action, delay): ``("retry", d)`` —
+        back off d then rerun; ``("restore", 0)`` — replay from the last
+        checkpoint (budget charged here); ``("halt", 0)`` — budgets
+        exhausted, re-raise."""
+        if not self.open_incidents:
+            self.incidents.append(Incident(
+                kind="step_failure", occurred=t_now, detected=t_now,
+                opened_at_step=self.committed_step))
+            self._emit("fault_detected", t_now, fault="step_failure",
+                       error=repr(error) if error is not None else "")
+        self.retries += 1
+        if self.retries <= self.policy.max_retries:
+            self.state = BACKOFF
+            self._draws += 1
+            delay = self.policy.backoff(self.retries, self._draws)
+            self._action("backoff", t_now, attempt=self.retries,
+                         delay=delay)
+            return ("retry", delay)
+        if self.restores_left > 0:
+            self.restores_left -= 1
+            self.retries = 0
+            self.state = RESTORING
+            self._action("restore", t_now,
+                         restores_left=self.restores_left,
+                         from_step=self.last_ckpt_step)
+            return ("restore", 0.0)
+        self.state = HALTED
+        self._action("halt", t_now)
+        return ("halt", 0.0)
+
+    def restored(self, step: int, t_now: float) -> None:
+        """The caller finished a checkpoint restore to ``step``; steps
+        between it and the previous high-water mark will replay."""
+        self.committed_step = step
+        self.last_ckpt_step = step
+        self._emit("restored", t_now, step=step)
+
+    def discard_step(self, t_now: float) -> None:
+        """An in-flight step was voided (e.g. the sync barrier died with
+        a crashed worker): pure waste, no progress."""
+        self.wasted_steps += 1
+        REGISTRY.counter(
+            "resilience_wasted_steps_total",
+            "replayed or discarded training steps").inc(kind="discard")
+        self._emit("step_discarded", t_now, step=self.committed_step)
+
+    def fault_detected(self, kind: str, t_now: float, occurred: float,
+                       worker: str = "") -> Incident:
+        """An infrastructure fault surfaced (crash, preemption, slow
+        host, link degradation).  Opens the incident clock."""
+        inc = Incident(kind=kind, occurred=occurred, detected=t_now,
+                       worker=worker, opened_at_step=self.committed_step)
+        self.incidents.append(inc)
+        self._emit("fault_detected", t_now, fault=kind, worker=worker,
+                   occurred=occurred)
+        return inc
+
+    def evict(self, workers: Sequence[str], t_now: float,
+              kind: str = "evict") -> None:
+        """Workers left the fleet (straggler eviction or fail-stop
+        repair): degrade to N−k and stop counting their step times."""
+        self.n_active -= len(workers)
+        for w in workers:
+            self.monitor.forget(w)
+        self._action(kind, t_now, workers=list(workers),
+                     n_active=self.n_active)
+
+    def readmit(self, workers: Sequence[str], t_now: float) -> None:
+        """Replacement workers joined; capacity recovers toward N."""
+        self.n_active += len(workers)
+        self._action("readmit", t_now, workers=list(workers),
+                     n_active=self.n_active)
+
+    def checkpoint_saved(self, step: int, t_now: float) -> None:
+        self.last_ckpt_step = step
+        self._emit("checkpoint", t_now, step=step)
+
+    def checkpoint_failed(self, t_now: float, error: object = None) -> None:
+        """A checkpoint write failed — tolerated (the run continues on
+        the previous tag; the next cadence retries), but counted: a
+        later restore replays further."""
+        REGISTRY.counter(
+            "resilience_ckpt_failures_total",
+            "checkpoint writes that failed").inc()
+        self._action("ckpt_fail", t_now,
+                     error=repr(error) if error is not None else "")
+
+    def replanned(self, t_now: float, reason: str = "") -> None:
+        """The caller refit + replanned (link degradation response or a
+        membership change) — counted as a recovery action."""
+        self._action("replan", t_now, reason=reason)
+
+    # -- reporting --------------------------------------------------------
+
+    def report(self, wall: float) -> AvailabilityReport:
+        """Close the books: goodput gauge, recovery tallies, MTTR
+        distribution, and the final ``availability`` event."""
+        mttr = tuple(i.mttr for i in self.incidents
+                     if i.recovered is not None)
+        recoveries: dict[str, int] = {}
+        for i in self.incidents:
+            if i.recovered is not None:
+                recoveries[i.kind] = recoveries.get(i.kind, 0) + 1
+        goodput = self.useful_steps / wall if wall > 0 else 0.0
+        total = self.useful_steps + self.wasted_steps
+        rep = AvailabilityReport(
+            wall=wall, useful_steps=self.useful_steps,
+            wasted_steps=self.wasted_steps, goodput=goodput,
+            mttr=mttr, mttr_p95=_quantile(mttr, 0.95),
+            recoveries=recoveries, actions=dict(self._actions),
+            replayed_fraction=self.wasted_steps / total if total else 0.0,
+            unrecovered=len(self.open_incidents), state=self.state)
+        REGISTRY.gauge(
+            "resilience_goodput",
+            "useful steps per wall second").set(goodput, job=self.job)
+        self._emit("availability", wall, **rep.row_args())
+        return rep
+
+
+def run_supervised(step_fn: Callable, state, pipeline,
+                   ckpt: "checkpoint.AsyncCheckpointer", start_step: int,
+                   num_steps: int, *, ckpt_every: int = 50,
+                   policy: ResiliencePolicy | None = None,
+                   state_template=None, on_metrics=None,
+                   sleep_fn: Callable[[float], None] = time.sleep,
+                   clock: Callable[[], float] = time.monotonic,
+                   recorder=None,
+                   controller: ResilienceController | None = None):
+    """Drive a real training loop through the resilience ladder.
+
+    The supervisor successor to ``fault.run_with_recovery`` (which now
+    delegates here): failed steps retry after seeded exponential backoff
+    with jitter, escalate to checkpoint restore under a bounded budget,
+    and re-raise when the budget is spent.  Checkpoint-write failures
+    are tolerated (counted, retried next cadence) rather than fatal.
+    Returns ``(state, step, controller)`` accounting included — callers
+    that only want the ``run_with_recovery`` contract take the first
+    two.
+    """
+    ctrl = controller or ResilienceController(
+        policy, recorder=recorder, source="train", job="train",
+        start_step=start_step)
+    t0 = clock()
+    step = start_step
+    while step < num_steps:
+        batch = pipeline.batch_at(step)
+        try:
+            s0 = clock()
+            state, metrics = step_fn(state, batch)
+            dt = clock() - s0
+            if on_metrics:
+                on_metrics(step, metrics, dt)
+            ctrl.step_ok(clock() - t0, dt)
+            step += 1
+            if step % ckpt_every == 0:
+                try:
+                    ckpt.save(step, state)
+                    ctrl.checkpoint_saved(step, clock() - t0)
+                except Exception as e:  # noqa: BLE001 — tolerated
+                    log.warning("checkpoint at step %d failed: %s",
+                                step, e)
+                    ctrl.checkpoint_failed(clock() - t0, e)
+        except Exception as e:  # noqa: BLE001 — any step failure
+            action, delay = ctrl.step_failed(clock() - t0, e)
+            log.warning("step %d failed (%s) -> %s", step, e, action)
+            if action == "retry":
+                sleep_fn(delay)
+                continue
+            if action == "restore":
+                latest = checkpoint.latest_step(ckpt.ckpt_dir)
+                if latest is None:
+                    raise
+                state, step, _ = checkpoint.restore(
+                    ckpt.ckpt_dir, state_template or state)
+                ctrl.restored(step, clock() - t0)
+                continue
+            raise
+    ckpt.save(step, state)
+    ctrl.checkpoint_saved(step, clock() - t0)
+    ckpt.wait()
+    return state, step, ctrl

@@ -71,3 +71,134 @@ def test_extra_metadata(tmp_path):
     checkpoint.save(d, 3, _state(), extra={"data_position": 123})
     _, _, extra = checkpoint.restore(d, _state())
     assert extra == {"data_position": 123}
+
+
+# ---------------------------------------------------------------------------
+# Crash safety (the resilience PR's hardening)
+# ---------------------------------------------------------------------------
+
+class _Kill(Exception):
+    """Simulated crash mid-save (not OSError: must not be swallowed)."""
+
+
+def test_crash_during_save_at_every_kill_point(tmp_path, monkeypatch):
+    """Kill the save at EVERY fsync/rename boundary: whatever survives
+    on disk must restore to a complete checkpoint (the prior step, or
+    the new one if it was already published), and the wreckage must be
+    sweepable without touching complete steps."""
+    real_replace, real_fsync = os.replace, os.fsync
+    ops = {"n": 0, "kill_at": None}
+
+    def _counted(fn):
+        def wrapper(*a, **k):
+            ops["n"] += 1
+            if ops["kill_at"] is not None and ops["n"] >= ops["kill_at"]:
+                raise _Kill(f"op {ops['n']}")
+            return fn(*a, **k)
+        return wrapper
+
+    monkeypatch.setattr(os, "replace", _counted(real_replace))
+    monkeypatch.setattr(os, "fsync", _counted(real_fsync))
+
+    def save_counted(d, step, v, kill_at=None):
+        ops["n"], ops["kill_at"] = 0, kill_at
+        try:
+            checkpoint.save(d, step, _state(v))
+        finally:
+            ops["kill_at"] = None
+
+    probe = str(tmp_path / "probe")
+    os.makedirs(probe)
+    save_counted(probe, 1, 1.0)
+    total = ops["n"]
+    assert total >= 5  # shard, meta, publish rename, LATEST, dir syncs
+
+    for k in range(1, total + 1):
+        d = str(tmp_path / f"kp{k:02d}")
+        os.makedirs(d)
+        save_counted(d, 1, 1.0)  # a known-good prior checkpoint
+        with pytest.raises(_Kill):
+            save_counted(d, 2, 2.0, kill_at=k)
+        step = checkpoint.latest_step(d)
+        assert step in (1, 2), f"kill point {k} lost all checkpoints"
+        restored, got, _ = checkpoint.restore(d, _state(0.0))
+        assert got == step
+        np.testing.assert_allclose(np.asarray(restored.params["w"]),
+                                   float(step))
+        checkpoint.clean_stale_tmp(d)
+        left = os.listdir(d)
+        assert not any(n.startswith(".tmp_") or n == ".LATEST.tmp"
+                       for n in left), f"kill point {k} left wreckage"
+        assert checkpoint.latest_step(d) == step  # sweep kept the data
+
+
+def test_latest_step_falls_back_to_scan(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 4, _state(4.0))
+    checkpoint.save(d, 9, _state(9.0))
+    # LATEST pointing at a tag that never landed (crash between the
+    # step-dir rename and the LATEST update)
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write("step_00000012")
+    assert checkpoint.latest_step(d) == 9
+    # LATEST missing entirely
+    os.remove(os.path.join(d, "LATEST"))
+    assert checkpoint.latest_step(d) == 9
+    restored, step, _ = checkpoint.restore(d, _state(0.0))
+    assert step == 9
+    np.testing.assert_allclose(np.asarray(restored.params["w"]), 9.0)
+
+
+def test_scan_steps_ignores_torn_directories(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 2, _state())
+    os.makedirs(os.path.join(d, "step_00000005"))  # no meta.json: torn
+    assert checkpoint.scan_steps(d) == [2]
+    assert checkpoint.latest_step(d) == 2
+
+
+def test_clean_stale_tmp(tmp_path):
+    d = str(tmp_path)
+    checkpoint.save(d, 1, _state())
+    os.makedirs(os.path.join(d, ".tmp_step_00000002"))
+    with open(os.path.join(d, ".LATEST.tmp"), "w") as f:
+        f.write("step_00000002")
+    removed = checkpoint.clean_stale_tmp(d)
+    assert len(removed) == 2
+    assert sorted(os.listdir(d)) == ["LATEST", "step_00000001"]
+
+
+def test_gc_keep_last(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        checkpoint.save(d, s, _state(float(s)))
+    with pytest.raises(ValueError):
+        checkpoint.gc_keep_last(d, 0)
+    assert checkpoint.gc_keep_last(d, 2) == [1, 2, 3]
+    assert checkpoint.scan_steps(d) == [4, 5]
+    assert checkpoint.latest_step(d) == 5
+
+
+def test_gc_never_collects_latest_tag(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        checkpoint.save(d, s, _state(float(s)))
+    # LATEST pinned to an older tag (e.g. an operator rollback)
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write("step_00000001")
+    removed = checkpoint.gc_keep_last(d, 1)
+    assert removed == [2]
+    assert checkpoint.scan_steps(d) == [1, 3]
+
+
+def test_async_checkpointer_keep_last_and_sweep(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, ".tmp_step_00000099"))  # prior crash
+    ck = checkpoint.AsyncCheckpointer(d, keep_last=2)
+    assert not os.path.exists(os.path.join(d, ".tmp_step_00000099"))
+    for s in (1, 2, 3, 4):
+        ck.save(s, _state(float(s)))
+    ck.wait()
+    assert checkpoint.scan_steps(d) == [3, 4]
+    with pytest.raises(ValueError):
+        checkpoint.AsyncCheckpointer(d, keep_last=0)

@@ -80,3 +80,68 @@ def test_straggler_monitor_needs_warmup():
     mon.record("a", 1.0)
     mon.record("b", 99.0)
     assert mon.stragglers() == []
+
+
+def test_retry_backoff_sleeps_before_each_retry(tmp_path):
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path))
+    fails = {"left": 3}
+    sleeps = []
+
+    def step_fn(state, batch):
+        if fails["left"] > 0:
+            fails["left"] -= 1
+            raise RuntimeError("transient")
+        return (TrainState(state.step + 1, state.params, []), {})
+
+    _, final = fault.run_with_recovery(
+        step_fn, _mk_state(0.0), _FakePipe(), ck, 0, 3, max_retries=3,
+        backoff_base=0.01, backoff_factor=2.0, backoff_max=1.0,
+        jitter=0.25, sleep_fn=sleeps.append)
+    assert final == 3
+    assert len(sleeps) == 3  # one backoff per failed attempt
+    # exponential ladder, jitter bounded by +/-25%
+    for i, d in enumerate(sleeps):
+        base = 0.01 * 2.0 ** i
+        assert base * 0.75 <= d <= base * 1.25
+
+
+def test_restore_budget_exhausted_reraises(tmp_path):
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path))
+    checkpoint.save(str(tmp_path), 0, _mk_state(0.0))
+
+    def step_fn(state, batch):
+        raise RuntimeError("persistent")
+
+    with pytest.raises(RuntimeError, match="persistent"):
+        fault.run_with_recovery(
+            step_fn, _mk_state(0.0), _FakePipe(), ck, 0, 4,
+            max_retries=1, max_restores=2, backoff_base=0.0,
+            backoff_max=0.0, jitter=0.0, sleep_fn=lambda d: None)
+
+
+def test_straggler_monitor_forget():
+    mon = fault.StragglerMonitor(warmup=1, threshold=1.5)
+    for h, t in (("a", 1.0), ("b", 1.0), ("c", 1.0), ("d", 5.0)):
+        mon.record(h, t)
+    assert mon.stragglers() == ["d"]
+    mon.forget("d")
+    assert mon.stragglers() == []
+    assert "d" not in mon.ewma and "d" not in mon.counts
+    # a replacement reusing the name warms up from scratch
+    mon2 = fault.StragglerMonitor(warmup=2, threshold=1.5)
+    for h in ("a", "b", "d"):
+        mon2.record(h, 1.0)
+        mon2.record(h, 1.0)
+    mon2.forget("d")
+    mon2.record("d", 9.0)
+    assert mon2.stragglers() == []  # one sample < warmup
+
+
+def test_straggler_monitor_even_median():
+    # 4 ready hosts: sorted EWMAs [1, 1, 2, 2.8]; the proper even-length
+    # median is (1+2)/2 = 1.5, so 2.8 > 1.5*1.5 flags while 2.0 does not
+    # (the old upper-middle "median" of 2.0 would have flagged nothing)
+    mon = fault.StragglerMonitor(warmup=1, threshold=1.5)
+    for h, t in (("a", 1.0), ("b", 1.0), ("c", 2.0), ("d", 2.8)):
+        mon.record(h, t)
+    assert mon.stragglers() == ["d"]

@@ -1,0 +1,187 @@
+"""Fault injection (repro.sim.faults) + the faulty_long_run scenario."""
+
+import pytest
+
+from repro.obs.recorder import FlightRecorder
+from repro.sim import scenarios, trace
+from repro.sim.faults import (CheckpointFailure, FaultPlan, LinkDegradation,
+                              Preemption, SlowHostOnset, WorkerCrash)
+
+
+def _specs():
+    return trace.synthetic_specs(16, seed=7)
+
+
+def _t_iter(specs, t_f):
+    return t_f + sum(s.t_b for s in specs)
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan
+# ---------------------------------------------------------------------------
+
+def test_plan_is_time_sorted_and_queryable():
+    plan = FaultPlan(events=(WorkerCrash(5.0, worker="w1"),
+                             LinkDegradation(1.0),
+                             CheckpointFailure(3.0)))
+    assert [e.time for e in plan.events] == [1.0, 3.0, 5.0]
+    assert len(plan) == 3
+    assert plan.of_kind("crash") == (WorkerCrash(5.0, worker="w1"),)
+
+
+def test_random_plan_is_pure_function_of_args():
+    kw = dict(horizon=100.0, workers=[f"w{i}" for i in range(8)],
+              links=["net"], n_crashes=2, n_preemptions=2)
+    a = FaultPlan.random(3, **kw)
+    b = FaultPlan.random(3, **kw)
+    assert a == b
+    assert a != FaultPlan.random(4, **kw)
+    assert all(0 < e.time < 100.0 for e in a.events)
+    # crash/preempt targets are distinct while the pool lasts
+    targeted = [e.worker for e in a.events if hasattr(e, "worker")]
+    assert len(set(targeted)) == len(targeted)
+
+
+@pytest.mark.parametrize("bad", [
+    lambda: WorkerCrash(-1.0, worker="w0"),
+    lambda: Preemption(1.0, worker="w0", notice_s=-0.1),
+    lambda: LinkDegradation(1.0, factor=0.0),
+    lambda: LinkDegradation(1.0, factor=1.5),
+    lambda: LinkDegradation(1.0, duration=0.0),
+    lambda: SlowHostOnset(1.0, worker="w0", factor=1.0),
+    lambda: CheckpointFailure(1.0, count=0),
+    lambda: FaultPlan.random(0, horizon=0.0, workers=["w0"]),
+])
+def test_fault_validation(bad):
+    with pytest.raises(ValueError):
+        bad()
+
+
+# ---------------------------------------------------------------------------
+# Injector physical effects
+# ---------------------------------------------------------------------------
+
+def test_link_degradation_slows_then_restores():
+    specs, t_f = _specs()
+    t_it = _t_iter(specs, t_f)
+    # a 10x bandwidth cut covering iterations ~2-4 of a 8-iteration run
+    plan = FaultPlan(events=(LinkDegradation(
+        2.0 * t_it, link="net", factor=0.1, duration=2.0 * t_it),))
+    sim, _ = scenarios.faulty_long_run(specs, t_f, n_workers=4, iters=8,
+                                       plan=plan, resilient=False)
+    its = sim.run().job("train").iterations
+    clean = its[0].t_iter
+    assert max(it.t_iter for it in its[1:5]) > clean * 1.2
+    assert its[-1].t_iter == pytest.approx(clean, rel=1e-6)  # restored
+
+
+def test_slow_host_onset_applies_physical_slowdown():
+    specs, t_f = _specs()
+    t_it = _t_iter(specs, t_f)
+    plan = FaultPlan(events=(SlowHostOnset(
+        2.0 * t_it, worker="w1", factor=3.0),))
+    sim, _ = scenarios.faulty_long_run(specs, t_f, n_workers=4, iters=6,
+                                       plan=plan, resilient=False)
+    its = sim.run().job("train").iterations
+    run = sim.job_run("train")
+    w1 = [w for w in run.workers if w.name == "w1"]
+    assert w1 and w1[0].slowdown == pytest.approx(3.0)
+    # the synchronous fleet drags at the slow host's pace
+    assert its[-1].t_iter > its[0].t_iter * 1.5
+
+
+def test_preemption_drained_by_controller_ignored_by_baseline():
+    specs, t_f = _specs()
+    t_it = _t_iter(specs, t_f)
+    plan = FaultPlan(events=(Preemption(
+        1.5 * t_it, worker="w2", notice_s=3.0 * t_it),))
+
+    sim, rep = scenarios.faulty_long_run(specs, t_f, n_workers=4, iters=8,
+                                         plan=plan)
+    sim.run()
+    assert [(w, c) for _, w, c in rep.evictions] == [("w2", "preempt_drain")]
+    assert rep.availability.recoveries == {"preempt": 1}
+    assert rep.availability.unrecovered == 0
+
+    sim_n, rep_n = scenarios.faulty_long_run(specs, t_f, n_workers=4,
+                                             iters=8, plan=plan,
+                                             resilient=False)
+    sim_n.run()
+    # undrained notice became a crash at the deadline: work was lost
+    assert rep_n.evictions == []
+    assert rep_n.availability.wasted_steps > 0
+
+
+def test_crash_evicts_rescales_and_readmits():
+    specs, t_f = _specs()
+    t_it = _t_iter(specs, t_f)
+    plan = FaultPlan(events=(WorkerCrash(2.5 * t_it, worker="w0"),))
+    sim, rep = scenarios.faulty_long_run(specs, t_f, n_workers=4, iters=10,
+                                         plan=plan)
+    sim.run()
+    assert [(w, c) for _, w, c in rep.evictions] == [("w0", "crash")]
+    assert [n for _, n in rep.readmissions] == ["r1"]
+    # back at nominal capacity, on a replacement worker
+    run = sim.job_run("train")
+    assert len(run.workers) == 4
+    assert {w.name for w in run.workers} == {"w1", "w2", "w3", "r1"}
+    assert rep.controller.n_active == 4
+    assert rep.replans >= 2  # eviction rescale + readmission rescale
+
+
+# ---------------------------------------------------------------------------
+# The pinned end-to-end comparison (mirrors benchmarks --faults)
+# ---------------------------------------------------------------------------
+
+def _pinned_plan(t_it):
+    return FaultPlan(events=(
+        WorkerCrash(3.2 * t_it, worker="w3"),
+        Preemption(7.5 * t_it, worker="w1", notice_s=3.0 * t_it),
+        LinkDegradation(10.3 * t_it, link="net", factor=0.4,
+                        duration=3.0 * t_it),
+        CheckpointFailure(5.0 * t_it, count=1),
+    ), seed=7)
+
+
+def test_controller_beats_naive_baseline_with_bounded_recovery():
+    specs, t_f = _specs()
+    plan = _pinned_plan(_t_iter(specs, t_f))
+    sim_a, rep_a = scenarios.faulty_long_run(specs, t_f, n_workers=6,
+                                             iters=20, plan=plan)
+    sim_a.run()
+    sim_b, rep_b = scenarios.faulty_long_run(specs, t_f, n_workers=6,
+                                             iters=20, plan=plan,
+                                             resilient=False)
+    sim_b.run()
+    a, b = rep_a.availability, rep_b.availability
+    assert a.goodput > b.goodput
+    assert a.unrecovered == 0
+    bound = max((i.steps_to_recover or 0)
+                for i in rep_a.controller.incidents)
+    assert bound <= 3
+    # the baseline replays every step since its last checkpoint; the
+    # controller only loses the one in-flight iteration the crash voided
+    # (DP survivors keep the model, nothing is replayed)
+    assert a.wasted_steps == 1
+    assert b.wasted_steps > a.wasted_steps
+    assert a.replayed_fraction < b.replayed_fraction
+
+
+def test_same_seed_same_flight_recorder_jsonl(tmp_path):
+    specs, t_f = _specs()
+    plan = _pinned_plan(_t_iter(specs, t_f))
+
+    def one_run(path):
+        rec = FlightRecorder(8192)
+        sim, _ = scenarios.faulty_long_run(specs, t_f, n_workers=6,
+                                           iters=12, plan=plan,
+                                           recorder=rec)
+        sim.run()
+        rec.write(str(path))
+        return rec.records, path.read_bytes()
+
+    a, jsonl_a = one_run(tmp_path / "a.jsonl")
+    b, jsonl_b = one_run(tmp_path / "b.jsonl")
+    assert len(a) > 0
+    assert a == b
+    assert jsonl_a == jsonl_b  # bit-identical on disk, not just in memory

@@ -1,0 +1,65 @@
+"""Property-based fault-injection invariants (skip without hypothesis).
+
+The liveness bar for the resilience tentpole: NO random fault schedule
+may deadlock the engine.  Whatever combination of crashes, preemptions,
+link flaps, slow hosts and checkpoint failures a seed draws — under the
+controller or the naive baseline — ``sim.run()`` must return with every
+iteration completed and sim time finite, and the supervisor's books must
+balance (useful + wasted == steps the engine actually ran).
+"""
+
+import math
+
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.sim import scenarios, trace  # noqa: E402
+from repro.sim.faults import FaultPlan  # noqa: E402
+
+SPECS, T_F = trace.synthetic_specs(12, seed=7)
+ITERS = 8
+HORIZON = ITERS * (T_F + sum(s.t_b for s in SPECS))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       n_crashes=st.integers(min_value=0, max_value=2),
+       n_preemptions=st.integers(min_value=0, max_value=2),
+       n_degradations=st.integers(min_value=0, max_value=2),
+       n_slow=st.integers(min_value=0, max_value=1),
+       resilient=st.booleans())
+def test_random_fault_plans_never_deadlock(seed, n_crashes, n_preemptions,
+                                           n_degradations, n_slow,
+                                           resilient):
+    plan = FaultPlan.random(
+        seed, HORIZON, [f"w{i}" for i in range(6)], links=["net"],
+        n_crashes=n_crashes, n_preemptions=n_preemptions,
+        n_degradations=n_degradations, n_slow=n_slow, n_ckpt_failures=1)
+    sim, report = scenarios.faulty_long_run(
+        SPECS, T_F, n_workers=6, iters=ITERS, plan=plan,
+        resilient=resilient, seed=seed)
+    res = sim.run()
+    its = res.job("train").iterations
+    assert len(its) == ITERS                      # liveness: all completed
+    assert math.isfinite(sim.engine.now)
+    assert all(it.t_iter > 0 for it in its)
+    avail = report.availability                   # final hook ran
+    assert avail is not None
+    assert avail.useful_steps + avail.wasted_steps == ITERS
+    ctrl = report.controller
+    assert ctrl.n_active >= 1
+    # links always end with a positive, finite service rate
+    for link in sim.links.values():
+        assert link.rate_scale > 0 and math.isfinite(link.rate_scale)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_random_plan_determinism(seed):
+    kw = dict(horizon=HORIZON, workers=[f"w{i}" for i in range(6)],
+              links=["net"], n_crashes=2, n_preemptions=2,
+              n_degradations=2, n_slow=1, n_ckpt_failures=2)
+    assert FaultPlan.random(seed, **kw) == FaultPlan.random(seed, **kw)

@@ -1,0 +1,220 @@
+"""Resilience supervisor: policy, controller state machine, run loop."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.obs.metrics import REGISTRY
+from repro.obs.recorder import FlightRecorder
+from repro.train import checkpoint, resilience
+from repro.train.resilience import (BACKOFF, HALTED, RESTORING, RUNNING,
+                                    ResilienceController, ResiliencePolicy)
+from repro.train.train_state import TrainState
+
+
+class _FakePipe:
+    def batch_at(self, step):
+        return {"x": float(step)}
+
+
+def _mk_state(v):
+    return TrainState(step=jnp.int32(0), params={"w": jnp.float32(v)},
+                      opt_state=[])
+
+
+# ---------------------------------------------------------------------------
+# ResiliencePolicy
+# ---------------------------------------------------------------------------
+
+def test_backoff_is_seeded_exponential_with_bounded_jitter():
+    pol = ResiliencePolicy(backoff_base=0.1, backoff_factor=2.0,
+                           backoff_max=1.0, jitter=0.25, seed=42)
+    for attempt in range(1, 8):
+        d = min(0.1 * 2.0 ** (attempt - 1), 1.0)
+        got = pol.backoff(attempt)
+        assert d * 0.75 <= got <= d * 1.25
+        # pure function of (seed, attempt, salt)
+        assert got == pol.backoff(attempt)
+    # salt decorrelates, seed changes the whole sequence
+    assert pol.backoff(1, salt=1) != pol.backoff(1, salt=2)
+    other = ResiliencePolicy(backoff_base=0.1, backoff_factor=2.0,
+                             backoff_max=1.0, jitter=0.25, seed=43)
+    assert other.backoff(1) != pol.backoff(1)
+
+
+def test_backoff_without_jitter_is_exact():
+    pol = ResiliencePolicy(backoff_base=0.05, backoff_factor=2.0,
+                           backoff_max=0.15, jitter=0.0)
+    assert pol.backoff(1) == pytest.approx(0.05)
+    assert pol.backoff(2) == pytest.approx(0.10)
+    assert pol.backoff(3) == pytest.approx(0.15)  # capped
+    assert pol.backoff(9) == pytest.approx(0.15)
+
+
+@pytest.mark.parametrize("kw", [
+    {"max_retries": -1},
+    {"max_restores": -1},
+    {"backoff_factor": 0.5},
+    {"backoff_base": 0.5, "backoff_max": 0.1},
+    {"jitter": 1.5},
+    {"min_workers": 0},
+])
+def test_policy_validation(kw):
+    with pytest.raises(ValueError):
+        ResiliencePolicy(**kw)
+
+
+# ---------------------------------------------------------------------------
+# ResilienceController state machine
+# ---------------------------------------------------------------------------
+
+def test_retry_restore_halt_ladder():
+    pol = ResiliencePolicy(max_retries=2, max_restores=1, jitter=0.0)
+    ctrl = ResilienceController(pol)
+    assert ctrl.state == RUNNING
+
+    act, d = ctrl.step_failed(1.0)
+    assert (act, ctrl.state) == ("retry", BACKOFF) and d > 0
+    act, _ = ctrl.step_failed(2.0)
+    assert act == "retry"
+    act, d = ctrl.step_failed(3.0)
+    assert (act, d, ctrl.state) == ("restore", 0.0, RESTORING)
+    assert ctrl.restores_left == 0
+    # retry counter reset by the restore: the ladder starts over
+    act, _ = ctrl.step_failed(4.0)
+    assert act == "retry"
+    ctrl.step_failed(5.0)
+    act, _ = ctrl.step_failed(6.0)
+    assert (act, ctrl.state) == ("halt", HALTED)
+
+
+def test_step_ok_closes_incident_with_mttr():
+    rec = FlightRecorder(64)
+    ctrl = ResilienceController(ResiliencePolicy(), recorder=rec)
+    inc = ctrl.fault_detected("crash", t_now=2.0, occurred=1.5, worker="w3")
+    assert ctrl.open_incidents == [inc]
+    ctrl.step_ok(4.0, 0.1)
+    assert ctrl.open_incidents == []
+    assert inc.mttr == pytest.approx(2.5)  # occurrence -> useful step
+    assert inc.steps_to_recover == 1
+    recov = rec.events("recovery")
+    assert len(recov) == 1
+    assert recov[0].args["fault"] == "crash"
+    assert recov[0].args["worker"] == "w3"
+
+
+def test_replay_accounting_after_restore():
+    ctrl = ResilienceController(ResiliencePolicy())
+    for t in range(5):
+        ctrl.step_ok(float(t), 0.1)
+    assert (ctrl.useful_steps, ctrl.wasted_steps) == (5, 0)
+    ctrl.restored(2, t_now=5.0)  # replay steps 2..4
+    # an incident opened before the replay only closes on NEW ground
+    inc = ctrl.fault_detected("crash", 5.0, 5.0)
+    for t in range(3):
+        ctrl.step_ok(5.0 + t, 0.1)
+        assert inc.recovered is None  # still replaying
+    assert (ctrl.useful_steps, ctrl.wasted_steps) == (5, 3)
+    ctrl.step_ok(9.0, 0.1)  # first step past the old high-water mark
+    assert inc.recovered is not None
+    assert (ctrl.useful_steps, ctrl.wasted_steps) == (6, 3)
+    rep = ctrl.report(wall=10.0)
+    assert rep.replayed_fraction == pytest.approx(3 / 9)
+    assert rep.goodput == pytest.approx(0.6)
+
+
+def test_evict_readmit_capacity_books():
+    ctrl = ResilienceController(ResiliencePolicy(), n_workers=8)
+    ctrl.monitor.record("w1", 9.0)
+    ctrl.evict(["w1", "w2"], t_now=1.0, kind="evict_crash")
+    assert (ctrl.n_active, ctrl.degraded) == (6, True)
+    assert "w1" not in ctrl.monitor.ewma  # forgotten on eviction
+    ctrl.readmit(["r1", "r2"], t_now=2.0)
+    assert (ctrl.n_active, ctrl.degraded) == (8, False)
+    rep = ctrl.report(wall=1.0)
+    assert rep.actions["evict_crash"] == 1
+    assert rep.actions["readmit"] == 1
+
+
+def test_controller_metrics_land_in_registry():
+    before = REGISTRY.counter("resilience_recoveries_total").value(
+        kind="preempt")
+    ctrl = ResilienceController(ResiliencePolicy())
+    ctrl.fault_detected("preempt", 1.0, 0.5, worker="w0")
+    ctrl.step_ok(2.0, 0.1)
+    after = REGISTRY.counter("resilience_recoveries_total").value(
+        kind="preempt")
+    assert after == before + 1
+
+
+def test_discard_and_ckpt_failure_are_counted_not_fatal():
+    rec = FlightRecorder(64)
+    ctrl = ResilienceController(ResiliencePolicy(), recorder=rec)
+    ctrl.discard_step(1.0)
+    ctrl.checkpoint_failed(2.0, RuntimeError("disk full"))
+    assert ctrl.wasted_steps == 1
+    assert ctrl.state == RUNNING
+    assert len(rec.events("step_discarded")) == 1
+    assert len(rec.events("ckpt_fail")) == 1
+
+
+# ---------------------------------------------------------------------------
+# run_supervised
+# ---------------------------------------------------------------------------
+
+def test_run_supervised_clean_run_reports(tmp_path):
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path))
+
+    def step_fn(state, batch):
+        return (TrainState(state.step + 1, state.params, []), {})
+
+    sleeps = []
+    state, final, ctrl = resilience.run_supervised(
+        step_fn, _mk_state(0.0), _FakePipe(), ck, 0, 6, ckpt_every=3,
+        sleep_fn=sleeps.append)
+    assert final == 6
+    assert sleeps == []
+    assert (ctrl.useful_steps, ctrl.wasted_steps) == (6, 0)
+    assert ctrl.last_ckpt_step == 6
+    assert checkpoint.latest_step(str(tmp_path)) == 6
+
+
+def test_run_supervised_restore_budget_exhausted_reraises(tmp_path):
+    ck = checkpoint.AsyncCheckpointer(str(tmp_path))
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] > 2:
+            raise RuntimeError("persistent failure")
+        return (TrainState(state.step + 1, state.params, []), {})
+
+    pol = ResiliencePolicy(max_retries=1, max_restores=2,
+                           backoff_base=0.0, backoff_max=0.0, jitter=0.0)
+    with pytest.raises(RuntimeError, match="persistent failure"):
+        resilience.run_supervised(
+            step_fn, _mk_state(0.0), _FakePipe(), ck, 0, 10,
+            ckpt_every=2, policy=pol, sleep_fn=lambda d: None)
+
+
+def test_run_supervised_tolerates_ckpt_write_failure(tmp_path):
+    class FlakyCkpt(checkpoint.AsyncCheckpointer):
+        def __init__(self, d):
+            super().__init__(d)
+            self.fails_left = 1
+
+        def save(self, step, state, extra=None):
+            if self.fails_left > 0:
+                self.fails_left -= 1
+                raise OSError("disk full")
+            super().save(step, state, extra)
+
+    ck = FlakyCkpt(str(tmp_path))
+
+    def step_fn(state, batch):
+        return (TrainState(state.step + 1, state.params, []), {})
+
+    state, final, ctrl = resilience.run_supervised(
+        step_fn, _mk_state(0.0), _FakePipe(), ck, 0, 4, ckpt_every=2)
+    assert final == 4  # the failed cadence did not kill the run
+    assert ctrl._actions.get("ckpt_fail") == 1
+    assert checkpoint.latest_step(str(tmp_path)) == 4
