@@ -56,6 +56,7 @@ BENCH_JSON = {
     "coplanner": "BENCH_coplanner.json",
     "obs": "BENCH_obs.json",
     "faults": "BENCH_faults.json",
+    "real_loop": "BENCH_real_loop.json",
 }
 
 # --emit-metrics artifact: a snapshot of the process-local metrics
@@ -83,7 +84,7 @@ def write_bench_json(name: str, wall_s: float,
 
 def main() -> None:
     from benchmarks import (allreduce_model, cluster_sim, kernels_bench,
-                            nonoverlap, planner_bench, roofline,
+                            nonoverlap, planner_bench, real_loop, roofline,
                             scaling_sim, tensor_dist)
     suites = [
         ("allreduce_model", allreduce_model.run),
@@ -98,6 +99,11 @@ def main() -> None:
         ("kernels_bench", kernels_bench.run),
         ("roofline", roofline.run),
     ]
+    if "--real-loop" in sys.argv:
+        # the measured-cost closed loop needs a real (forced) 4-device
+        # mesh and several jit compiles — its own CI step, not part of
+        # the default sweep
+        suites = [("real_loop", real_loop.run)]
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in suites:

@@ -161,6 +161,12 @@ class ParallelConfig:
                                            # "bfloat16" halves a2a cotangent
                                            # traffic
     moe_capacity_factor: float = 0.0       # 0 = config default
+    # --- merged-gradient execution ---
+    pack_kernel: bool = False              # route bucket pack/unpack through
+                                           # the kernels/bucket_pack Pallas
+                                           # kernel (paper §5.3 contiguous
+                                           # buffers); False = fused variadic
+                                           # psum (TPU-native default)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -170,9 +176,15 @@ class RunConfig:
     parallel: ParallelConfig = ParallelConfig()
     seed: int = 0
     learning_rate: float = 3e-4
+    warmup_steps: int = 100                # LR schedule warmup length
+    total_steps: int = 10000               # LR schedule horizon
     weight_decay: float = 0.01
     optimizer: str = "adamw"               # adamw | sgdm
     optimizer_state_dtype: str = "float32" # bf16 moments for 480B-class
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    sgd_momentum: float = 0.9
     grad_clip: float = 1.0
     microbatch: int = 0                    # 0 = no gradient accumulation
 

@@ -73,29 +73,57 @@ def tensor_specs(tree, t_b_fn: Callable[[LeafMeta], float]) -> list[TensorSpec]:
 
 # ---------------------------------------------------------------------------
 # Pack / unpack.
+#
+# Two buffer layouts share one contract:
+#   * plain (``use_kernel=False``): leaves concatenated back to back;
+#   * slot-aligned (``use_kernel=True``): each leaf occupies a TILE-aligned
+#     slot (zero-padded tail), the layout the bucket_pack Pallas kernel
+#     emits.  Pack and unpack must agree on ``use_kernel`` — the aligned
+#     total is ``packed_elems(metas, aligned=True)``.
 # ---------------------------------------------------------------------------
 
-def pack(leaves: Sequence[jax.Array], dtype=None, use_kernel: bool = False) -> jax.Array:
+def slot_elems(size: int, aligned: bool = False) -> int:
+    """Elements a leaf of ``size`` occupies in the packed buffer."""
+    if not aligned:
+        return size
+    from repro.kernels.bucket_pack.kernel import TILE
+    return size + ((-size) % TILE)
+
+
+def packed_elems(metas: Sequence[LeafMeta], aligned: bool = False) -> int:
+    """Total packed-buffer elements for a bucket under either layout."""
+    return sum(slot_elems(m.size, aligned) for m in metas)
+
+
+def pack(leaves: Sequence[jax.Array], dtype=None,
+         use_kernel: bool = False) -> jax.Array:
     """Concatenate leaves into one flat buffer (paper §5.3 merged buffer)."""
     if not leaves:
         raise ValueError("empty bucket")
     dtype = dtype or jnp.result_type(*[l.dtype for l in leaves])
-    flats = [l.reshape(-1).astype(dtype) for l in leaves]
     if use_kernel:
         from repro.kernels.bucket_pack import ops as pack_ops
-        return pack_ops.pack(flats)
+        return pack_ops.pack(list(leaves), dtype)
+    flats = [l.reshape(-1).astype(dtype) for l in leaves]
     return jnp.concatenate(flats) if len(flats) > 1 else flats[0]
 
 
-def unpack(buf: jax.Array, metas: Sequence[LeafMeta]) -> list[jax.Array]:
+def unpack(buf: jax.Array, metas: Sequence[LeafMeta],
+           use_kernel: bool = False) -> list[jax.Array]:
     """Split a flat buffer back into the bucket's member tensors."""
+    expected = packed_elems(metas, aligned=use_kernel)
+    if expected != buf.shape[0]:
+        raise ValueError(f"buffer has {buf.shape[0]} elements, "
+                         f"metas describe {expected}")
+    if use_kernel:
+        from repro.kernels.bucket_pack import ops as pack_ops
+        return pack_ops.unpack(buf, [m.shape for m in metas],
+                               [m.dtype for m in metas])
     out, off = [], 0
     for m in metas:
         out.append(jax.lax.dynamic_slice_in_dim(buf, off, m.size)
                    .reshape(m.shape).astype(m.dtype))
         off += m.size
-    if off != buf.shape[0]:
-        raise ValueError(f"buffer has {buf.shape[0]} elements, metas describe {off}")
     return out
 
 
@@ -126,7 +154,8 @@ def apply_bucketed(tree, plan: MergePlan,
         buf = pack(arrs, dtype=comm_dtype or orig_dtype, use_kernel=use_kernel)
         buf = collective(buf)
         wire_metas = [dataclasses.replace(mm, dtype=buf.dtype) for mm in bmetas]
-        for m, arr in zip(bmetas, unpack(buf, wire_metas)):
+        for m, arr in zip(bmetas, unpack(buf, wire_metas,
+                                         use_kernel=use_kernel)):
             new_leaves[fwd_index[m.path]] = arr.astype(m.dtype)
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 

@@ -235,13 +235,17 @@ def bucket_shard_size(nelems: int, n: int) -> int:
 
 
 def bucketed_reduce_scatter(grads, plan: MergePlan, axis_name: str,
-                            *, mean: bool = True, wire_dtype=None):
+                            *, mean: bool = True, wire_dtype=None,
+                            use_kernel: bool = False):
     """Reduce-scatter each bucket over the DP axis; returns, per bucket, this
     shard's slice (list aligned with plan.buckets) plus unpack metadata.
 
     The caller runs the optimizer on the shard and then calls
     ``bucketed_allgather`` — both collectives enjoy the same merged-message
     startup saving that motivates MG-WFBP for plain all-reduce.
+    ``use_kernel`` selects the bucket_pack Pallas layout (TILE-aligned
+    slots); the caller's param repack and the all-gather must use the same
+    flag or shard offsets disagree.
     """
     metas = bucketer.leaf_metadata(grads)
     flat, _ = jax.tree_util.tree_flatten_with_path(grads)
@@ -250,7 +254,8 @@ def bucketed_reduce_scatter(grads, plan: MergePlan, axis_name: str,
     shards, bucket_metas = [], []
     for bucket in plan.buckets:
         bmetas = [metas[i] for i in bucket]
-        buf = bucketer.pack([by_path[m.path] for m in bmetas])
+        buf = bucketer.pack([by_path[m.path] for m in bmetas],
+                            use_kernel=use_kernel)
         buf, restore = _wire_cast(buf, wire_dtype)
         pad = (-buf.shape[0]) % n
         if pad:
@@ -267,7 +272,8 @@ def bucketed_reduce_scatter(grads, plan: MergePlan, axis_name: str,
 
 def bucketed_allgather(shards: Sequence[jax.Array],
                        bucket_metas: Sequence[Sequence[bucketer.LeafMeta]],
-                       treedef_like, axis_name: str):
+                       treedef_like, axis_name: str,
+                       *, use_kernel: bool = False):
     """Gather updated parameter shards back into the full pytree."""
     flat, treedef = jax.tree_util.tree_flatten_with_path(treedef_like)
     paths = [bucketer._path_str(p) for p, _ in flat]
@@ -275,9 +281,10 @@ def bucketed_allgather(shards: Sequence[jax.Array],
     new_leaves = [None] * len(flat)
     for shard, bmetas in zip(shards, bucket_metas):
         full = jax.lax.all_gather(shard, axis_name, axis=0, tiled=True)
-        total = sum(m.size for m in bmetas)
+        total = bucketer.packed_elems(bmetas, aligned=use_kernel)
         full = full[:total]
-        for m, arr in zip(bmetas, bucketer.unpack(full, bmetas)):
+        for m, arr in zip(bmetas, bucketer.unpack(full, bmetas,
+                                                  use_kernel=use_kernel)):
             new_leaves[fwd_index[m.path]] = arr
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
 

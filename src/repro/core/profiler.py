@@ -21,10 +21,10 @@ over the first few iterations.  We provide both:
 from __future__ import annotations
 
 import time
-from typing import Callable, Sequence
+from typing import Callable, Mapping, Sequence
 
 import jax
-import numpy as np
+import jax.numpy as jnp
 
 from repro.core.bucketer import LeafMeta
 from repro.core.cost_model import HBM_BW, PEAK_FLOPS_BF16
@@ -59,23 +59,25 @@ def measure_backward_times(block_fns: Sequence[Callable], args_per_block,
 
     ``block_fns[i]`` maps ``args_per_block[i] -> output``; the measured
     quantity is the full vjp (forward + backward) wall time, averaged over
-    ``n_iters`` after warmup.  Returns seconds per block, forward order.
+    ``n_iters`` after warmup.  The VJP is jitted once per block and the
+    compiled function warmed before the timed loop, so the numbers are pure
+    device execution — no Python tracing lands in the measurement the
+    planner consumes.  Returns seconds per block, forward order.
     """
     times = []
     for fn, args in zip(block_fns, args_per_block):
-        def run():
-            out, vjp = jax.vjp(fn, *args)
-            cot = jax.tree.map(lambda x: np.ones(x.shape, x.dtype), out)
-            g = vjp(cot)
-            jax.block_until_ready(g)
+        def vjp_fn(*a, fn=fn):
+            out, vjp = jax.vjp(fn, *a)
+            cot = jax.tree.map(lambda x: jnp.ones(x.shape, x.dtype), out)
+            return vjp(cot)
 
-        runj = jax.jit(lambda *a: None)  # placeholder to keep style uniform
-        del runj
+        runj = jax.jit(vjp_fn)
+        jax.block_until_ready(runj(*args))          # compile
         for _ in range(n_warmup):
-            run()
+            jax.block_until_ready(runj(*args))
         t0 = time.perf_counter()
         for _ in range(n_iters):
-            run()
+            jax.block_until_ready(runj(*args))
         times.append((time.perf_counter() - t0) / n_iters)
     return times
 
@@ -90,3 +92,49 @@ def distribute_block_times(block_times: Sequence[float],
         total = sum(m.size for m in metas) or 1
         out.extend(t * m.size / total for m in metas)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Measured-cost planning inputs (the sim->real loop's "measure" phase).
+# ---------------------------------------------------------------------------
+
+def measured_tb(table: Mapping[str, float],
+                fallback: Callable[[LeafMeta], float]
+                ) -> Callable[[LeafMeta], float]:
+    """``LeafMeta -> t_b`` from a measured per-tensor table with an analytic
+    prior for unmeasured tensors (paper §5.1: profile the first iterations,
+    fall back to the model where no measurement exists)."""
+    def t_b(meta: LeafMeta) -> float:
+        v = float(table.get(meta.path, 0.0))
+        return v if v > 0.0 else fallback(meta)
+    return t_b
+
+
+def measure_loss_profile(loss_fn: Callable, args: tuple,
+                         metas: Sequence[LeafMeta], *, n_warmup: int = 1,
+                         n_iters: int = 3) -> tuple[float, dict[str, float]]:
+    """Real timings for one model: ``(t_f, {path: t_b})``.
+
+    Times the jitted forward (``loss_fn(*args)``) and the jitted full VJP on
+    the same arguments; the backward share (VJP minus forward) is
+    distributed over ``metas`` by element count
+    (:func:`distribute_block_times` with the whole model as one block).
+    This is the CPU/host analogue of the paper's per-layer profiling pass:
+    absolute scale comes from measurement, per-tensor split from the
+    size-proportional model.
+    """
+    fwd = jax.jit(loss_fn)
+    jax.block_until_ready(fwd(*args))               # compile
+    for _ in range(n_warmup):
+        jax.block_until_ready(fwd(*args))
+    t0 = time.perf_counter()
+    for _ in range(n_iters):
+        jax.block_until_ready(fwd(*args))
+    t_f = (time.perf_counter() - t0) / n_iters
+    t_vjp = measure_backward_times([loss_fn], [args], n_warmup=n_warmup,
+                                   n_iters=n_iters)[0]
+    # the VJP replays the forward; floor the backward share so noisy hosts
+    # can never hand the planner a zero/negative profile
+    t_b_total = max(t_vjp - t_f, 0.1 * t_vjp)
+    per = distribute_block_times([t_b_total], [list(metas)])
+    return t_f, {m.path: t for m, t in zip(metas, per)}

@@ -15,7 +15,8 @@ def pad_flat(x: jax.Array) -> jax.Array:
 
 
 def pack_ref(leaves, dtype=None) -> jax.Array:
-    dtype = dtype or leaves[0].dtype
+    # same default as ops.pack / core.bucketer.pack: mixed dtypes promote
+    dtype = dtype or jnp.result_type(*[l.dtype for l in leaves])
     return jnp.concatenate([pad_flat(l).astype(dtype) for l in leaves])
 
 

@@ -27,6 +27,14 @@ class Optimizer:
     init_leaf: Callable          # param -> state pytree (dict of arrays)
     update_leaf: Callable        # (g, p, state, step, lr) -> (new_p, state)
     weight_decay_mask: Callable  # path -> bool (True = decay applies)
+    # (g32, p, state, step, lr, decay_mask) -> (new_p, state): the update on
+    # a flat packed ZeRO-1 shard where decay eligibility is a per-element
+    # mask instead of a per-leaf path.  Built by the factories below from
+    # the same hyperparameter closure as ``update_leaf``, so the packed
+    # path can never drift from the tree path.
+    flat_update: Callable = None
+    # factory hyperparameters, exposed for introspection/tests
+    hyperparams: tuple[tuple[str, float], ...] = ()
 
     def init(self, params):
         return jax.tree.map(self.init_leaf, params)
@@ -74,7 +82,20 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
         return new_p, {"m": m.astype(sdt), "v": v.astype(sdt)}
 
-    return Optimizer("adamw", init_leaf, update_leaf, _no_decay)
+    def flat_update(g, p, s, step, lr, decay_mask):
+        g32 = g.astype(jnp.float32)
+        m = s["m"].astype(jnp.float32) * b1 + (1 - b1) * g32
+        v = s["v"].astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        t = step.astype(jnp.float32) + 1.0
+        upd = (m / (1 - b1 ** t)) / (jnp.sqrt(v / (1 - b2 ** t)) + eps)
+        upd = upd + weight_decay * decay_mask * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, {"m": m.astype(sdt), "v": v.astype(sdt)}
+
+    return Optimizer("adamw", init_leaf, update_leaf, _no_decay,
+                     flat_update,
+                     (("b1", b1), ("b2", b2), ("eps", eps),
+                      ("weight_decay", weight_decay)))
 
 
 def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
@@ -92,13 +113,26 @@ def sgdm(momentum: float = 0.9, weight_decay: float = 0.0,
         new_p = (p.astype(jnp.float32) - lr * mu).astype(p.dtype)
         return new_p, {"mu": mu.astype(sdt)}
 
-    return Optimizer("sgdm", init_leaf, update_leaf, _no_decay)
+    def flat_update(g, p, s, step, lr, decay_mask):
+        g32 = g.astype(jnp.float32) + \
+            weight_decay * decay_mask * p.astype(jnp.float32)
+        mu = s["mu"].astype(jnp.float32) * momentum + g32
+        new_p = (p.astype(jnp.float32) - lr * mu).astype(p.dtype)
+        return new_p, {"mu": mu.astype(sdt)}
+
+    return Optimizer("sgdm", init_leaf, update_leaf, _no_decay,
+                     flat_update,
+                     (("momentum", momentum), ("weight_decay", weight_decay)))
 
 
 def make_optimizer(name: str, *, weight_decay: float = 0.01,
-                   state_dtype: str = "float32") -> Optimizer:
+                   state_dtype: str = "float32", b1: float = 0.9,
+                   b2: float = 0.95, eps: float = 1e-8,
+                   momentum: float = 0.9) -> Optimizer:
     if name == "adamw":
-        return adamw(weight_decay=weight_decay, state_dtype=state_dtype)
+        return adamw(b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+                     state_dtype=state_dtype)
     if name == "sgdm":
-        return sgdm(weight_decay=weight_decay, state_dtype=state_dtype)
+        return sgdm(momentum=momentum, weight_decay=weight_decay,
+                    state_dtype=state_dtype)
     raise ValueError(f"unknown optimizer {name!r}")

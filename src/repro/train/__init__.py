@@ -1,3 +1,3 @@
 from repro.train.train_state import TrainState
 from repro.train.step import build_train_step, build_plan, StepArtifacts
-from repro.train import checkpoint, fault, resilience
+from repro.train import checkpoint, fault, replan, resilience

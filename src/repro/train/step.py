@@ -136,14 +136,22 @@ def _axes_size(axes) -> int:
 def build_plan(params_shape, run: RunConfig, mesh_shape, mesh_axes,
                strategy: str | None = None,
                exclude: set | None = None,
-               ep_on: bool | None = None):
+               ep_on: bool | None = None,
+               tb_table: dict | None = None,
+               comm_model=None):
     """Merge plan(s) + tensor specs + cost model for this run.
 
     ``exclude``: leaf paths whose DP reduction happens elsewhere (ZeRO-3
     leaves reduce inside autodiff via the gather transpose).
     ``ep_on``: expert-parallel split as decided by the caller — must match
     the step body's _split_groups or the plan's bucket indices point at
-    the wrong leaves; defaults to the mesh-derived value."""
+    the wrong leaves; defaults to the mesh-derived value.
+    ``tb_table``: measured per-tensor backward times (``{path: seconds}``,
+    e.g. from ``profiler.measure_loss_profile`` or a refit from real
+    ``IterationRecord`` timings) — used where present, with the analytic
+    roofline as the fallback prior (paper §5.1 measure-then-plan).
+    ``comm_model``: override the mesh-derived all-reduce model with a
+    measured/refit one (``train.replan`` feeds the effective model here)."""
     par = run.parallel
     if ep_on is None:
         ep_on = bool(par.ep_axis) and par.ep_axis in mesh_axes
@@ -158,9 +166,11 @@ def build_plan(params_shape, run: RunConfig, mesh_shape, mesh_axes,
     local_batch = max(run.shape.global_batch // max(dp_total, 1), 1)
     micro = min(run.microbatch or local_batch, local_batch)
     t_b = profiler.analytic_tb(micro * run.shape.seq_len)
+    if tb_table:
+        t_b = profiler.measured_tb(tb_table, t_b)
     specs = [s for s in bucketer.tensor_specs(rep_shape, t_b) if s.nbytes]
-    model = cost_model.production_comm_model(mesh_shape, mesh_axes,
-                                             par.dp_axes)
+    model = comm_model if comm_model is not None else \
+        cost_model.production_comm_model(mesh_shape, mesh_axes, par.dp_axes)
     plan = planner.make_plan(strategy or par.comm_strategy, specs, model)
     ep_plan, ep_specs = None, []
     if ep_on:
@@ -237,9 +247,10 @@ def gather_fsdp(params, fsdp_dims: dict, zero_axis: str):
 
 def init_state(model: LM, opt: Optimizer, run: RunConfig,
                plan: planner.MergePlan, ep_on: bool, zero_n: int, key,
-               eff_zero: int | None = None):
+               eff_zero: int | None = None, aligned: bool = False):
     """Global TrainState (ZeRO-1 moment buffers are full-size; the data-axis
-    sharding distributes them)."""
+    sharding distributes them).  ``aligned`` sizes the packed buffers for
+    the bucket_pack kernel's TILE-aligned slot layout."""
     params = model.init(key)
     zero = run.parallel.zero if eff_zero is None else eff_zero
     if zero != 1:
@@ -248,7 +259,8 @@ def init_state(model: LM, opt: Optimizer, run: RunConfig,
     metas = bucketer.leaf_metadata(rep_p)
     opt_shards = []
     for bucket in plan.buckets:
-        total = sum(metas[i].size for i in bucket)
+        total = bucketer.packed_elems([metas[i] for i in bucket],
+                                      aligned=aligned)
         padded = total + ((-total) % zero_n)
         opt_shards.append(opt.init_leaf(jnp.zeros((padded,), jnp.float32)))
     if ep_on:
@@ -292,8 +304,16 @@ def state_pspecs(state_shape, params_spec, run: RunConfig, zero_axis: str,
 # ---------------------------------------------------------------------------
 
 def build_train_step(model: LM, run: RunConfig, mesh,
-                     strategy: str | None = None, donate: bool = True):
-    """Returns (jit-ready step_fn, init_fn, StepArtifacts)."""
+                     strategy: str | None = None, donate: bool = True,
+                     tb_table: dict | None = None, comm_model=None,
+                     plan_override: planner.MergePlan | None = None):
+    """Returns (jit-ready step_fn, init_fn, StepArtifacts).
+
+    ``tb_table`` / ``comm_model`` thread measured costs into the plan
+    (see :func:`build_plan`); ``plan_override`` installs a specific merge
+    plan — the :class:`repro.train.replan.ReplanController` swap path —
+    bypassing the strategy planner (bucketing is pure scheduling, so the
+    override changes step timing, never numerics)."""
     par = run.parallel
     mesh_axes = tuple(mesh.axis_names)
     mesh_shape = tuple(mesh.devices.shape)
@@ -321,8 +341,14 @@ def build_train_step(model: LM, run: RunConfig, mesh,
         eff_zero = 0
 
     opt = make_optimizer(run.optimizer, weight_decay=run.weight_decay,
-                         state_dtype=run.optimizer_state_dtype)
-    lr_fn = warmup_cosine(run.learning_rate, 100, 10000)
+                         state_dtype=run.optimizer_state_dtype,
+                         b1=run.adam_b1, b2=run.adam_b2, eps=run.adam_eps,
+                         momentum=run.sgd_momentum)
+    lr_fn = warmup_cosine(run.learning_rate, run.warmup_steps,
+                          run.total_steps)
+    # paper §5.3 contiguous-buffer execution through the bucket_pack Pallas
+    # kernel (jnp fallback where Pallas cannot lower, same slot layout)
+    use_kernel = bool(par.pack_kernel)
 
     params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
     tp_axis = par.tp_axis if (par.tp_enabled and par.tp_axis in mesh_axes
@@ -339,9 +365,18 @@ def build_train_step(model: LM, run: RunConfig, mesh,
     plan, ep_plan, specs, cmodel = build_plan(params_shape, run, mesh_shape,
                                               mesh_axes, strategy,
                                               exclude=set(fsdp_dims),
-                                              ep_on=ep_on)
+                                              ep_on=ep_on,
+                                              tb_table=tb_table,
+                                              comm_model=comm_model)
+    if plan_override is not None:
+        if plan_override.num_tensors != len(specs):
+            raise ValueError(
+                f"plan_override covers {plan_override.num_tensors} tensors "
+                f"but the step has {len(specs)}")
+        plan = plan_override
 
-    # static per-bucket weight-decay masks (packed ZeRO-1 path only)
+    # static per-bucket weight-decay masks (packed ZeRO-1 path only); the
+    # kernel layout pads each leaf's slot with zeros — padding never decays
     decay_masks = []
     if eff_zero == 1:
         rep_shape, _ = _split_groups(params_shape, ep_on)
@@ -351,9 +386,13 @@ def build_train_step(model: LM, run: RunConfig, mesh,
             k = _keystr(p)
             decay_by_path[k] = 1.0 if opt.weight_decay_mask(k) else 0.0
         for bucket in plan.buckets:
-            parts = [np.full((rep_metas[i].size,),
-                             decay_by_path[rep_metas[i].path], np.float32)
-                     for i in bucket]
+            parts = []
+            for i in bucket:
+                slot = np.zeros(
+                    (bucketer.slot_elems(rep_metas[i].size,
+                                         aligned=use_kernel),), np.float32)
+                slot[:rep_metas[i].size] = decay_by_path[rep_metas[i].path]
+                parts.append(slot)
             decay_masks.append(np.concatenate(parts) if parts else
                                np.zeros((0,), np.float32))
 
@@ -393,6 +432,10 @@ def build_train_step(model: LM, run: RunConfig, mesh,
 
     def reduce_replicated(rep_g):
         kwargs = dict(mean=True, wire_dtype=par.wire_dtype or None)
+        if use_kernel:
+            # contiguous merged buffers via the pack kernel require the
+            # packed collective mode (fused variadic psum never packs)
+            kwargs.update(mode="packed", use_kernel=True)
         if par.hierarchical and pod_axes:
             return comm.hierarchical_allreduce(
                 rep_g, plan, intra_axis=zero_axis, inter_axis=pod_axes[0],
@@ -440,7 +483,7 @@ def build_train_step(model: LM, run: RunConfig, mesh,
                                  comm.safe_psum(rep_g, pod_axes))
         shards, bucket_metas = comm.bucketed_reduce_scatter(
             rep_g, plan, zero_axis, mean=True,
-            wire_dtype=par.wire_dtype or None)
+            wire_dtype=par.wire_dtype or None, use_kernel=use_kernel)
         sq = sum(jnp.sum(jnp.square(s.astype(jnp.float32))) for s in shards)
         sq = jax.lax.psum(sq, zero_axis)
         ep_g = reduce_ep(ep_g) if ep_on else None
@@ -457,7 +500,8 @@ def build_train_step(model: LM, run: RunConfig, mesh,
         by_path = {_keystr(p): v for p, v in flatp}
         new_shards, new_opt = [], []
         for k, (bmetas, gshard) in enumerate(zip(bucket_metas, shards)):
-            pbuf = bucketer.pack([by_path[m.path] for m in bmetas])
+            pbuf = bucketer.pack([by_path[m.path] for m in bmetas],
+                                 use_kernel=use_kernel)
             mask = jnp.asarray(decay_masks[k])
             pad = (-pbuf.shape[0]) % n
             if pad:
@@ -466,13 +510,12 @@ def build_train_step(model: LM, run: RunConfig, mesh,
             pshard = comm.replicated_shard(pbuf, zero_axis)
             mshard = comm.replicated_shard(mask, zero_axis)
             g = gshard.astype(jnp.float32) * scale
-            new_p, new_s = _masked_update(opt, g, pshard, state.opt_state[k],
-                                          state.step, lr, mshard,
-                                          run.weight_decay)
+            new_p, new_s = opt.flat_update(g, pshard, state.opt_state[k],
+                                           state.step, lr, mshard)
             new_shards.append(new_p)
             new_opt.append(new_s)
         new_rep = comm.bucketed_allgather(new_shards, bucket_metas, rep_p,
-                                          zero_axis)
+                                          zero_axis, use_kernel=use_kernel)
         if ep_on:
             ep_gc = jax.tree.map(lambda g: g * scale, ep_g)
             new_ep, new_ep_opt = opt.update(ep_gc, ep_p,
@@ -576,7 +619,7 @@ def build_train_step(model: LM, run: RunConfig, mesh,
 
     def init_fn(key):
         return init_state(model, opt, run, plan, ep_on, zero_n, key,
-                          eff_zero=eff_zero)
+                          eff_zero=eff_zero, aligned=use_kernel)
 
     state_shape = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
     st_pspecs = state_pspecs(state_shape, pspecs, run, zero_axis, ep_on,
@@ -609,24 +652,6 @@ def _static_size(dims, axes) -> int:
     return n
 
 
-def _masked_update(opt: Optimizer, g, p, s, step, lr, decay_mask, wd):
-    """Optimizer update on a flat packed shard with a static decay mask."""
-    if opt.name == "adamw":
-        b1, b2, eps = 0.9, 0.95, 1e-8
-        m = s["m"].astype(jnp.float32) * b1 + (1 - b1) * g
-        v = s["v"].astype(jnp.float32) * b2 + (1 - b2) * g * g
-        t = step.astype(jnp.float32) + 1.0
-        upd = (m / (1 - b1 ** t)) / (jnp.sqrt(v / (1 - b2 ** t)) + eps)
-        upd = upd + wd * decay_mask * p.astype(jnp.float32)
-        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
-        return new_p, {"m": m.astype(s["m"].dtype),
-                       "v": v.astype(s["v"].dtype)}
-    mu = s["mu"].astype(jnp.float32) * 0.9 + g + \
-        wd * decay_mask * p.astype(jnp.float32)
-    new_p = (p.astype(jnp.float32) - lr * mu).astype(p.dtype)
-    return new_p, {"mu": mu.astype(s["mu"].dtype)}
-
-
 # ---------------------------------------------------------------------------
 # Host-side observability: the measurement half of the sim->real loop.
 # ---------------------------------------------------------------------------
@@ -634,7 +659,7 @@ def _masked_update(opt: Optimizer, g, p, s, step, lr, decay_mask, wd):
 def instrument_step(step_fn, art: StepArtifacts, *, job: str = "train",
                     t_f: float = 0.0, recorder=None, source: str = "train",
                     clock=None, hlo_text: str | None = None,
-                    sync: bool = True):
+                    sync: bool = True, on_record=None):
     """Wrap a (jitted) step function with host-side flight recording.
 
     Timing happens strictly OUTSIDE the jitted region — wall clock before
@@ -655,6 +680,10 @@ def instrument_step(step_fn, art: StepArtifacts, *, job: str = "train",
     to the first record.  ``clock`` injects a time source (deterministic
     golden tests); ``sync=False`` skips the block-until-ready (callers
     that already synchronize, or tests without real devices).
+
+    ``on_record`` receives each :class:`IterationRecord` after it is (op-
+    tionally) recorded — the hook a :class:`repro.train.replan.ReplanController`
+    uses to consume live measurements without owning the recorder.
     """
     import time
 
@@ -682,7 +711,7 @@ def instrument_step(step_fn, art: StepArtifacts, *, job: str = "train",
             out = jax.block_until_ready(out)
         t1 = now()
         hist.observe(t1 - t0, job=job)
-        if recorder is not None:
+        if recorder is not None or on_record is not None:
             # map the closed-form timeline (backward-origin clock, total
             # span est.t_iter) onto the measured wall window [t0, t1]
             scale = (t1 - t0) / est.t_iter if est.t_iter > 0 else 0.0
@@ -697,11 +726,15 @@ def instrument_step(step_fn, art: StepArtifacts, *, job: str = "train",
                     "overlap_ratio": est.overlap_ratio}
             if step_idx == 0 and hlo_cost is not None:
                 args["hlo_cost"] = hlo_cost
-            recorder.record(IterationRecord(
+            rec = IterationRecord(
                 source=source, job=job, iteration=step_idx,
                 start=t0, end=t1,
                 backward_end=t0 + (t_f + est.t_b_total) * scale,
-                buckets=buckets, args=args))
+                buckets=buckets, args=args)
+            if recorder is not None:
+                recorder.record(rec)
+            if on_record is not None:
+                on_record(rec)
         step_idx += 1
         return out
 

@@ -66,6 +66,54 @@ def test_apply_bucketed_plan_mismatch():
         bucketer.apply_bucketed(tree, plan, lambda b: b)
 
 
+def test_pack_unpack_kernel_layout_roundtrip():
+    """use_kernel=True speaks the TILE-aligned slot layout end to end."""
+    tree = _tree()
+    metas = bucketer.leaf_metadata(tree)
+    leaves = [v for _, v in bucketer.leaves_in_backward_order(tree)]
+    buf = bucketer.pack(leaves, use_kernel=True)
+    assert buf.shape == (bucketer.packed_elems(metas, aligned=True),)
+    outs = bucketer.unpack(buf, metas, use_kernel=True)
+    for o, l in zip(outs, leaves):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(l))
+    # layout mismatch is loud: an aligned buffer fed to the plain unpack
+    with pytest.raises(ValueError):
+        bucketer.unpack(buf, metas, use_kernel=False)
+
+
+def test_slot_elems_and_packed_elems():
+    from repro.kernels.bucket_pack.kernel import TILE
+    assert bucketer.slot_elems(5) == 5
+    assert bucketer.slot_elems(5, aligned=True) == TILE
+    assert bucketer.slot_elems(TILE, aligned=True) == TILE
+    metas = bucketer.leaf_metadata(_tree())
+    assert bucketer.packed_elems(metas) == sum(m.size for m in metas)
+    assert bucketer.packed_elems(metas, aligned=True) == \
+        sum(bucketer.slot_elems(m.size, aligned=True) for m in metas)
+
+
+def test_pack_mixed_dtype_matches_ops_default():
+    """bucketer.pack and kernels ops.pack agree on the promoted dtype."""
+    from repro.kernels.bucket_pack import ops as bp_ops
+    leaves = [jnp.ones((3,), jnp.bfloat16), jnp.full((4,), 2.0, jnp.float32)]
+    a = bucketer.pack(leaves)
+    b = bp_ops.pack(leaves)
+    assert a.dtype == b.dtype == jnp.float32
+
+
+def test_apply_bucketed_kernel_matches_plain():
+    tree = _tree()
+    metas = bucketer.leaf_metadata(tree)
+    specs = [TensorSpec(m.path, m.nbytes, 1e-3) for m in metas]
+    plan = plan_fixed_size(specs, 30)
+    plain = bucketer.apply_bucketed(tree, plan, lambda buf: buf * 2.0)
+    kern = bucketer.apply_bucketed(tree, plan, lambda buf: buf * 2.0,
+                                   use_kernel=True)
+    for (_, a), (_, b) in zip(bucketer.leaves_in_backward_order(plain),
+                              bucketer.leaves_in_backward_order(kern)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 def test_tensor_specs_backward_order():
     specs = bucketer.tensor_specs(_tree(), lambda m: m.size * 1e-6)
     assert [s.name for s in specs] == ["['z']", "['a']['w']", "['a']['b']"]

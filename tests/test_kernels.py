@@ -80,6 +80,36 @@ def test_bucket_pack_many_leaves_chunked():
     np.testing.assert_array_equal(np.asarray(packed), np.asarray(rref))
 
 
+def test_bucket_pack_mixed_dtype_default_promotes():
+    """ops.pack / pack_ref / core.bucketer.pack share ONE default dtype
+    rule (result_type promotion) — mixed-dtype buckets used to diverge
+    (ops followed leaves[0].dtype, bucketer promoted)."""
+    leaves = [jnp.ones((33,), jnp.bfloat16),
+              jnp.full((70,), 2.0, jnp.float32)]
+    packed = bp_ops.pack(leaves, interpret=True)
+    rref = bp_ref.pack_ref(leaves)
+    assert packed.dtype == rref.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(rref))
+
+
+def test_bucket_pack_fallback_layout_identical():
+    """The jnp fallback emits the same TILE-aligned buffer as the kernel,
+    so a probe failure mid-fleet cannot change numerics or layout."""
+    leaves = [jax.random.normal(jax.random.PRNGKey(i), s)
+              for i, s in enumerate([(33,), (128, 7), (512,)])]
+    packed = bp_ops.pack(leaves, interpret=True)
+    bp_ops._KERNEL_OK[True] = False     # force the fallback path
+    try:
+        fb = bp_ops.pack(leaves, interpret=True)
+        np.testing.assert_array_equal(np.asarray(packed), np.asarray(fb))
+        outs = bp_ops.unpack(packed, [l.shape for l in leaves],
+                             [l.dtype for l in leaves], interpret=True)
+        for o, l in zip(outs, leaves):
+            np.testing.assert_array_equal(np.asarray(o), np.asarray(l))
+    finally:
+        bp_ops._KERNEL_OK.pop(True, None)
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm
 # ---------------------------------------------------------------------------

@@ -39,16 +39,25 @@ def test_weight_decay_mask():
     assert not opt.weight_decay_mask("['attn']['b_q']")
 
 
-def test_masked_flat_update_matches_tree_update():
+@pytest.mark.parametrize("name,kwargs", [
+    ("adamw", {}),
+    # non-default hyperparameters: the regression this parametrization
+    # pins — flat_update used to hardcode b1=0.9/b2=0.95/eps=1e-8, so the
+    # packed (ZeRO-1) path silently diverged from the tree path whenever a
+    # run configured different betas.
+    ("adamw", {"b1": 0.85, "b2": 0.999, "eps": 1e-6}),
+    ("sgdm", {}),
+    ("sgdm", {"momentum": 0.75}),
+])
+def test_masked_flat_update_matches_tree_update(name, kwargs):
     """ZeRO packed update == per-leaf tree update for a 1-shard 'cluster'."""
-    from repro.train.step import _masked_update
-    opt = optimizers.adamw(weight_decay=0.1)
+    opt = optimizers.make_optimizer(name, weight_decay=0.1, **kwargs)
     key = jax.random.PRNGKey(0)
     p = jax.random.normal(key, (64,))
     g = jax.random.normal(jax.random.PRNGKey(1), (64,))
     mask = jnp.concatenate([jnp.ones(32), jnp.zeros(32)])
-    s = {"m": jnp.zeros(64), "v": jnp.zeros(64)}
-    new_flat, _ = _masked_update(opt, g, p, s, jnp.int32(0), 0.01, mask, 0.1)
+    s = opt.init({"w": p})["w"]
+    new_flat, _ = opt.flat_update(g, p, s, jnp.int32(0), 0.01, mask)
 
     tree_p = {"decay": p[:32], "nodecay": p[32:]}
     tree_g = {"decay": g[:32], "nodecay": g[32:]}
@@ -63,6 +72,26 @@ def test_masked_flat_update_matches_tree_update():
                                np.asarray(new_decay), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(new_flat[32:]),
                                np.asarray(new_nodecay), rtol=1e-6)
+
+
+def test_flat_update_hyperparams_exposed():
+    """flat_update must consume the constructor's hyperparameters — two
+    optimizers differing only in b2 must produce different packed updates."""
+    p = jax.random.normal(jax.random.PRNGKey(0), (16,))
+    g = jax.random.normal(jax.random.PRNGKey(1), (16,))
+    g2 = jax.random.normal(jax.random.PRNGKey(2), (16,))
+    mask = jnp.ones(16)
+    outs = []
+    for b2 in (0.95, 0.999):
+        opt = optimizers.make_optimizer("adamw", weight_decay=0.0, b2=b2)
+        assert dict(opt.hyperparams)["b2"] == b2
+        s = opt.init({"w": p})["w"]
+        # two steps with DIFFERENT gradients: under a constant gradient the
+        # bias-corrected v_hat is b2-independent, so b2 would not show up
+        p1, s1 = opt.flat_update(g, p, s, jnp.int32(0), 0.01, mask)
+        p2, _ = opt.flat_update(g2, p1, s1, jnp.int32(1), 0.01, mask)
+        outs.append(np.asarray(p2))
+    assert not np.allclose(outs[0], outs[1])
 
 
 def test_schedules():
