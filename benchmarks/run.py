@@ -29,6 +29,11 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
                      `cluster_sim.py --faults` as a smoke step)
   planner_bench    — §4.2 one-time O(L^2) cost + the incremental planner
                      fast path (>= 10x replan speedup enforced)
+  fleet_bench      — jitted fleet backend (repro.sim.fleet): >= 10x
+                     evaluation-stage speedup over the pure-Python
+                     closed forms enforced on the N=4..2048 headline
+                     grid, plus a 100-job co-planning round scored in
+                     one device call (own CI step via ``--fleet``)
   kernels_bench    — kernels  (structural tile/bandwidth notes)
   roofline         — EXPERIMENTS.md §Roofline terms from dry-run artifacts
 
@@ -57,6 +62,7 @@ BENCH_JSON = {
     "obs": "BENCH_obs.json",
     "faults": "BENCH_faults.json",
     "real_loop": "BENCH_real_loop.json",
+    "fleet": "BENCH_fleet.json",
 }
 
 # --emit-metrics artifact: a snapshot of the process-local metrics
@@ -83,9 +89,9 @@ def write_bench_json(name: str, wall_s: float,
 
 
 def main() -> None:
-    from benchmarks import (allreduce_model, cluster_sim, kernels_bench,
-                            nonoverlap, planner_bench, real_loop, roofline,
-                            scaling_sim, tensor_dist)
+    from benchmarks import (allreduce_model, cluster_sim, fleet_bench,
+                            kernels_bench, nonoverlap, planner_bench,
+                            real_loop, roofline, scaling_sim, tensor_dist)
     suites = [
         ("allreduce_model", allreduce_model.run),
         ("tensor_dist", tensor_dist.run),
@@ -104,6 +110,10 @@ def main() -> None:
         # mesh and several jit compiles — its own CI step, not part of
         # the default sweep
         suites = [("real_loop", real_loop.run)]
+    if "--fleet" in sys.argv:
+        # the fleet-backend speedup gate: wall-clock sensitive, so it
+        # runs alone (no jit-cache or CPU contention from other suites)
+        suites = [("fleet", fleet_bench.run)]
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in suites:

@@ -10,38 +10,54 @@ Expected paper behaviours, all checked here:
   * at >= 256 ring workers MG-WFBP converges to single-layer comms;
   * with double binary trees WFBP-family stays ahead of SyncEASGD.
 
-This suite is the closed-form FAST PATH over the shared scenario-catalog
-constants (``repro.sim.scenarios.PAPER_ALPHA/BETA/GAMMA``); the
-event-driven twin — same clusters through the ``repro.sim`` engine, plus
-the scenarios the closed form cannot express — is
-``benchmarks/cluster_sim.py``, which also asserts the two paths agree.
+The whole study routes through ``repro.sim.sweep.run_sweep``: each
+(algorithm, model, strategy) triple is ONE sweep over the full
+N=4..2048 grid — a single jitted device call on the fleet backend
+(``repro.sim.fleet``), the portable numpy closed forms otherwise — and
+per-N speedups are derived from the sweep's ``t_iter`` via the paper's
+Eqs. 4-5.  The event-driven twin — same clusters through the
+``repro.sim`` engine, plus the scenarios the closed form cannot express
+— is ``benchmarks/cluster_sim.py``, which also asserts the two paths
+agree; the fleet-vs-numpy wall-clock gap is enforced by
+``benchmarks/fleet_bench.py``.
 """
 
 from __future__ import annotations
 
 from benchmarks.paper_profiles import tensor_profile
-from repro.core.planner import make_plan
-from repro.core.simulator import simulate, speedup
-from repro.sim.network import FlatTopology
+from repro.sim.fleet import fleet_available
 from repro.sim.scenarios import PAPER_ALPHA, PAPER_BETA, PAPER_GAMMA
+from repro.sim.sweep import SweepGrid, run_sweep
+
+# the paper's full §7 range: 4 .. 2048 workers
+SCALING_NS = tuple(2 ** p for p in range(2, 12))
 
 
 def run() -> list[tuple[str, float, str]]:
+    backend = "fleet" if fleet_available() else "numpy"
+    grid = SweepGrid(n_workers=SCALING_NS)
     rows = []
     for alg in ("ring", "double_binary_trees"):
         for mname in ("googlenet", "resnet50"):
             specs, t_f = tensor_profile(mname)
+            denom = t_f + sum(s.t_b for s in specs)   # t_f + t_b (Eq. 4)
+            res = {}
+            for strat in ("wfbp", "single", "mgwfbp"):
+                r = run_sweep(specs, t_f, grid, algorithm=alg,
+                              strategy=strat, alpha=PAPER_ALPHA,
+                              beta=PAPER_BETA, gamma=PAPER_GAMMA,
+                              backend=backend)
+                assert r.backend == backend, (r.backend, backend)
+                assert not r.used_engine.any()
+                res[strat] = r
             cross = mg_at_64 = None
             prev_rel = None
             converged_256 = None
-            for p in range(2, 12):
-                n = 2 ** p
-                model = FlatTopology(alg, n, PAPER_ALPHA, PAPER_BETA,
-                                     PAPER_GAMMA).linear_model()
+            for ni, n in enumerate(SCALING_NS):
                 s = {}
-                for strat in ("wfbp", "single", "mgwfbp"):
-                    plan = make_plan(strat, specs, model)
-                    s[strat] = speedup(specs, plan, model, t_f, n)
+                for strat, r in res.items():
+                    t_c_no = float(r.t_iter[ni, 0, 0, 0]) - denom
+                    s[strat] = n / (1.0 + t_c_no / denom)   # Eqs. 4-5
                 rel = s["wfbp"] - s["single"]
                 if prev_rel is not None and rel * prev_rel < 0 and \
                         cross is None:
@@ -51,8 +67,8 @@ def run() -> list[tuple[str, float, str]]:
                     mg_at_64 = (s["mgwfbp"] / s["wfbp"],
                                 s["mgwfbp"] / s["single"])
                 if n == 256:
-                    plan = make_plan("mgwfbp", specs, model)
-                    converged_256 = plan.num_buckets
+                    converged_256 = \
+                        res["mgwfbp"].plans[(256, 1.0)].num_buckets
                 assert s["mgwfbp"] >= max(s["wfbp"], s["single"]) - 1e-9, \
                     (alg, mname, n)
                 rows.append((f"scaling.{alg}.{mname}.N{n}.mgwfbp_eff",

@@ -212,7 +212,12 @@ class CoPlanner:
     ``evaluate`` simulates (or measures) ALL jobs together under a
     candidate assignment; evaluations are deterministic in the assignment
     and cached, so seed candidates and fixed-point revisits never pay for
-    the same simulation twice.  ``damping`` weights each refit against
+    the same simulation twice.  An evaluator may additionally expose
+    ``batch(assignments) -> [CoObservation]`` — every uncached candidate
+    of a round is then scored in ONE call
+    (``repro.sim.fleet.FleetEvaluator`` turns a 100-job seed round into
+    a single jitted device pass); results are identical to the
+    sequential path by the determinism contract.  ``damping`` weights each refit against
     the previous effective model (suppressing the two-cycle oscillation a
     full-step update can fall into — now per job).  With
     ``shared_model=True`` jobs that declare their ``links`` are refit
@@ -347,6 +352,42 @@ class CoPlanner:
                 cache[k] = self.evaluate(dict(assignment))
             return cache[k]
 
+        def observe_many(assignments: Sequence[Mapping[str, MergePlan]]
+                         ) -> None:
+            """Prefill the cache for a batch of candidate assignments.
+
+            When the evaluator exposes a ``batch`` method (e.g.
+            ``repro.sim.fleet.FleetEvaluator``) every uncached candidate
+            of the round is scored in ONE call — a single jitted device
+            pass at fleet scale — otherwise this degrades to the
+            sequential loop, in the same order the candidates are later
+            pushed (identical evaluate() call sequence)."""
+            todo: list[dict[str, MergePlan]] = []
+            keys: list[tuple] = []
+            for a in assignments:
+                k = self._key(a)
+                if k not in cache and k not in keys:
+                    keys.append(k)
+                    todo.append(dict(a))
+            if not todo:
+                return
+            batch_fn = getattr(self.evaluate, "batch", None)
+            if batch_fn is None or len(todo) == 1:
+                for a in todo:
+                    observe(a)
+                return
+            observations = batch_fn(todo)
+            if len(observations) != len(todo):
+                raise ValueError(
+                    f"evaluate.batch returned {len(observations)} "
+                    f"observations for {len(todo)} assignments")
+            for k, o in zip(keys, observations):
+                cache[k] = o
+            REGISTRY.counter(
+                "coplanner_batched_evals_total",
+                "candidate assignments scored through a batched "
+                "evaluate() instead of one-by-one").inc(len(todo))
+
         def predict_all(assignment: Mapping[str, MergePlan]
                         ) -> dict[str, float]:
             return {j.name: j.predict(assignment[j.name], eff[j.name])
@@ -372,12 +413,12 @@ class CoPlanner:
         # seed candidates: each job's static baselines against everyone
         # else's round-0 plan — evaluate only, no refit.
         pushed: set[tuple] = set()
+        seed_assignments: list[dict[str, MergePlan]] = []
         for j in jobs:
             for sp in j.seed_plans:
                 assignment = {**plans, j.name: sp}
                 pushed.add(self._key(assignment))
-                push(CoRound("seed", assignment, dict(eff), dict(eff),
-                             observe(assignment), predict_all(assignment)))
+                seed_assignments.append(assignment)
         # ... plus the fully independent assignment (every job on its
         # primary seed plan at once): that is the "each job planned alone
         # under the exclusive-link model" baseline the co-plan must not
@@ -387,8 +428,11 @@ class CoPlanner:
         combined = {j.name: (j.seed_plans[0] if j.seed_plans
                              else plans[j.name]) for j in jobs}
         if self._key(combined) not in pushed | {self._key(plans)}:
-            push(CoRound("seed", combined, dict(eff), dict(eff),
-                         observe(combined), predict_all(combined)))
+            seed_assignments.append(combined)
+        observe_many(seed_assignments)     # one batched call when possible
+        for assignment in seed_assignments:
+            push(CoRound("seed", assignment, dict(eff), dict(eff),
+                         observe(assignment), predict_all(assignment)))
 
         # Alternating (Gauss-Seidel) best response: each round sweeps the
         # jobs in order, and each sub-step simulates ALL jobs together

@@ -90,6 +90,43 @@ def simulate(specs: Sequence[TensorSpec], plan: MergePlan,
     )
 
 
+def spec_arrays(specs: Sequence[TensorSpec]
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Prefix sums over the backward order: the two arrays every closed
+    form is built from.
+
+    Returns ``(prefix_bytes, prefix_t)`` where ``prefix_bytes`` has L+1
+    entries (``prefix_bytes[j]`` = bytes of tensors 0..j-1, exact in
+    float64 for any realistic model size) and ``prefix_t[j]`` is the
+    ready time of tensor j relative to backward start.  Compute these
+    ONCE per profile and derive every plan's bucket arrays from them
+    (:func:`bucket_arrays`) instead of re-walking the specs per grid
+    point — the hoist behind ``repro.sim.sweep`` and the fleet backend.
+    """
+    nbytes = np.array([s.nbytes for s in specs], dtype=np.float64)
+    t_b = np.array([s.t_b for s in specs], dtype=np.float64)
+    prefix_bytes = np.zeros(len(specs) + 1, dtype=np.float64)
+    np.cumsum(nbytes, out=prefix_bytes[1:])
+    return prefix_bytes, np.cumsum(t_b)
+
+
+def bucket_arrays(prefix_bytes: np.ndarray, prefix_t: np.ndarray,
+                  plan: MergePlan) -> tuple[np.ndarray, np.ndarray]:
+    """Per-bucket ``(nbytes, ready offset)`` arrays from hoisted prefixes.
+
+    Buckets are contiguous index ranges (``MergePlan`` invariant), so a
+    bucket's byte total is a prefix-sum difference — exact, because the
+    prefixes are integer-valued float64 — and its ready offset is the
+    prefix ready time of its last tensor.  O(num_buckets) numpy instead
+    of O(L) Python per evaluation.
+    """
+    if not plan.buckets:
+        return np.zeros(0), np.zeros(0)
+    first = np.array([b[0] for b in plan.buckets], dtype=np.intp)
+    last = np.array([b[-1] for b in plan.buckets], dtype=np.intp)
+    return prefix_bytes[last + 1] - prefix_bytes[first], prefix_t[last]
+
+
 def batched_comm_end(bucket_t: np.ndarray, ready: np.ndarray,
                      bwd_end: np.ndarray | float = 0.0) -> np.ndarray:
     """Vectorized Eq. 7/8 recurrence over arbitrary leading grid axes.

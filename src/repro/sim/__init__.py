@@ -34,10 +34,20 @@ from repro.sim.network import (
     predicted_ring,
     topology_for_cluster,
 )
+from repro.sim.coplan_profiles import make_fleet_jobs
+from repro.sim.fleet import (
+    FleetCase,
+    FleetEvaluator,
+    FleetResult,
+    evaluate_cases,
+    fleet_available,
+    make_case,
+)
 from repro.sim.schedules import (
     BSP,
     DAGSchedule,
     DAGTask,
+    FleetForm,
     LocalSGD,
     OneFoneB,
     PipelinedAllReduce,
@@ -86,7 +96,9 @@ __all__ = [
     "invert_double_binary_trees", "invert_halving_doubling", "invert_model",
     "invert_ring", "predicted_model", "predicted_ring",
     "topology_for_cluster",
-    "BSP", "DAGSchedule", "DAGTask", "LocalSGD", "OneFoneB",
+    "FleetCase", "FleetEvaluator", "FleetResult", "evaluate_cases",
+    "fleet_available", "make_case", "make_fleet_jobs",
+    "BSP", "DAGSchedule", "DAGTask", "FleetForm", "LocalSGD", "OneFoneB",
     "PipelinedAllReduce", "SCHEDULES", "Schedule",
     "SweepGrid", "SweepResult", "closed_form_valid", "run_sweep",
     "Span", "from_chrome_trace", "frontier_spans", "read_chrome_trace",

@@ -1,0 +1,47 @@
+"""Synthetic co-planning fleets: many jobs, mixed schedules, one factory.
+
+The co-planner benchmarks and the fleet-backend tests both need "a
+hundred jobs that look like a real shared cluster" — varied model sizes
+(the paper's Fig. 5 log-uniform tensor shape via ``synthetic_specs``),
+varied link quality, and a mix of execution schedules so a batched
+scoring pass exercises every closed-form kind in one device call.  This
+module is that factory, kept in ``src`` so benchmarks and tests build
+the *same* fleet.
+"""
+
+from __future__ import annotations
+
+from repro.core.coplanner import CoJob
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import make_plan
+from repro.sim.schedules import LocalSGD, OneFoneB, PipelinedAllReduce
+from repro.sim.trace import synthetic_specs
+
+
+def make_fleet_jobs(n_jobs: int, *, seed: int = 0,
+                    mixed_schedules: bool = True) -> tuple[CoJob, ...]:
+    """Build ``n_jobs`` deterministic :class:`CoJob` profiles.
+
+    Job ``i`` gets a log-uniform synthetic profile of 20-35 tensors
+    (seeded ``seed + i``), an affine cost model whose startup/per-byte
+    terms spread ~2x across the fleet (fast and slow links coexist, so
+    makespan is contested), a WFBP seed plan (the static baseline the
+    co-plan must never lose to), and — when ``mixed_schedules`` — a
+    schedule cycling through BSP, 1F1B, pipelined all-reduce and
+    LocalSGD so batched evaluation covers every ``FleetForm`` kind.
+    """
+    if n_jobs < 1:
+        raise ValueError("need >= 1 job")
+    cycle = (None, OneFoneB(micro_batches=4),
+             PipelinedAllReduce(ag_fraction=0.5), LocalSGD(h=2)) \
+        if mixed_schedules else (None,)
+    jobs = []
+    for i in range(n_jobs):
+        specs, t_f = synthetic_specs(20 + (i * 7) % 16, seed=seed + i)
+        model = AllReduceModel(a=200e-6 * (1.0 + (i % 5) / 4.0),
+                               b=4e-9 * (1.0 + (i % 3) / 2.0))
+        jobs.append(CoJob(
+            name=f"job{i:03d}", specs=tuple(specs), model=model, t_f=t_f,
+            schedule=cycle[i % len(cycle)],
+            seed_plans=(make_plan("wfbp", specs, model),)))
+    return tuple(jobs)

@@ -1,0 +1,435 @@
+"""Fleet-scale vectorized simulation backend: one jitted call per grid.
+
+The closed forms in ``core/simulator`` and ``sim/schedules`` are exact on
+their validity domain but were evaluated one (job, N, seed, bandwidth)
+point at a time in Python.  This module turns them into data-parallel
+kernels: every scenario becomes a **case** — a padded-and-masked bucket
+column plus a handful of scalars — and a whole batch of cases (a scaling
+grid, a placement-search scoring pass, a CoPlanner round's candidate
+assignments) is evaluated by ONE jitted jax.numpy kernel:
+
+* axes: bucket arrays are ``[K, C]`` with the scan (bucket) axis
+  **leading** — XLA then fuses each recurrence step into one elementwise
+  op over contiguous ``[C, S, I]`` blocks, which is where the >=10x win
+  over the per-point Python loop comes from; jitter scales are
+  ``[C, S, I]`` (case × seed × iteration) fleet-max values computed on
+  the host (``WorkerProfile.scale`` is seeded per (seed, job, worker,
+  iteration) — irreproducible with device RNG, and shared by every
+  backend anyway);
+* padding: ``K`` is the batch-max bucket count rounded up to a power of
+  two (stable jit cache across nearby plans); masked steps are bitwise
+  no-ops, and a *masked-off* row is distinct from a *real zero-byte
+  bucket* (mask on, duration zero — its ready time still gates the
+  recurrence, exactly like ``AllReduceModel.time(0) == 0``);
+* schedules: the kernel computes all three closed-form shapes —
+  barrier (BSP / OneFoneB tail compression), the DeAR pipelined
+  cross-iteration recurrence, LocalSGD rounds — and selects per case by
+  ``FleetForm.kind``, so heterogeneous batches (a mixed-schedule fleet)
+  still take one device call;
+* precision: everything runs under ``jax.experimental.enable_x64`` so
+  the recurrence arithmetic is float64 like the numpy fast path; the
+  scan recurrence itself is operation-for-operation the numpy one
+  (agreement to well under 1e-9 — only sum *reductions* may
+  re-associate, at ~1 ulp);
+* models: any cost model goes through ``cost_model.as_linear`` — a
+  hierarchical ``PathModel``'s per-link phases flatten to the one (a, b)
+  the closed forms consume (a sum of affine phases is affine), so
+  hierarchical ICI+DCN topologies ride the same kernel.
+
+Validity is the sweep's ``closed_form_valid`` domain: single job on its
+link, sequential issue, no bursts; heterogeneity/jitter only for
+schedules whose :class:`~repro.sim.schedules.FleetForm` says
+``heterogeneous_ok``.  ``run_sweep(backend="fleet")`` dispatches here;
+the numpy path stays as the portable fallback and the event engine as
+the oracle (``tests/test_fleet*.py`` pin all three together at 1e-9).
+
+:class:`FleetEvaluator` is the co-planner face: it scores every
+candidate assignment of a round in one device call, each job under its
+OWN cost model (no cross-job contention — use the engine-backed
+evaluator when contention is the question; this one is for fleet-scale
+seed scoring and placement search, where the model already embeds the
+contention via refit).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, MutableMapping, Sequence
+
+import numpy as np
+
+from repro.core import cost_model
+from repro.core.coplanner import CoJob, CoObservation, JobObservation
+from repro.core.cost_model import as_linear
+from repro.core.planner import MergePlan, TensorSpec
+from repro.core.simulator import bucket_arrays, spec_arrays
+from repro.sim.schedules import FleetForm, Schedule
+
+_KIND = {"barrier": 0, "pipelined": 1, "localsgd": 2}
+_BARRIER, _PIPELINED, _LOCALSGD = 0, 1, 2
+
+
+def fleet_available() -> bool:
+    """True iff jax is importable (the kernel compiles lazily)."""
+    try:
+        import jax  # noqa: F401
+    except Exception:  # pragma: no cover - environment-dependent
+        return False
+    return True
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FleetCase:
+    """One scenario column of the batch: a (specs, plan, model, schedule,
+    scales) point, reduced to the arrays the kernel consumes."""
+
+    bucket_bytes: np.ndarray        # [K_c] float64, per-bucket bytes
+    ready_off: np.ndarray           # [K_c] nominal ready offsets (s)
+    t_f: float                      # forward compute (s)
+    t_b_total: float                # total backward compute (s)
+    a: float                        # flat startup term (s)
+    b: float                        # flat per-byte term (s/B)
+    kind: int = _BARRIER            # _KIND[FleetForm.kind]
+    micro_batches: int = 1          # barrier: OneFoneB tail compression
+    ag_fraction: float = 0.0        # pipelined: deferred share
+    h: int = 1                      # localsgd: steps per round
+    s_max: np.ndarray | None = None  # [S, I] fleet-max scales (None = 1.0)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FleetResult:
+    """Kernel output: per-iteration times and total span per case."""
+
+    t_iter: np.ndarray              # [C, S, iters] seconds
+    span: np.ndarray                # [C, S] run wall time
+
+
+def make_case(specs: Sequence[TensorSpec], plan: MergePlan, model, *,
+              schedule: Schedule | None = None, t_f: float = 0.0,
+              s_max: np.ndarray | None = None,
+              prefix_bytes: np.ndarray | None = None,
+              prefix_t: np.ndarray | None = None,
+              cache: MutableMapping | None = None) -> FleetCase:
+    """Reduce one scenario to a :class:`FleetCase`.
+
+    ``prefix_bytes`` / ``prefix_t`` (``core.simulator.spec_arrays``) can
+    be passed in when many cases share one profile — the sweep computes
+    them once per grid.  ``s_max`` is the fleet-max compute scale per
+    (seed, iteration); rejected when the schedule's closed form is
+    homogeneous-only (``FleetForm.heterogeneous_ok``).
+
+    ``cache`` memoizes the per-plan bucket geometry keyed on
+    ``plan.buckets`` — a grid re-scoring the same few plan structures
+    under many models (every WFBP/single sweep, most DP sweeps) pays the
+    O(num_buckets) Python walk once instead of per point.  The caller
+    must scope one cache to ONE tensor profile (the sweep holds one per
+    grid, :class:`FleetEvaluator` one per job).
+    """
+    form = schedule.fleet_form() if schedule is not None \
+        else FleetForm(kind="barrier")
+    if form is None:
+        raise ValueError(
+            f"schedule {schedule!r} has no fleet form — engine only")
+    geom = cache.get(plan.buckets) if cache is not None else None
+    if geom is None:
+        if plan.num_tensors != len(specs):
+            raise ValueError(
+                f"plan covers {plan.num_tensors} tensors, "
+                f"specs has {len(specs)}")
+        if prefix_bytes is None or prefix_t is None:
+            prefix_bytes, prefix_t = spec_arrays(specs)
+        geom = bucket_arrays(prefix_bytes, prefix_t, plan)
+        if cache is not None:
+            cache[plan.buckets] = geom
+    elif prefix_t is None:
+        _, prefix_t = spec_arrays(specs)
+    bucket_bytes, ready_off = geom
+    sm = None
+    if s_max is not None:
+        sm = np.asarray(s_max, dtype=np.float64)
+        if sm.ndim != 2:
+            raise ValueError(
+                f"s_max must be (seeds, iters)-shaped, got {sm.shape}")
+        if not form.heterogeneous_ok and np.any(sm != 1.0):
+            raise ValueError(
+                f"{schedule.label} closed form is homogeneous-only; "
+                "heterogeneous fleets need the event engine")
+    lin = as_linear(model)
+    return FleetCase(
+        bucket_bytes=bucket_bytes, ready_off=ready_off, t_f=float(t_f),
+        t_b_total=float(prefix_t[-1]) if len(prefix_t) else 0.0,
+        a=float(lin.a), b=float(lin.b), kind=_KIND[form.kind],
+        micro_batches=form.micro_batches, ag_fraction=form.ag_fraction,
+        h=form.h, s_max=sm)
+
+
+# ---------------------------------------------------------------------------
+# The kernel (built lazily so importing this module never needs jax).
+# ---------------------------------------------------------------------------
+
+_KERNEL = None
+
+
+def _get_kernel():
+    global _KERNEL
+    if _KERNEL is not None:
+        return _KERNEL
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def kernel(bucket_bytes, ready_off, mask, a, b, t_f, t_b,
+               m, ag_f, h, kind, s_max, has_pipelined, has_localsgd):
+        # bucket arrays [K, C] (scan axis leading), scalars [C],
+        # s_max [C, S, I].  All float64 under enable_x64.
+        # has_pipelined / has_localsgd are STATIC: a barrier-only batch
+        # (every pure scaling grid) compiles without the pipelined
+        # cross-iteration scan — iters x K extra steps it never reads.
+        iters = s_max.shape[2]
+        dur = a[None, :] + b[None, :] * bucket_bytes
+        # real zero-byte buckets cost 0 (AllReduceModel.time semantics)
+        # but their mask stays on: the ready-time max still applies
+        bt = jnp.where(mask & (bucket_bytes > 0.0), dur, 0.0)
+
+        # -- barrier: Eq. 7/8 with ready times in the last micro-batch's
+        #    1/m tail, scaled by the fleet-max compute scale ------------
+        pair = (t_f + t_b) / m
+        base = (m - 1.0) * pair + t_f / m
+        nominal = base[None, :] + ready_off / m[None, :]    # [K, C]
+        nominal_bwd = base + t_b / m                        # [C]
+
+        def barrier_step(end, xs):
+            bt_k, nom_k, mk = xs
+            upd = jnp.maximum(end, nom_k[:, None, None] * s_max) \
+                + bt_k[:, None, None]
+            return jnp.where(mk[:, None, None], upd, end), None
+
+        end, _ = lax.scan(barrier_step, jnp.zeros_like(s_max),
+                          (bt, nominal, mask))
+        barrier_t = jnp.maximum(end, nominal_bwd[:, None, None] * s_max)
+
+        t_iter = barrier_t
+
+        # -- localsgd: h-1 free steps per round, barrier on sync steps --
+        # (localsgd cases carry m == 1 and s_max == 1, so barrier_t IS
+        # the BSP sync time; truncated final rounds sync at iters-1)
+        if has_localsgd:
+            i_idx = jnp.arange(iters)
+            is_sync = (((i_idx[None, :] + 1) % h[:, None]) == 0) \
+                | (i_idx[None, :] == iters - 1)             # [C, I]
+            local_t = (t_f + t_b)[:, None, None]
+            localsgd_t = jnp.where(is_sync[:, None, :], barrier_t,
+                                   jnp.broadcast_to(local_t,
+                                                    barrier_t.shape))
+            t_iter = jnp.where(kind[:, None, None] == _LOCALSGD,
+                               localsgd_t, t_iter)
+
+        # -- pipelined: DeAR cross-iteration recurrence (homogeneous) ---
+        if has_pipelined:
+            has = mask.any(axis=0)                          # [C]
+            ag_total = ag_f * bt.sum(axis=0)                # [C]
+
+            def pipe_iter(carry, _):
+                S_, ag_done = carry                         # [C] each
+                fwd_end = S_ + t_f
+                bwd_start = jnp.maximum(fwd_end, ag_done)
+                bwd_end = bwd_start + t_b
+
+                def rs_step(end, xs):
+                    bt_k, ro_k, mk = xs
+                    upd = jnp.maximum(end, bwd_start + ro_k) \
+                        + (1.0 - ag_f) * bt_k
+                    return jnp.where(mk, upd, end), None
+
+                rs_end, _ = lax.scan(rs_step, jnp.zeros_like(S_),
+                                     (bt, ready_off, mask))
+                rs_done = jnp.where(has, rs_end, bwd_end)
+                ag_done_n = jnp.where(has, rs_done + ag_total, bwd_end)
+                iter_end = jnp.maximum(ag_done_n, bwd_end)
+                s_next = jnp.maximum(bwd_end, rs_done)
+                return (s_next, ag_done_n), (iter_end - S_, iter_end)
+
+            zero_c = jnp.zeros_like(a)
+            _, (pipe_t, pipe_end) = lax.scan(pipe_iter, (zero_c, zero_c),
+                                             None, length=iters)
+            pipe_tb = jnp.broadcast_to(pipe_t.T[:, None, :],
+                                       barrier_t.shape)
+            t_iter = jnp.where(kind[:, None, None] == _PIPELINED,
+                               pipe_tb, t_iter)
+            # barrier/localsgd iterations abut (span = sum); pipelined
+            # iterations overlap — span is the recurrence's absolute end
+            span = jnp.where(kind[:, None] == _PIPELINED,
+                             pipe_end[-1][:, None], t_iter.sum(axis=-1))
+        else:
+            span = t_iter.sum(axis=-1)
+        return t_iter, span
+
+    _KERNEL = jax.jit(kernel, static_argnums=(12, 13))
+    return _KERNEL
+
+
+def evaluate_cases(cases: Sequence[FleetCase],
+                   iters: int = 1) -> FleetResult:
+    """Evaluate a whole batch of cases in one jitted device call.
+
+    Cases may mix schedules, models and bucket counts; bucket axes are
+    padded to the batch max (next power of two, for jit-cache stability)
+    and masked.  The case axis is padded the same way — fully-masked
+    benign columns, sliced off the result — so batch sizes that differ
+    only within a power-of-two bracket reuse one compiled kernel (a
+    CoPlanner round whose candidate count drifts as the cache fills
+    would otherwise recompile every round).  All cases carrying an
+    ``s_max`` must agree on the seed count; cases without one broadcast
+    a scale of 1.0.
+    """
+    if not cases:
+        raise ValueError("need >= 1 case")
+    if iters < 1:
+        raise ValueError("need >= 1 iteration")
+    if not fleet_available():
+        raise RuntimeError(
+            "fleet backend needs jax; use run_sweep(backend='numpy')")
+    C = len(cases)
+    S = 1
+    for c in cases:
+        if c.s_max is not None:
+            if c.s_max.shape[1] != iters:
+                raise ValueError(
+                    f"s_max covers {c.s_max.shape[1]} iterations, "
+                    f"sweep runs {iters}")
+            if S == 1:
+                S = c.s_max.shape[0]
+            elif c.s_max.shape[0] not in (1, S):
+                raise ValueError(
+                    f"inconsistent seed counts across cases: "
+                    f"{c.s_max.shape[0]} vs {S}")
+    k_max = max((len(c.bucket_bytes) for c in cases), default=0)
+    k_pad = 1 << (max(k_max, 1) - 1).bit_length()
+    c_pad = 1 << (C - 1).bit_length()
+
+    bb = np.zeros((k_pad, c_pad), dtype=np.float64)
+    ro = np.zeros((k_pad, c_pad), dtype=np.float64)
+    mk = np.zeros((k_pad, c_pad), dtype=bool)
+    # padding columns are benign barrier cases: m = h = 1, all else 0
+    scal = {n: np.zeros(c_pad, dtype=np.float64)
+            for n in ("a", "b", "t_f", "t_b", "ag_f")}
+    scal["m"] = np.ones(c_pad, dtype=np.float64)
+    h = np.ones(c_pad, dtype=np.int32)
+    kind = np.zeros(c_pad, dtype=np.int32)
+    sm = np.ones((c_pad, S, iters), dtype=np.float64)
+    for ci, c in enumerate(cases):
+        nk = len(c.bucket_bytes)
+        bb[:nk, ci] = c.bucket_bytes
+        ro[:nk, ci] = c.ready_off
+        mk[:nk, ci] = True
+        scal["a"][ci] = c.a
+        scal["b"][ci] = c.b
+        scal["t_f"][ci] = c.t_f
+        scal["t_b"][ci] = c.t_b_total
+        scal["m"][ci] = c.micro_batches
+        scal["ag_f"][ci] = c.ag_fraction
+        h[ci] = c.h
+        kind[ci] = c.kind
+        if c.s_max is not None:
+            sm[ci] = c.s_max
+    import jax.numpy as jnp
+    from jax.experimental import enable_x64
+    kern = _get_kernel()
+    with enable_x64():
+        t_iter, span = kern(
+            jnp.asarray(bb), jnp.asarray(ro), jnp.asarray(mk),
+            jnp.asarray(scal["a"]), jnp.asarray(scal["b"]),
+            jnp.asarray(scal["t_f"]), jnp.asarray(scal["t_b"]),
+            jnp.asarray(scal["m"]), jnp.asarray(scal["ag_f"]),
+            jnp.asarray(h), jnp.asarray(kind), jnp.asarray(sm),
+            bool((kind == _PIPELINED).any()),
+            bool((kind == _LOCALSGD).any()))
+        return FleetResult(t_iter=np.asarray(t_iter)[:C],
+                           span=np.asarray(span)[:C])
+
+
+# ---------------------------------------------------------------------------
+# Co-planner face: score a whole round of assignments in one call.
+# ---------------------------------------------------------------------------
+
+class FleetEvaluator:
+    """Batched ``CoEvaluate``: one device call per *round* of candidate
+    assignments instead of one Python simulation per assignment.
+
+    Each job is scored under its own cost model on its schedule's closed
+    form — no cross-job link contention is modelled, which is exactly the
+    seed-scoring / placement-search regime (the engine-backed evaluator
+    stays the oracle when contention itself is the question; a refit
+    contended model slots in transparently since only ``job.model`` is
+    read).  ``CoPlanner`` discovers :meth:`batch` via ``getattr`` and
+    routes every round's uncached candidates through it.
+
+    Observed iteration time is ``span / iters`` (for barrier schedules,
+    exactly the closed form; for pipelined, the average realized window
+    including warmup — raise ``iters`` to sharpen the steady state).
+    Samples are the exact per-bucket (nbytes, model time) pairs the
+    closed form charged, with per-link decomposition for ``PathModel``
+    jobs, so a downstream refit reproduces the scoring model.
+    """
+
+    def __init__(self, jobs: Sequence[CoJob], *, iters: int = 8):
+        if iters < 1:
+            raise ValueError("need >= 1 iteration")
+        self.jobs = tuple(jobs)
+        self.iters = int(iters)
+        self._static = {}
+        self._geom: dict[str, dict] = {}
+        for j in self.jobs:
+            pb, pt = spec_arrays(j.specs)
+            self._static[j.name] = (pb, pt, as_linear(j.model))
+            self._geom[j.name] = {}
+        self._sample_cache: dict = {}
+
+    def _job_samples(self, job: CoJob, plan: MergePlan):
+        key = (job.name, plan.buckets)
+        cached = self._sample_cache.get(key)
+        if cached is None:
+            pb, pt, lin = self._static[job.name]
+            geom = self._geom[job.name].get(plan.buckets)
+            nbytes = geom[0] if geom is not None \
+                else bucket_arrays(pb, pt, plan)
+            samples = tuple((int(n), lin.time(n)) for n in nbytes)
+            links: tuple = ()
+            if isinstance(job.model, cost_model.PathModel):
+                per: dict[str, list] = {l: [] for l in job.model.links}
+                for n in nbytes:
+                    for p in job.model.phases:
+                        per[p.link].append((int(n), p.time(n)))
+                links = tuple((l, tuple(v)) for l, v in per.items())
+            cached = (samples, links)
+            self._sample_cache[key] = cached
+        return cached
+
+    def batch(self, assignments: Sequence[Mapping[str, MergePlan]]
+              ) -> list[CoObservation]:
+        cases = []
+        for a in assignments:
+            for j in self.jobs:
+                pb, pt, _ = self._static[j.name]
+                cases.append(make_case(
+                    j.specs, a[j.name], j.model, schedule=j.schedule,
+                    t_f=j.t_f, prefix_bytes=pb, prefix_t=pt,
+                    cache=self._geom[j.name]))
+        res = evaluate_cases(cases, iters=self.iters)
+        out: list[CoObservation] = []
+        nj = len(self.jobs)
+        for ai, a in enumerate(assignments):
+            jobs_obs: dict[str, JobObservation] = {}
+            makespan = 0.0
+            for ji, j in enumerate(self.jobs):
+                sp = float(res.span[ai * nj + ji, 0])
+                makespan = max(makespan, sp)
+                samples, link_samples = self._job_samples(j, a[j.name])
+                jobs_obs[j.name] = JobObservation(
+                    t_iter=sp / self.iters, samples=samples,
+                    link_samples=link_samples)
+            out.append(CoObservation(makespan=makespan, jobs=jobs_obs))
+        return out
+
+    def __call__(self, plans: Mapping[str, MergePlan]) -> CoObservation:
+        return self.batch([plans])[0]

@@ -57,6 +57,41 @@ from repro.sim.events import Latch
 from repro.sim.trace import Span
 
 
+@dataclasses.dataclass(frozen=True)
+class FleetForm:
+    """How a schedule's closed form maps onto the data-parallel kernels.
+
+    The sweep fast path and the jitted fleet backend
+    (``repro.sim.fleet``) evaluate three kernel shapes, selected by
+    ``kind``:
+
+    * ``"barrier"`` — the Eq. 7/8 recurrence with nominal ready times in
+      the last micro-batch's ``1/micro_batches`` tail (BSP is
+      ``micro_batches == 1``).  Exact under heterogeneity/jitter: the
+      per-worker timeline is linear in the compute scale, so the
+      synchronous ready time is the nominal one times the fleet max.
+    * ``"pipelined"`` — the DeAR cross-iteration recurrence with the
+      reduce-scatter fraction ``1 - ag_fraction`` eager and the rest
+      deferred past the boundary.  Homogeneous fleets only.
+    * ``"localsgd"`` — ``h - 1`` communication-free steps per round plus
+      one barrier sync.  Homogeneous fleets only.
+
+    ``heterogeneous_ok`` gates the jitter/straggler domain; schedules the
+    kernels cannot express (``DAGSchedule``, custom subclasses) return
+    ``None`` from :meth:`Schedule.fleet_form` and always take the engine.
+    """
+
+    kind: str                        # "barrier" | "pipelined" | "localsgd"
+    micro_batches: int = 1           # barrier: 1F1B tail compression
+    ag_fraction: float = 0.0         # pipelined: deferred share
+    h: int = 1                       # localsgd: steps per round
+    heterogeneous_ok: bool = True
+
+    def __post_init__(self):
+        if self.kind not in ("barrier", "pipelined", "localsgd"):
+            raise ValueError(f"unknown fleet-form kind {self.kind!r}")
+
+
 class Schedule:
     """How a job's iterations advance.  Subclasses are frozen dataclasses
     (hashable, usable as test fixtures) providing:
@@ -72,7 +107,9 @@ class Schedule:
     * :meth:`predict_t_iter` — the homogeneous, uncontended closed form
       for the steady-state per-iteration time (the schedule-aware analogue
       of ``core.simulator.simulate``; its validity domain is documented in
-      docs/simulator.md).
+      docs/simulator.md);
+    * :meth:`fleet_form` — the :class:`FleetForm` descriptor placing the
+      closed form on the batched kernels (``None`` = engine only).
     """
 
     name: ClassVar[str] = "abstract"
@@ -96,6 +133,11 @@ class Schedule:
     def predict_t_iter(self, specs: Sequence[TensorSpec], plan: MergePlan,
                        model, t_f: float = 0.0) -> float:
         raise NotImplementedError
+
+    def fleet_form(self) -> FleetForm | None:
+        """Batched-kernel descriptor, or ``None`` if only the engine can
+        run this schedule (the conservative default for subclasses)."""
+        return None
 
     @property
     def label(self) -> str:
@@ -321,6 +363,9 @@ class BSP(Schedule):
     def predict_t_iter(self, specs, plan, model, t_f=0.0) -> float:
         return simulate(specs, plan, model, t_f).t_iter
 
+    def fleet_form(self) -> FleetForm:
+        return FleetForm(kind="barrier")
+
 
 # ---------------------------------------------------------------------------
 # OneFoneB: micro-batched 1F1B with gradient accumulation.
@@ -405,6 +450,9 @@ class OneFoneB(Schedule):
             ready = base + float(prefix[bucket[-1]]) / m
             end = max(end, ready) + model.time(nbytes)
         return max(end, t_f + t_b_total)
+
+    def fleet_form(self) -> FleetForm:
+        return FleetForm(kind="barrier", micro_batches=self.micro_batches)
 
 
 # ---------------------------------------------------------------------------
@@ -514,6 +562,11 @@ class LocalSGD(Schedule):
         t_b_total = sum(s.t_b for s in specs)
         sync = simulate(specs, plan, model, t_f).t_iter
         return ((self.h - 1) * (t_f + t_b_total) + sync) / self.h
+
+    def fleet_form(self) -> FleetForm:
+        if self.h == 1:                       # exactly BSP, jitter included
+            return FleetForm(kind="barrier")
+        return FleetForm(kind="localsgd", h=self.h, heterogeneous_ok=False)
 
 
 # ---------------------------------------------------------------------------
@@ -777,6 +830,12 @@ class PipelinedAllReduce(Schedule):
             period = s_next - S
             S = s_next
         return period
+
+    def fleet_form(self) -> FleetForm:
+        if self.ag_fraction == 0.0:           # exactly BSP, jitter included
+            return FleetForm(kind="barrier")
+        return FleetForm(kind="pipelined", ag_fraction=self.ag_fraction,
+                         heterogeneous_ok=False)
 
 
 # ---------------------------------------------------------------------------

@@ -12,10 +12,28 @@ heterogeneous/jittery workers, because with one compute scale per worker
 per iteration the synchronous ready time is just the nominal ready time
 times the fleet's max scale.
 
+**Backends.**  Inside the valid domain the grid is evaluated by one of
+two equivalent fast paths, selected by ``backend=``:
+
+* ``"numpy"`` — the portable per-point closed forms (one
+  ``batched_comm_end`` pass per (N, bandwidth) point);
+* ``"fleet"`` — ``repro.sim.fleet``: every point becomes a padded bucket
+  column and the WHOLE grid is one jitted jax call (the N=2048 × many-
+  bandwidth × many-seed regime; >=10x over numpy on the headline grid,
+  enforced by ``benchmarks/fleet_bench.py``);
+* ``"auto"`` (default) — fleet when jax is importable and the grid has
+  enough elements to amortize the jit compile, numpy otherwise.
+
+``SweepResult.backend`` records which one ran.  Outside the valid
+domain every point takes the serial event engine — recorded per point
+in ``used_engine``, counted in ``fallback_points``, and surfaced as the
+``sweep_fallback_points_total`` metric so large sweeps cannot silently
+degrade to the slow path.
+
 **Schedules.**  The fast path is no longer BSP-only: pass ``schedule=``
 (``repro.sim.schedules``) and the sweep evaluates that schedule's own
 closed form across the grid instead of the engine, on the schedule's
-exactness domain —
+exactness domain — declared by :meth:`Schedule.fleet_form`:
 
 * ``BSP`` / ``OneFoneB(M)``: any heterogeneity/jitter.  1F1B only moves
   *where* gradients land (the 1/M tail of the last micro-batch), and its
@@ -31,14 +49,15 @@ The closed form is *invalid* — and this module falls back to the event
 engine, per point — exactly when collectives can contend for link
 bandwidth: background ``Burst`` traffic, ``comm_mode="concurrent"``, or
 multiple jobs (multi-job sweeps should drive ``ClusterSim`` directly —
-or the co-planner, ``repro.core.coplanner``).  ``SweepResult.used_engine``
-records which path produced each point.
+or the co-planner, ``repro.core.coplanner``).
 
 Planning across the grid goes through ONE incremental
 :class:`repro.core.planner.Planner` — each (N, bandwidth) point is a
 cost-model delta, not a from-scratch O(L^2) replan; the planner's counters
 are surfaced on the result so benchmarks can assert the fast path was
-actually taken.
+actually taken.  Per-profile prefix sums (``core.simulator.spec_arrays``)
+and the worker scale table (:func:`_max_scales_table`) are computed once
+per sweep, not per grid point.
 """
 
 from __future__ import annotations
@@ -50,12 +69,19 @@ import numpy as np
 
 from repro.core import planner
 from repro.core.planner import MergePlan, Planner, TensorSpec
-from repro.core.simulator import batched_comm_end, simulate
+from repro.core.simulator import (batched_comm_end, bucket_arrays,
+                                  spec_arrays)
+from repro.obs.metrics import REGISTRY
+from repro.sim import fleet as fleet_backend
 from repro.sim.engine import ClusterSim, JobSpec
 from repro.sim.network import Burst, FlatTopology
-from repro.sim.schedules import (BSP, LocalSGD, OneFoneB,
-                                 PipelinedAllReduce, Schedule)
+from repro.sim.schedules import (LocalSGD, OneFoneB, PipelinedAllReduce,
+                                 Schedule)
 from repro.sim.workers import make_workers
+
+# grid elements (points × iterations) below which backend="auto" stays on
+# numpy: the jit compile + dispatch would dominate tiny grids
+_FLEET_AUTO_MIN = 512
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +128,8 @@ class SweepResult:
     plans: dict[tuple[int, float], MergePlan]   # (n, bw_scale) -> plan
     planner_scratch: int                # Planner state rebuilds (1 == ideal)
     planner_incremental: int            # incremental replans taken
+    fallback_points: int = 0            # engine-evaluated points × seeds
+    backend: str = "numpy"              # "fleet" | "numpy" | "engine"
 
     def point(self, n: int, bandwidth_scale: float = 1.0,
               seed: int = 0) -> np.ndarray:
@@ -118,78 +146,94 @@ def closed_form_valid(*, comm_mode: str = "sequential",
     """True iff the batched closed form is exact for this configuration.
 
     Link contention (concurrent issue, background bursts, other jobs)
-    always invalidates it.  Per schedule: BSP and OneFoneB tolerate
+    always invalidates it.  The per-schedule domain comes from
+    :meth:`Schedule.fleet_form`: BSP and OneFoneB tolerate
     heterogeneity/jitter (per-worker scales factor out of the synchronous
-    max); PipelinedAllReduce and LocalSGD have homogeneous-only closed
-    forms; anything else (DAGSchedule, custom) needs the engine."""
+    max), PipelinedAllReduce and LocalSGD have homogeneous-only closed
+    forms (their BSP-degenerate points are barrier forms, jitter
+    included), and anything without a fleet form (DAGSchedule, custom)
+    needs the engine."""
     if comm_mode != "sequential" or bursts:
         return False
-    if schedule is None or isinstance(schedule, (BSP, OneFoneB)):
+    if schedule is None:
         return True
-    if isinstance(schedule, PipelinedAllReduce):
-        # the ag_fraction == 0 degenerate IS BSP, jitter included
-        return schedule.ag_fraction == 0.0 or not heterogeneous
-    if isinstance(schedule, LocalSGD):
-        return schedule.h == 1 or not heterogeneous
-    return False
+    form = schedule.fleet_form()
+    if form is None:
+        return False
+    return form.heterogeneous_ok or not heterogeneous
 
 
-def _max_scales(workers, seeds: Sequence[int], iters: int,
-                job: str) -> np.ndarray:
-    """Fleet-max compute scale per (seed, iteration) — the one number the
-    synchronous closed form needs from the whole worker population."""
-    out = np.empty((len(seeds), iters), dtype=np.float64)
+def _fallback_reason(*, comm_mode: str, bursts, schedule,
+                     heterogeneous: bool, force_engine: bool) -> str:
+    """Label for the sweep_fallback_points_total counter."""
+    if force_engine:
+        return "forced"
+    if bursts:
+        return "bursts"
+    if comm_mode != "sequential":
+        return "comm_mode"
+    if schedule is not None and schedule.fleet_form() is None:
+        return "schedule_unsupported"
+    if heterogeneous:
+        return "schedule_heterogeneous"
+    return "unknown"
+
+
+def _max_scales_table(workers, seeds: Sequence[int], iters: int,
+                      job: str) -> np.ndarray:
+    """Running fleet-max compute scale, shape (seeds, iters, workers).
+
+    Entry ``[..., w]`` is the max over workers ``0..w``, so slicing
+    ``[..., n - 1]`` yields the (seed, iteration) fleet max of the first
+    ``n`` workers — one table serves every N in the grid instead of a
+    Python rescan per point.  Exact because a worker's scale is keyed on
+    its own index (independent of fleet size)."""
+    if all(w.jitter_sigma == 0.0 for w in workers):
+        cm = np.maximum.accumulate(
+            np.array([w.slowdown for w in workers], dtype=np.float64))
+        return np.broadcast_to(cm, (len(seeds), iters, len(workers)))
+    table = np.empty((len(seeds), iters, len(workers)), dtype=np.float64)
     for si, seed in enumerate(seeds):
         for it in range(iters):
-            out[si, it] = max(w.scale(seed, job, wi, it)
-                              for wi, w in enumerate(workers))
-    return out
+            for wi, w in enumerate(workers):
+                table[si, it, wi] = w.scale(seed, job, wi, it)
+    return np.maximum.accumulate(table, axis=-1)
 
 
 # ---------------------------------------------------------------------------
-# Per-schedule closed forms over (seed × iteration) blocks.
+# Per-schedule closed forms over (seed × iteration) blocks (numpy backend).
 # ---------------------------------------------------------------------------
 
-def _barrier_t_iter(schedule: Schedule | None, specs, plan: MergePlan,
-                    model, t_f: float, prefix_t: np.ndarray,
+def _barrier_t_iter(schedule: Schedule | None, bucket_t: np.ndarray,
+                    ready_off: np.ndarray, t_f: float, t_b_total: float,
                     s_max: np.ndarray) -> np.ndarray:
     """BSP / OneFoneB block: ``batched_comm_end`` over (seed, iter) with
     the schedule's nominal gradient-ready offsets, scaled by the fleet
     max.  For OneFoneB(M) the ready times sit in the last micro-batch's
     1/M tail (mirroring ``_OneFoneBDriver._timeline``)."""
-    L = len(specs)
-    t_b_total = float(prefix_t[-1]) if L else 0.0
     if isinstance(schedule, OneFoneB) and schedule.micro_batches > 1:
         m = schedule.micro_batches
         pair = (t_f + t_b_total) / m
         base = (m - 1) * pair + t_f / m
-        nominal = base + (prefix_t / m if L else prefix_t)
+        nominal = base + ready_off / m
         nominal_bwd = base + t_b_total / m
     else:
-        nominal = t_f + prefix_t
+        nominal = t_f + ready_off
         nominal_bwd = t_f + t_b_total
-    bucket_t = np.array([model.time(b) for b in plan.bucket_bytes(specs)],
-                        dtype=np.float64)
-    last = np.array([b[-1] for b in plan.buckets], dtype=int)
-    ready = s_max[..., None] * \
-        (nominal[last][None, None, :] if L else np.zeros((1, 1, 0)))
+    ready = s_max[..., None] * nominal[None, None, :]
     return batched_comm_end(bucket_t[None, None, :], ready,
                             s_max * nominal_bwd)
 
 
-def _pipelined_windows(schedule: PipelinedAllReduce, specs,
-                       plan: MergePlan, model, t_f: float,
-                       prefix_t: np.ndarray,
+def _pipelined_windows(ag_fraction: float, bucket_t: np.ndarray,
+                       ready_off: np.ndarray, t_f: float, t_b_total: float,
                        iters: int) -> tuple[np.ndarray, float]:
     """Homogeneous pipelined run: per-iteration ``end - start`` windows
     plus the total span, via the exact cross-iteration recurrence the
     engine executes (``_PipelinedDriver``: frontier at
     ``max(own backward end, last reduce-scatter end)``, all-gathers
     deferred past the boundary)."""
-    f = schedule.ag_fraction
-    L = len(specs)
-    t_b_total = float(prefix_t[-1]) if L else 0.0
-    nbytes = plan.bucket_bytes(specs)
+    f = ag_fraction
     S, ag_done = 0.0, 0.0
     t_iter = np.empty(iters, dtype=np.float64)
     iter_end = 0.0
@@ -197,13 +241,13 @@ def _pipelined_windows(schedule: PipelinedAllReduce, specs,
         fwd_end = S + t_f
         bwd_start = max(fwd_end, ag_done)
         bwd_end = bwd_start + t_b_total
-        if plan.buckets:
+        if len(bucket_t):
             end = 0.0
-            for bucket, nb in zip(plan.buckets, nbytes):
-                ready = bwd_start + float(prefix_t[bucket[-1]])
-                end = max(end, ready) + (1.0 - f) * model.time(nb)
+            for k in range(len(bucket_t)):
+                end = max(end, bwd_start + ready_off[k]) \
+                    + (1.0 - f) * bucket_t[k]
             rs_done = end
-            ag_done = rs_done + sum(f * model.time(nb) for nb in nbytes)
+            ag_done = rs_done + sum(f * bt for bt in bucket_t)
             iter_end = max(ag_done, bwd_end)
         else:
             rs_done = bwd_end
@@ -214,18 +258,19 @@ def _pipelined_windows(schedule: PipelinedAllReduce, specs,
     return t_iter, iter_end
 
 
-def _localsgd_t_iter(schedule: LocalSGD, specs, plan: MergePlan, model,
-                     t_f: float, iters: int) -> np.ndarray:
+def _localsgd_t_iter(h: int, bucket_t: np.ndarray, ready_off: np.ndarray,
+                     t_f: float, t_b_total: float,
+                     iters: int) -> np.ndarray:
     """Homogeneous LocalSGD(H) run: ``H - 1`` communication-free steps of
     ``t_f + t_b`` per round, then one BSP-like sync step (truncated final
     rounds included, mirroring ``_LocalSGDDriver``)."""
-    t_b_total = sum(s.t_b for s in specs)
-    sync_t = simulate(specs, plan, model, t_f).t_iter
+    sync_t = float(batched_comm_end(bucket_t, t_f + ready_off,
+                                    t_f + t_b_total))
     local_t = t_f + t_b_total
     out = np.empty(iters, dtype=np.float64)
     first = 0
     while first < iters:
-        steps = min(schedule.h, iters - first)
+        steps = min(h, iters - first)
         out[first:first + steps - 1] = local_t
         out[first + steps - 1] = sync_t
         first += steps
@@ -242,6 +287,7 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
               comm_mode: str = "sequential",
               schedule: Schedule | None = None,
               force_engine: bool = False,
+              backend: str = "auto",
               topology_factory=None,
               job_name: str = "train") -> SweepResult:
     """Evaluate one profile over a scenario grid.
@@ -255,6 +301,13 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
     schedule's closed form where exact (see :func:`closed_form_valid`),
     through the engine otherwise.
 
+    ``backend`` selects the fast-path implementation on the valid domain:
+    ``"numpy"`` (portable per-point closed forms), ``"fleet"`` (one
+    jitted jax call for the whole grid — raises if jax is missing), or
+    ``"auto"`` (fleet for large grids when jax is importable).  The
+    backend choice never changes *which* points take the engine fallback,
+    only how the fast points are computed.
+
     ``topology_factory(n_workers, bandwidth_scale) -> Topology`` swaps the
     default flat Table-2 topology for an arbitrary one — e.g. a
     hierarchical ICI+DCN pod whose :class:`~repro.core.cost_model.
@@ -267,6 +320,8 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
         raise ValueError("need >= 1 iteration")
     if topology_factory is None and (alpha is None or beta is None):
         raise ValueError("need alpha and beta (or a topology_factory)")
+    if backend not in ("auto", "fleet", "numpy"):
+        raise ValueError(f"unknown backend {backend!r}")
     slow = dict(slow or {})
     heterogeneous = jitter_sigma != 0.0 or \
         any(f != 1.0 for f in slow.values())
@@ -275,20 +330,41 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
                              heterogeneous=heterogeneous) \
         and not force_engine
 
-    L = len(specs)
-    prefix_t = np.cumsum([s.t_b for s in specs]) if L else np.zeros(0)
+    if backend == "fleet":
+        if not fleet_backend.fleet_available():
+            raise RuntimeError(
+                "backend='fleet' requested but jax is not importable")
+        use_fleet = fast
+    elif backend == "auto":
+        n_elements = len(grid.n_workers) * len(grid.bandwidth_scales) \
+            * len(grid.seeds) * iters
+        use_fleet = fast and n_elements >= _FLEET_AUTO_MIN \
+            and fleet_backend.fleet_available()
+    else:
+        use_fleet = False
+
+    # hoisted per-profile state: prefix sums once, worker scale table once
+    prefix_bytes, prefix_t = spec_arrays(specs)
+    t_b_total = float(prefix_t[-1]) if len(specs) else 0.0
+    max_n = max(grid.n_workers)
+    workers_all = make_workers(
+        max_n, slow={i: f for i, f in slow.items() if 0 <= i < max_n},
+        jitter_sigma=jitter_sigma)
+    scale_table = _max_scales_table(workers_all, grid.seeds, iters,
+                                    job_name)
 
     shared: Planner | None = None
     t_iter = np.zeros(grid.shape + (iters,), dtype=np.float64)
     span = np.zeros(grid.shape, dtype=np.float64)
     used_engine = np.zeros(grid.shape[:2], dtype=bool)
     plans: dict[tuple[int, float], MergePlan] = {}
+    cases: list[fleet_backend.FleetCase] = []
+    case_idx: list[tuple[int, int]] = []
+    geom_cache: dict = {}   # plan.buckets -> bucket geometry (one profile)
 
     for ni, n in enumerate(grid.n_workers):
-        workers = make_workers(
-            n, slow={i: f for i, f in slow.items() if 0 <= i < n},
-            jitter_sigma=jitter_sigma)
-        s_max = _max_scales(workers, grid.seeds, iters, job_name)
+        workers = workers_all[:n]
+        s_max = scale_table[:, :, n - 1]
         for bi, bw in enumerate(grid.bandwidth_scales):
             topo = (topology_factory(n, bw) if topology_factory is not None
                     else FlatTopology(algorithm, n, alpha, beta / bw,
@@ -304,23 +380,36 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
                 plan = planner.make_plan(strategy, specs, model)
             plans[(n, bw)] = plan
 
-            if fast:
+            if fast and use_fleet:
+                cases.append(fleet_backend.make_case(
+                    specs, plan, model, schedule=schedule, t_f=t_f,
+                    s_max=s_max, prefix_bytes=prefix_bytes,
+                    prefix_t=prefix_t, cache=geom_cache))
+                case_idx.append((ni, bi))
+            elif fast:
+                bucket_bytes, ready_off = bucket_arrays(
+                    prefix_bytes, prefix_t, plan)
+                bucket_t = np.array([model.time(b) for b in bucket_bytes],
+                                    dtype=np.float64)
                 if isinstance(schedule, PipelinedAllReduce) and \
                         schedule.ag_fraction > 0:
                     vals, total = _pipelined_windows(
-                        schedule, specs, plan, model, t_f, prefix_t, iters)
+                        schedule.ag_fraction, bucket_t, ready_off, t_f,
+                        t_b_total, iters)
                     t_iter[ni, bi] = vals[None, :]
                     span[ni, bi] = total
                 elif isinstance(schedule, LocalSGD) and schedule.h > 1:
-                    vals = _localsgd_t_iter(schedule, specs, plan, model,
-                                            t_f, iters)
+                    vals = _localsgd_t_iter(schedule.h, bucket_t,
+                                            ready_off, t_f, t_b_total,
+                                            iters)
                     t_iter[ni, bi] = vals[None, :]
                     span[ni, bi] = float(vals.sum())
                 else:
                     # BSP, OneFoneB, and every BSP-degenerate parameter
                     # point (ag_fraction == 0, H == 1, M == 1)
                     t_iter[ni, bi] = _barrier_t_iter(
-                        schedule, specs, plan, model, t_f, prefix_t, s_max)
+                        schedule, bucket_t, ready_off, t_f, t_b_total,
+                        s_max)
                     span[ni, bi] = t_iter[ni, bi].sum(axis=-1)
             else:
                 used_engine[ni, bi] = True
@@ -338,8 +427,31 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
                     span[ni, bi, si] = jr.iterations[-1].end - \
                         jr.iterations[0].start
 
+    if cases:
+        # the whole grid in ONE jitted device call
+        fres = fleet_backend.evaluate_cases(cases, iters=iters)
+        for c, (ni, bi) in enumerate(case_idx):
+            t_iter[ni, bi] = fres.t_iter[c]
+            span[ni, bi] = fres.span[c]
+
+    fallback_points = int(used_engine.sum()) * len(grid.seeds)
+    if fallback_points:
+        REGISTRY.counter(
+            "sweep_fallback_points_total",
+            "sweep grid points (× seeds) evaluated by the serial event "
+            "engine instead of a batched closed form, by reason").inc(
+                fallback_points,
+                reason=_fallback_reason(
+                    comm_mode=comm_mode, bursts=bursts, schedule=schedule,
+                    heterogeneous=heterogeneous,
+                    force_engine=force_engine),
+                schedule=schedule.label if schedule else "bsp")
+
     return SweepResult(
         grid=grid, iters=iters, t_iter=t_iter, span=span,
         used_engine=used_engine, plans=plans,
         planner_scratch=shared.scratch_plans if shared else 0,
-        planner_incremental=shared.incremental_updates if shared else 0)
+        planner_incremental=shared.incremental_updates if shared else 0,
+        fallback_points=fallback_points,
+        backend="engine" if not fast else
+                ("fleet" if use_fleet else "numpy"))

@@ -1,0 +1,298 @@
+"""Fleet backend (repro.sim.fleet) correctness.
+
+The contract: on the closed form's validity domain a whole batch of
+scenario cases — mixed schedules, mixed bucket counts, hierarchical
+models, jittered/heterogeneous fleets — evaluated in ONE jitted call
+equals the per-point numpy closed forms AND the event engine to 1e-9,
+regardless of how the batch is padded or composed.  Randomized
+pad-invariance and recurrence-equality properties live in
+tests/test_fleet_props.py (hypothesis).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("jax")
+
+from repro.core.coplanner import CoPlanner
+from repro.core.cost_model import AllReduceModel, PathModel, PathPhase
+from repro.core.planner import MergePlan, make_plan
+from repro.core.simulator import simulate, spec_arrays
+from repro.obs.metrics import REGISTRY
+from repro.sim import scenarios, trace
+from repro.sim.coplan_profiles import make_fleet_jobs
+from repro.sim.fleet import (FleetEvaluator, evaluate_cases,
+                             fleet_available, make_case)
+from repro.sim.schedules import (BSP, DAGSchedule, LocalSGD, OneFoneB,
+                                 PipelinedAllReduce)
+from repro.sim.sweep import SweepGrid, run_sweep
+
+A, B, G = scenarios.PAPER_ALPHA, scenarios.PAPER_BETA, scenarios.PAPER_GAMMA
+
+# each schedule kind on its exactness domain (jitter only where the
+# FleetForm says heterogeneous_ok), mirroring tests/test_sweep.py
+SCHEDULE_POINTS = [
+    (None, 0.25),
+    (BSP(), 0.25),
+    (OneFoneB(4), 0.25),
+    (PipelinedAllReduce(0.5), 0.0),
+    (LocalSGD(3), 0.0),
+    (PipelinedAllReduce(0.0), 0.25),  # degenerates: BSP with jitter
+    (LocalSGD(1), 0.25),
+]
+_IDS = [f"{'bsp' if s is None else s.label}-j{j:g}"
+        for s, j in SCHEDULE_POINTS]
+
+
+def test_fleet_available():
+    assert fleet_available()
+
+
+@pytest.mark.parametrize("schedule,jitter", SCHEDULE_POINTS, ids=_IDS)
+def test_fleet_backend_matches_numpy_and_engine(schedule, jitter):
+    """backend='fleet' == backend='numpy' == engine, t_iter AND span."""
+    specs, t_f = trace.synthetic_specs(18, seed=21)
+    grid = SweepGrid(n_workers=(4, 16), bandwidth_scales=(0.5, 2.0),
+                     seeds=(0, 2))
+    slow = {0: 1.5} if jitter else None
+    kw = dict(alpha=A, beta=B, gamma=G, iters=5, jitter_sigma=jitter,
+              slow=slow, schedule=schedule)
+    fl = run_sweep(specs, t_f, grid, backend="fleet", **kw)
+    np_ = run_sweep(specs, t_f, grid, backend="numpy", **kw)
+    eng = run_sweep(specs, t_f, grid, force_engine=True, **kw)
+    assert fl.backend == "fleet" and not fl.used_engine.any()
+    assert np_.backend == "numpy"
+    np.testing.assert_allclose(fl.t_iter, np_.t_iter, atol=1e-9)
+    np.testing.assert_allclose(fl.span, np_.span, atol=1e-9)
+    np.testing.assert_allclose(fl.t_iter, eng.t_iter, atol=1e-9)
+    np.testing.assert_allclose(fl.span, eng.span, atol=1e-9)
+
+
+def test_backend_dispatch_never_changes_fallback_domain():
+    """Points off the closed-form domain go to the engine no matter the
+    backend, and both backends report them identically."""
+    specs, t_f = trace.synthetic_specs(10, seed=22)
+    grid = SweepGrid(n_workers=(4, 8))
+    kw = dict(alpha=A, beta=B, gamma=G, iters=3, jitter_sigma=0.2,
+              schedule=LocalSGD(3))   # homogeneous-only + jitter
+    fl = run_sweep(specs, t_f, grid, backend="fleet", **kw)
+    np_ = run_sweep(specs, t_f, grid, backend="numpy", **kw)
+    assert fl.used_engine.all() and np_.used_engine.all()
+    assert fl.backend == "engine" and np_.backend == "engine"
+    assert fl.fallback_points == np_.fallback_points \
+        == grid.shape[0] * grid.shape[1] * len(grid.seeds)
+    np.testing.assert_allclose(fl.t_iter, np_.t_iter, atol=1e-9)
+
+
+def test_fallback_counter_increments():
+    specs, t_f = trace.synthetic_specs(8, seed=3)
+    grid = SweepGrid(n_workers=(4,), seeds=(0, 1))
+    c = REGISTRY.counter("sweep_fallback_points_total", "")
+    before = c.value(reason="forced", schedule="bsp")
+    res = run_sweep(specs, t_f, grid, alpha=A, beta=B, gamma=G, iters=2,
+                    force_engine=True)
+    assert res.fallback_points == 2
+    assert c.value(reason="forced", schedule="bsp") == before + 2
+    clean = run_sweep(specs, t_f, grid, alpha=A, beta=B, gamma=G, iters=2)
+    assert clean.fallback_points == 0
+    assert c.value(reason="forced", schedule="bsp") == before + 2
+
+
+def test_auto_backend_thresholds():
+    """auto == numpy below the element threshold, fleet above; results
+    identical either way."""
+    specs, t_f = trace.synthetic_specs(12, seed=4)
+    small = run_sweep(specs, t_f, SweepGrid(n_workers=(4,)), alpha=A,
+                      beta=B, gamma=G, iters=2)
+    assert small.backend == "numpy"
+    grid = SweepGrid(n_workers=(4, 8, 16, 32),
+                     bandwidth_scales=(0.5, 1.0, 2.0, 4.0),
+                     seeds=(0, 1))
+    auto = run_sweep(specs, t_f, grid, alpha=A, beta=B, gamma=G, iters=16)
+    assert auto.backend == "fleet"
+    np_ = run_sweep(specs, t_f, grid, alpha=A, beta=B, gamma=G, iters=16,
+                    backend="numpy")
+    np.testing.assert_allclose(auto.t_iter, np_.t_iter, atol=1e-9)
+
+
+def test_backend_validation():
+    specs, t_f = trace.synthetic_specs(6, seed=5)
+    with pytest.raises(ValueError, match="backend"):
+        run_sweep(specs, t_f, SweepGrid(n_workers=(4,)), alpha=A, beta=B,
+                  gamma=G, backend="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Direct case-level batching.
+# ---------------------------------------------------------------------------
+
+def _barrier_reference(specs, t_f, plan, model):
+    """simulate()'s absolute comm timeline (t_f + relative recurrence)."""
+    return simulate(specs, plan, model, t_f).t_iter
+
+
+def test_mixed_batch_equals_singletons():
+    """A heterogeneous batch — every schedule kind, ragged bucket counts,
+    a PathModel — scores each case exactly as a singleton batch does."""
+    cases = []
+    for i, (schedule, _) in enumerate(SCHEDULE_POINTS):
+        specs, t_f = trace.synthetic_specs(6 + 5 * i, seed=i)
+        model = AllReduceModel(1e-4 * (i + 1), 4e-9) if i % 2 else \
+            PathModel((PathPhase("ici", 1e-5, 1e-10),
+                       PathPhase("dcn", 2e-4, 5e-11, 0.25)))
+        plan = make_plan("wfbp" if i % 2 else "mgwfbp", specs, model)
+        cases.append(make_case(specs, plan, model, schedule=schedule,
+                               t_f=t_f))
+    batched = evaluate_cases(cases, iters=4)
+    for ci, c in enumerate(cases):
+        single = evaluate_cases([c], iters=4)
+        np.testing.assert_array_equal(batched.t_iter[ci],
+                                      single.t_iter[0])
+        np.testing.assert_array_equal(batched.span[ci], single.span[0])
+
+
+def test_case_batch_matches_engine_closed_form():
+    """Case-level evaluation equals simulate() for BSP cases (the Eq. 7/8
+    oracle), including a hierarchical model through as_linear."""
+    for seed, model in ((0, AllReduceModel(2e-4, 5e-9)),
+                        (1, PathModel((PathPhase("ici", 1e-5, 1e-10),
+                                       PathPhase("dcn", 2e-4, 5e-11,
+                                                 0.25))))):
+        specs, t_f = trace.synthetic_specs(14, seed=seed)
+        plan = make_plan("mgwfbp", specs, model)
+        res = evaluate_cases([make_case(specs, plan, model, t_f=t_f)])
+        ref = _barrier_reference(specs, t_f, plan, model)
+        np.testing.assert_allclose(res.t_iter[0, 0, 0], ref, atol=1e-12)
+
+
+def test_zero_byte_bucket_gates_but_costs_nothing():
+    """A real zero-byte bucket has zero duration yet its ready time still
+    gates the recurrence — distinct from a masked padding row."""
+    from repro.core.planner import TensorSpec
+    specs = [TensorSpec("t0", 1 << 20, 1e-3),
+             TensorSpec("t1", 0, 5e-3),        # zero bytes, late ready
+             TensorSpec("t2", 1 << 20, 1e-3)]
+    model = AllReduceModel(1e-3, 1e-9)
+    plan = MergePlan(((0,), (1,), (2,)))
+    res = evaluate_cases([make_case(specs, plan, model, t_f=0.0)])
+    ref = simulate(specs, plan, model, 0.0).t_iter
+    np.testing.assert_allclose(res.t_iter[0, 0, 0], ref, atol=1e-12)
+    # the zero-byte bucket charged nothing: dropping it entirely is
+    # cheaper or equal, never more expensive
+    assert model.time(0) == 0.0
+
+
+def test_make_case_validations():
+    specs, t_f = trace.synthetic_specs(8, seed=7)
+    model = AllReduceModel(1e-4, 1e-9)
+    plan = make_plan("wfbp", specs, model)
+    with pytest.raises(ValueError, match="no fleet form"):
+        make_case(specs, plan, model, schedule=DAGSchedule())
+    with pytest.raises(ValueError, match="covers"):
+        make_case(specs[:-1], plan, model)
+    with pytest.raises(ValueError, match="shaped"):
+        make_case(specs, plan, model, s_max=np.ones(3))
+    with pytest.raises(ValueError, match="homogeneous-only"):
+        make_case(specs, plan, model, schedule=LocalSGD(3),
+                  s_max=np.full((1, 2), 1.5))
+    # barrier forms accept heterogeneity
+    make_case(specs, plan, model, schedule=OneFoneB(4),
+              s_max=np.full((1, 2), 1.5))
+
+
+def test_evaluate_cases_validations():
+    specs, t_f = trace.synthetic_specs(8, seed=7)
+    model = AllReduceModel(1e-4, 1e-9)
+    case = make_case(specs, make_plan("wfbp", specs, model), model)
+    with pytest.raises(ValueError, match=">= 1 case"):
+        evaluate_cases([])
+    with pytest.raises(ValueError, match=">= 1 iteration"):
+        evaluate_cases([case], iters=0)
+    mk = lambda s: make_case(specs, make_plan("wfbp", specs, model),
+                             model, s_max=s)
+    with pytest.raises(ValueError, match="iterations"):
+        evaluate_cases([mk(np.ones((1, 3)))], iters=2)
+    with pytest.raises(ValueError, match="seed counts"):
+        evaluate_cases([mk(np.ones((2, 2))), mk(np.ones((3, 2)))],
+                       iters=2)
+
+
+def test_geometry_cache_reused_across_models():
+    specs, t_f = trace.synthetic_specs(10, seed=9)
+    m1, m2 = AllReduceModel(1e-4, 1e-9), AllReduceModel(2e-4, 8e-9)
+    plan = make_plan("wfbp", specs, m1)
+    cache: dict = {}
+    c1 = make_case(specs, plan, m1, cache=cache)
+    assert len(cache) == 1
+    c2 = make_case(specs, make_plan("wfbp", specs, m2), m2, cache=cache)
+    assert len(cache) == 1                    # same structure: one entry
+    assert c1.bucket_bytes is c2.bucket_bytes   # memoized geometry
+    ref = evaluate_cases([make_case(specs, plan, m2)]).t_iter
+    np.testing.assert_array_equal(evaluate_cases([c2]).t_iter, ref)
+
+
+# ---------------------------------------------------------------------------
+# Co-planner integration.
+# ---------------------------------------------------------------------------
+
+def test_fleet_evaluator_call_equals_batch():
+    jobs = make_fleet_jobs(6)
+    ev = FleetEvaluator(jobs, iters=4)
+    plans = {j.name: j.seed_plans[0] for j in jobs}
+    one = ev(plans)
+    many = ev.batch([plans, plans])
+    for obs in many:
+        assert obs.makespan == one.makespan
+        for name in plans:
+            assert obs.jobs[name].t_iter == one.jobs[name].t_iter
+            assert obs.jobs[name].samples == one.jobs[name].samples
+
+
+def test_coplanner_batched_equals_sequential():
+    """CoPlanner routed through FleetEvaluator.batch converges to the
+    identical result as the same evaluator stripped of its batch hook,
+    and the batched-evals counter moves."""
+    jobs = make_fleet_jobs(8, seed=3)
+    ev = FleetEvaluator(jobs, iters=4)
+    c = REGISTRY.counter("coplanner_batched_evals_total", "")
+    before = c.value()
+    res_b = CoPlanner(jobs, ev, max_rounds=2).run()
+    assert c.value() > before
+    res_s = CoPlanner(jobs, lambda p: ev(p), max_rounds=2).run()
+    assert res_b.makespan == res_s.makespan
+    assert res_b.best_round == res_s.best_round
+    assert len(res_b.rounds) == len(res_s.rounds)
+    assert {n: p.buckets for n, p in res_b.plans.items()} == \
+        {n: p.buckets for n, p in res_s.plans.items()}
+    # the co-plan never loses to a static seed baseline
+    seed_best = min(r.makespan for r in res_b.rounds if r.kind == "seed")
+    assert res_b.makespan <= seed_best + 1e-12
+
+
+def test_fleet_evaluator_mixed_schedules_match_schedule_forms():
+    """Each job's observed t_iter equals its own schedule's closed form
+    (span/iters), not some batch-averaged value."""
+    jobs = make_fleet_jobs(4, seed=11)   # one of each schedule kind
+    iters = 6
+    ev = FleetEvaluator(jobs, iters=iters)
+    plans = {j.name: j.seed_plans[0] for j in jobs}
+    obs = ev(plans)
+    for j in jobs:
+        case = make_case(j.specs, plans[j.name], j.model,
+                         schedule=j.schedule, t_f=j.t_f)
+        span = float(evaluate_cases([case], iters=iters).span[0, 0])
+        assert obs.jobs[j.name].t_iter == pytest.approx(span / iters,
+                                                        abs=1e-15)
+    assert obs.makespan == pytest.approx(
+        max(o.t_iter for o in obs.jobs.values()) * iters, abs=1e-12)
+
+
+def test_make_fleet_jobs_validation_and_determinism():
+    with pytest.raises(ValueError):
+        make_fleet_jobs(0)
+    a = make_fleet_jobs(5, seed=2)
+    b = make_fleet_jobs(5, seed=2)
+    assert [j.name for j in a] == [j.name for j in b]
+    for ja, jb in zip(a, b):
+        assert ja.specs == jb.specs
+        assert ja.seed_plans[0].buckets == jb.seed_plans[0].buckets

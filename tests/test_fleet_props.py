@@ -1,0 +1,93 @@
+"""Fleet-kernel property tests; skipped without the real hypothesis
+package (and without jax, which the kernel needs)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+pytest.importorskip("jax", reason="fleet kernel needs jax")
+
+import hypothesis  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+
+from repro.core.cost_model import AllReduceModel  # noqa: E402
+from repro.core.planner import MergePlan, TensorSpec, make_plan  # noqa: E402
+from repro.core.simulator import simulate  # noqa: E402
+from repro.sim.fleet import evaluate_cases, make_case  # noqa: E402
+from repro.sim.schedules import (BSP, LocalSGD, OneFoneB,  # noqa: E402
+                                 PipelinedAllReduce)
+
+
+def _random_scenario(rng, *, allow_zero_bytes=True):
+    L = int(rng.integers(1, 16))
+    lo = 0 if allow_zero_bytes else 1
+    specs = [TensorSpec(f"t{i}", int(rng.integers(lo, 1 << 22)),
+                        float(rng.uniform(0, 5e-3))) for i in range(L)]
+    model = AllReduceModel(float(rng.uniform(0, 2e-3)),
+                           float(rng.uniform(1e-11, 1e-8)))
+    t_f = float(rng.uniform(0, 0.01))
+    # random contiguous partition, not a planner output: padding and
+    # masking must hold for ANY legal plan shape
+    cuts = sorted(rng.choice(L, size=int(rng.integers(0, L)),
+                             replace=False))
+    bounds = [0] + [int(c) for c in cuts if c] + [L]
+    plan = MergePlan(tuple(tuple(range(a, b))
+                           for a, b in zip(bounds, bounds[1:])))
+    return specs, t_f, plan, model
+
+
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_fleet_bsp_matches_simulate(seed):
+    """One BSP case through the jitted kernel == the Eq. 7/8 oracle,
+    zero-byte tensors included."""
+    rng = np.random.default_rng(seed)
+    specs, t_f, plan, model = _random_scenario(rng)
+    ref = simulate(specs, plan, model, t_f).t_iter
+    res = evaluate_cases([make_case(specs, plan, model, t_f=t_f)],
+                         iters=2)
+    np.testing.assert_allclose(res.t_iter[0, 0], [ref, ref], atol=1e-9)
+    assert float(res.span[0, 0]) == pytest.approx(2 * ref, abs=1e-9)
+
+
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_fleet_padding_invariance(seed):
+    """A case's result never depends on its batch-mates: evaluating it
+    alone (small K/C padding) equals evaluating it alongside cases with
+    far more buckets (large padding) — for every schedule kind."""
+    rng = np.random.default_rng(seed)
+    scen = [_random_scenario(rng) for _ in range(4)]
+    schedules = [None, OneFoneB(int(rng.integers(1, 5))),
+                 PipelinedAllReduce(float(rng.uniform(0.0, 1.0))),
+                 LocalSGD(int(rng.integers(1, 5)))]
+    # a wide ragged filler so batch K-padding differs from singleton's
+    big_specs = [TensorSpec(f"b{i}", 1 << 12, 1e-4) for i in range(40)]
+    big_model = AllReduceModel(1e-4, 1e-9)
+    filler = make_case(big_specs, make_plan("wfbp", big_specs, big_model),
+                       big_model)
+    cases = [make_case(s, p, m, schedule=sch, t_f=tf)
+             for (s, tf, p, m), sch in zip(scen, schedules)] + [filler]
+    batched = evaluate_cases(cases, iters=3)
+    for ci, c in enumerate(cases):
+        alone = evaluate_cases([c], iters=3)
+        np.testing.assert_array_equal(batched.t_iter[ci],
+                                      alone.t_iter[0])
+        np.testing.assert_array_equal(batched.span[ci], alone.span[0])
+
+
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_fleet_heterogeneous_barrier_matches_scaled_simulate(seed):
+    """With a constant fleet-max scale s, the barrier recurrence equals
+    simulate() on compute-stretched inputs (t_b and t_f scaled by s) —
+    the closed form's definition of heterogeneity."""
+    rng = np.random.default_rng(seed)
+    specs, t_f, plan, model = _random_scenario(rng)
+    s = float(rng.uniform(1.0, 2.5))
+    stretched = [TensorSpec(x.name, x.nbytes, x.t_b * s) for x in specs]
+    ref = simulate(stretched, plan, model, t_f * s).t_iter
+    res = evaluate_cases(
+        [make_case(specs, plan, model, t_f=t_f,
+                   s_max=np.full((1, 1), s))], iters=1)
+    np.testing.assert_allclose(res.t_iter[0, 0, 0], ref, atol=1e-9)
