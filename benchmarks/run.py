@@ -34,6 +34,13 @@ Prints ``name,us_per_call,derived`` CSV rows (the harness contract).
                      closed forms enforced on the N=4..2048 headline
                      grid, plus a 100-job co-planning round scored in
                      one device call (own CI step via ``--fleet``)
+  whatif_bench     — batched planning + what-if serving: >= 10x
+                     planning-stage speedup over per-point
+                     plan_dp_optimal on a 256-case L=512 batch, a
+                     100-job plan+score round faster than the PR-9
+                     score-only path, and warm-snapshot query bursts
+                     pinned to one plan + one evaluate kernel call via
+                     the obs counters (own CI step via ``--whatif``)
   kernels_bench    — kernels  (structural tile/bandwidth notes)
   roofline         — EXPERIMENTS.md §Roofline terms from dry-run artifacts
 
@@ -63,6 +70,7 @@ BENCH_JSON = {
     "faults": "BENCH_faults.json",
     "real_loop": "BENCH_real_loop.json",
     "fleet": "BENCH_fleet.json",
+    "whatif": "BENCH_whatif.json",
 }
 
 # --emit-metrics artifact: a snapshot of the process-local metrics
@@ -114,6 +122,11 @@ def main() -> None:
         # the fleet-backend speedup gate: wall-clock sensitive, so it
         # runs alone (no jit-cache or CPU contention from other suites)
         suites = [("fleet", fleet_bench.run)]
+    if "--whatif" in sys.argv:
+        # batched planning + what-if serving gates: also wall-clock
+        # sensitive, also its own CI step
+        from benchmarks import whatif_bench
+        suites = [("whatif", whatif_bench.run)]
     print("name,us_per_call,derived")
     failed = 0
     for name, fn in suites:

@@ -1,6 +1,7 @@
 """Render a flight-recorder JSONL into a terminal triage summary.
 
-    PYTHONPATH=src python scripts/obs_report.py <records.jsonl>
+    PYTHONPATH=src python scripts/obs_report.py <records.jsonl> \
+        [metrics.json]
 
 Per job: step-time percentiles (p50/p95/p99), comm/compute overlap
 fraction, per-link utilization over the job's span; then a recovery
@@ -10,10 +11,19 @@ recoveries with MTTR, goodput, per-fault-kind counts — see
 Input is whatever ``FlightRecorder.write`` (or
 ``repro.obs.recorder.write_jsonl``) produced — simulator runs and real
 instrumented train steps share one schema, so one report covers both.
+
+The optional second argument is a metrics-registry snapshot
+(``benchmarks/run.py --emit-metrics`` writes one as
+``BENCH_metrics.json``); the report then adds a **planning
+amortization** section — how many candidate assignments each batched
+co-planner evaluation amortized (``coplanner_batched_eval_size``),
+batched-DP planning volume, fleet-kernel call counts, geometry-cache
+hit rates, and the what-if serving counters/latency.
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 
@@ -125,9 +135,70 @@ def recovery_summary(records) -> list[str]:
     return lines
 
 
-def render(path: str) -> str:
+def _series(metrics: dict, name: str) -> dict:
+    return metrics.get(name, {}).get("series", {})
+
+
+def _total(metrics: dict, name: str) -> float:
+    return sum(_series(metrics, name).values())
+
+
+def _hist_line(label: str, h: dict) -> str:
+    count = h.get("count", 0)
+    mean = h["sum"] / count if count else 0.0
+    return (f"  {label:<28} n={count}  mean={mean:g}  "
+            f"min={h.get('min', 0):g}  max={h.get('max', 0):g}")
+
+
+def amortization_summary(metrics: dict) -> list[str]:
+    """Planning-stage amortization from a metrics-registry snapshot:
+    batched evaluations/planning, kernel calls, caches, what-if serving."""
+    lines: list[str] = []
+    batched = _total(metrics, "coplanner_batched_evals_total")
+    if batched:
+        lines.append(f"  batched candidate evals      {batched:g} "
+                     f"assignments total")
+    for key, h in sorted(
+            _series(metrics, "coplanner_batched_eval_size").items()):
+        lines.append(_hist_line(
+            "assignments / batched eval" + (f" [{key}]" if key else ""),
+            h))
+    for key, v in sorted(_series(metrics,
+                                 "fleet_plan_cases_total").items()):
+        lines.append(f"  batched-DP plans [{key or 'all'}]   {v:g}")
+    kernel = _series(metrics, "fleet_kernel_calls_total")
+    if kernel:
+        lines.append("  fleet kernel calls           " + "  ".join(
+            f"{k}={v:g}" for k, v in sorted(kernel.items())))
+    hits = _total(metrics, "fleet_geom_cache_hits_total")
+    evict = _total(metrics, "fleet_geom_cache_evictions_total")
+    if hits or evict:
+        lines.append(f"  geometry cache               hits={hits:g}  "
+                     f"evictions={evict:g}")
+    queries = _series(metrics, "whatif_queries_total")
+    if queries:
+        served = sum(queries.values())
+        cached = _total(metrics, "whatif_cache_hits_total")
+        lines.append("  what-if queries              " + "  ".join(
+            f"{k}={v:g}" for k, v in sorted(queries.items())))
+        lines.append(f"  what-if cache                hits={cached:g} "
+                     f"({cached / served:.1%} of {served:g} queries)")
+    for key, h in sorted(_series(metrics,
+                                 "whatif_latency_seconds").items()):
+        lines.append(_hist_line(
+            "what-if ask() seconds" + (f" [{key}]" if key else ""), h))
+    return ["planning amortization:"] + lines if lines else []
+
+
+def render(path: str, metrics_path: str | None = None) -> str:
     records = read_jsonl(path)
     out = [f"flight recorder: {path} ({len(records)} records)", ""]
+    if metrics_path is not None:
+        with open(metrics_path) as f:
+            amort = amortization_summary(json.load(f))
+        if amort:
+            out.extend(amort)
+            out.append("")
     for key, its in sorted(_group(records).items()):
         out.extend(job_summary(key, its))
         out.append("")
@@ -148,10 +219,10 @@ def render(path: str) -> str:
 
 
 def main(argv: list[str]) -> int:
-    if len(argv) != 2:
+    if len(argv) not in (2, 3):
         print(__doc__)
         return 2
-    print(render(argv[1]))
+    print(render(argv[1], argv[2] if len(argv) == 3 else None))
     return 0
 
 

@@ -217,7 +217,25 @@ class CoPlanner:
     of a round is then scored in ONE call
     (``repro.sim.fleet.FleetEvaluator`` turns a 100-job seed round into
     a single jitted device pass); results are identical to the
-    sequential path by the determinism contract.  ``damping`` weights each refit against
+    sequential path by the determinism contract.
+
+    ``response_mode`` selects the best-response inner loop:
+
+    * ``"sweep"`` (default) — alternating Gauss-Seidel: one evaluation,
+      one refit, one incremental replan per job per sub-step.  N=1 is
+      round-for-round the PR-2 fixpoint (pinned by tests) — this mode's
+      behavior is frozen.
+    * ``"batched"`` — one *fleet-batched* round: refit EVERY job from
+      the incumbent observation, generate every job's response plan in
+      ONE batched-DP call (``repro.sim.fleet.plan_cases``), then score
+      all single-change candidates plus the all-changes response through
+      ONE batched evaluation, and move to the best candidate.  Same
+      seed-candidate guarantee, same incumbent-keeps-best acceptance;
+      the per-round device-call count stops scaling with fleet size
+      (plan + score each one call), which is the fleet-scale regime —
+      at N=1 the two modes coincide step for step.
+
+    ``damping`` weights each refit against
     the previous effective model (suppressing the two-cycle oscillation a
     full-step update can fall into — now per job).  With
     ``shared_model=True`` jobs that declare their ``links`` are refit
@@ -230,6 +248,7 @@ class CoPlanner:
     def __init__(self, jobs: Sequence[CoJob], evaluate: CoEvaluate, *,
                  max_rounds: int = 5, damping: float = 0.5,
                  shared_model: bool = False,
+                 response_mode: str = "sweep",
                  initial_plans: Mapping[str, MergePlan] | None = None,
                  initial_models: Mapping[str, AllReduceModel] | None = None,
                  recorder=None):
@@ -237,6 +256,8 @@ class CoPlanner:
             raise ValueError(f"damping must be in (0, 1], got {damping}")
         if max_rounds < 1:
             raise ValueError("need >= 1 round")
+        if response_mode not in ("sweep", "batched"):
+            raise ValueError(f"unknown response_mode {response_mode!r}")
         names = [j.name for j in jobs]
         if not names:
             raise ValueError("need >= 1 job")
@@ -263,6 +284,7 @@ class CoPlanner:
         self.max_rounds = max_rounds
         self.damping = damping
         self.shared_model = shared_model
+        self.response_mode = response_mode
         self.initial_plans = dict(initial_plans or {})
         self.initial_models = dict(initial_models or {})
         # optional repro.obs.recorder.FlightRecorder for round events
@@ -289,6 +311,15 @@ class CoPlanner:
                 if link in pool:
                     pool[link].extend(pairs)
         return pool
+
+    def _batch_replan(self, models: Mapping[str, AllReduceModel]
+                      ) -> dict[str, MergePlan]:
+        """Every job's best-response plan under its current effective
+        model, via ONE batched-DP kernel call (step 3 at fleet scale)."""
+        from repro.sim import fleet as fleet_backend   # local: no cycle
+        planned = fleet_backend.plan_batched(
+            [(j.specs, models[j.name]) for j in self.jobs])
+        return {j.name: p for j, p in zip(self.jobs, planned)}
 
     def _refit(self, obs: CoObservation, eff: dict[str, AllReduceModel],
                job: CoJob) -> None:
@@ -332,8 +363,15 @@ class CoPlanner:
 
     def run(self) -> CoPlanResult:
         jobs = self.jobs
-        planners = {j.name: Planner(list(j.specs), j.model) for j in jobs}
-        plans = {j.name: planners[j.name].plan() for j in jobs}
+        if self.response_mode == "batched":
+            # round-0 exclusive-link plans for the whole fleet in one
+            # batched-DP call — no per-job Python planner at all
+            planners: dict[str, Planner] = {}
+            plans = self._batch_replan({j.name: j.model for j in jobs})
+        else:
+            planners = {j.name: Planner(list(j.specs), j.model)
+                        for j in jobs}
+            plans = {j.name: planners[j.name].plan() for j in jobs}
         eff = {j.name: j.model for j in jobs}
         # warm start (job churn): the incumbent assignment/models replace
         # the exclusive-link round-0 state, so the loop re-enters best
@@ -387,6 +425,11 @@ class CoPlanner:
                 "coplanner_batched_evals_total",
                 "candidate assignments scored through a batched "
                 "evaluate() instead of one-by-one").inc(len(todo))
+            REGISTRY.histogram(
+                "coplanner_batched_eval_size",
+                "candidate assignments per batched evaluate() call — "
+                "the planning-stage amortization factor").observe(
+                    len(todo))
 
         def predict_all(assignment: Mapping[str, MergePlan]
                         ) -> dict[str, float]:
@@ -449,6 +492,53 @@ class CoPlanner:
         # makespan.  With one job, a sweep IS the PR-2 fixpoint round.
         seen: set[tuple] = {self._key(plans)}
         converged = False
+        if self.response_mode == "batched":
+            # Fleet-batched (Jacobi-flavored) best response: per round,
+            # ONE joint observation refits every job, ONE batched-DP call
+            # plans every job's response, and ONE batched evaluation
+            # scores all single-change candidates plus the all-changes
+            # response — then the loop moves to the best-scoring
+            # candidate.  Moving one device call per round (instead of
+            # one evaluation per job sub-step) is what makes 100-job
+            # rounds serve online; the single-change candidates keep the
+            # alternating flavor (the winner is usually one job's
+            # response to the incumbent), while the all-changes candidate
+            # catches the fleets where simultaneous movement wins.
+            for _ in range(self.max_rounds):
+                obs = observe(plans)                   # cached on re-entry
+                planned_under = dict(eff)
+                for j in jobs:
+                    self._refit(obs, eff, j)
+                push(CoRound("response", dict(plans), dict(eff),
+                             planned_under, obs, predict_all(plans)))
+                responses = self._batch_replan(eff)
+                moved = [j.name for j in jobs
+                         if responses[j.name].buckets
+                         != plans[j.name].buckets]
+                if not moved:
+                    converged = True                   # joint fixed point
+                    break
+                candidates = [{**plans, n: responses[n]} for n in moved]
+                if len(moved) > 1:
+                    candidates.append(
+                        {**plans, **{n: responses[n] for n in moved}})
+                observe_many(candidates)   # one batched evaluation
+                for cand in candidates:
+                    push(CoRound("response", cand, dict(eff), dict(eff),
+                                 observe(cand), predict_all(cand)))
+                plans = dict(min(candidates,
+                                 key=lambda c: observe(c).makespan))
+                k = self._key(plans)
+                if k in seen:
+                    converged = True       # deterministic cycle
+                    break
+                seen.add(k)
+            best = rounds[best_round]
+            return CoPlanResult(plans=dict(best.plans),
+                                models=dict(best.models),
+                                rounds=tuple(rounds), converged=converged,
+                                best_round=best_round)
+
         for _ in range(self.max_rounds):
             changed = False
             for j in jobs:
@@ -483,16 +573,19 @@ class CoPlanner:
 
 def coplan(jobs: Sequence[CoJob], evaluate: CoEvaluate, *,
            max_rounds: int = 5, damping: float = 0.5,
-           shared_model: bool = False) -> CoPlanResult:
+           shared_model: bool = False,
+           response_mode: str = "sweep") -> CoPlanResult:
     """One-shot convenience wrapper around :class:`CoPlanner`."""
     return CoPlanner(jobs, evaluate, max_rounds=max_rounds, damping=damping,
-                     shared_model=shared_model).run()
+                     shared_model=shared_model,
+                     response_mode=response_mode).run()
 
 
 def coplan_incremental(incumbent: CoPlanResult, jobs: Sequence[CoJob],
                        evaluate: CoEvaluate, *, max_rounds: int = 5,
                        damping: float = 0.5,
-                       shared_model: bool = False) -> CoPlanResult:
+                       shared_model: bool = False,
+                       response_mode: str = "sweep") -> CoPlanResult:
     """Re-plan after job arrival/departure from an incumbent co-plan.
 
     ``jobs`` is the NEW fleet (arrivals included, departures dropped);
@@ -517,4 +610,5 @@ def coplan_incremental(incumbent: CoPlanResult, jobs: Sequence[CoJob],
               if n in plans and _models_compatible(m, names[n].model)}
     return CoPlanner(jobs, evaluate, max_rounds=max_rounds,
                      damping=damping, shared_model=shared_model,
+                     response_mode=response_mode,
                      initial_plans=plans, initial_models=models).run()

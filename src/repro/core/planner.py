@@ -701,7 +701,12 @@ def make_plan(strategy: str, specs: Sequence[TensorSpec],
     """Build a plan from a strategy string.
 
     ``wfbp`` | ``single`` | ``mgwfbp`` | ``dp_optimal`` | ``dp_incremental``
-    | ``fixed:<bytes>``.
+    | ``dp_batched`` | ``fixed:<bytes>``.
+
+    ``dp_batched`` routes through the fleet backend's batched DP kernel
+    (``repro.sim.fleet.plan_batched``) — same optimum, bucket-for-bucket
+    equal to ``dp_optimal``; pointless for ONE plan (use it to amortize a
+    batch) but exposed here so sweeps and configs can name it.
     """
     if strategy == "wfbp":
         return plan_wfbp(specs)
@@ -717,6 +722,9 @@ def make_plan(strategy: str, specs: Sequence[TensorSpec],
         return plan_dp_optimal(specs, model)
     if strategy == "dp_incremental":
         return plan_incremental(specs, model)
+    if strategy == "dp_batched":
+        from repro.sim.fleet import plan_batched  # local import: no cycle
+        return plan_batched([(specs, model)])[0]
     raise ValueError(f"unknown merge strategy {strategy!r}")
 
 

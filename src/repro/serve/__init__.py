@@ -1,2 +1,4 @@
 from repro.serve.engine import ServeEngine, build_serve_step
 from repro.serve import sampling
+from repro.serve.whatif import (FleetSnapshot, WhatIfAnswer, WhatIfQuery,
+                                WhatIfServer)

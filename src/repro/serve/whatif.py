@@ -1,0 +1,393 @@
+"""Online what-if serving against a live fleet snapshot.
+
+The fleet backend (``repro.sim.fleet``) made *evaluation* one device
+call and *planning* one device call; this module puts an online query
+surface on top.  A :class:`FleetSnapshot` freezes what the scheduler
+currently believes about a running fleet — the jobs, their incumbent
+merge plans, and their FITTED per-job/per-link cost models (the output
+of a :class:`~repro.core.coplanner.CoPlanner` run or a live refit loop)
+— and :class:`WhatIfServer` answers hypothetical-change questions
+against it:
+
+* :meth:`~WhatIfServer.add_job` — admit this job: new joint makespan?
+* :meth:`~WhatIfServer.remove_job` — drain that job: what remains?
+* :meth:`~WhatIfServer.scale_bandwidth` — give a job k× bandwidth
+  (uplink upgrade / traffic-class change): is the replan worth it?
+* :meth:`~WhatIfServer.move_job` — place the job on a different path
+  (its candidate placement's cost model): makespan there?
+* :meth:`~WhatIfServer.resize` — elastic resize: new tensor profile
+  and/or forward time for one job.
+
+Every answer is a *predicted joint makespan* under the snapshot's
+fitted models — the same per-job independent scoring regime as
+:class:`~repro.sim.fleet.FleetEvaluator` (each job under its own model,
+contention embedded by the fit; the event engine stays the oracle when
+cross-job coupling itself is the question).
+
+**Why it serves.**  Warming a snapshot scores the incumbent fleet once
+(one ``evaluate_cases`` call) and keeps the per-job spans.  A query
+then only has to (re)plan and (re)score the jobs it *touches* — one
+changed job, usually — and a whole burst of queries batches into ONE
+``plan_cases`` call plus ONE ``evaluate_cases`` call, no matter how
+many jobs the snapshot holds and with no per-job Python planning loop
+(``benchmarks/run.py --whatif`` pins that with the obs counters).
+Answers are memoized under a key that includes the snapshot
+**fingerprint** — a content hash of jobs, plans, models and telemetry
+shape — so a cache entry can never survive a fleet change it should
+not: a new snapshot has a new fingerprint and misses cleanly.
+
+Counters/histograms: ``whatif_queries_total`` (by kind),
+``whatif_cache_hits_total``, ``whatif_latency_seconds``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Mapping, Sequence
+
+from repro.core.coplanner import CoJob, CoPlanResult
+from repro.core.cost_model import AllReduceModel, as_linear
+from repro.core.planner import MergePlan, TensorSpec
+from repro.core.simulator import spec_arrays
+from repro.obs.metrics import REGISTRY
+from repro.sim import fleet as fleet_backend
+
+
+def _model_key(model) -> tuple[float, float]:
+    """The (a, b) the kernels consume — a PathModel flattens here too."""
+    lin = as_linear(model)
+    return (float(lin.a), float(lin.b))
+
+
+def _job_fingerprint(job: CoJob, plan: MergePlan, model) -> tuple:
+    pb, pt = spec_arrays(job.specs)
+    return (job.name, fleet_backend.profile_fingerprint(pb, pt),
+            plan.buckets, _model_key(model), float(job.t_f),
+            job.schedule.label if job.schedule is not None else "bsp")
+
+
+class FleetSnapshot:
+    """An immutable view of a live fleet: jobs, incumbent plans, fitted
+    models, and a content fingerprint over all of it.
+
+    ``models`` are the *effective* (fitted) models queries should be
+    answered under — typically ``CoPlanResult.models``; a job missing
+    from the mapping falls back to its exclusive-link ``job.model``.
+    ``plans`` likewise default to a batched-DP plan under the job's
+    effective model (one ``plan_cases`` call for all defaults).
+    """
+
+    def __init__(self, jobs: Sequence[CoJob], *,
+                 plans: Mapping[str, MergePlan] | None = None,
+                 models: Mapping[str, AllReduceModel] | None = None,
+                 iters: int = 8):
+        if not jobs:
+            raise ValueError("need >= 1 job")
+        names = [j.name for j in jobs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate job names: {names}")
+        if iters < 1:
+            raise ValueError("need >= 1 iteration")
+        self.jobs = tuple(jobs)
+        self.iters = int(iters)
+        self.models = {j.name: (models or {}).get(j.name, j.model)
+                       for j in self.jobs}
+        plans = dict(plans or {})
+        missing = [j for j in self.jobs if j.name not in plans]
+        if missing:
+            planned = fleet_backend.plan_batched(
+                [(j.specs, self.models[j.name]) for j in missing])
+            plans.update({j.name: p for j, p in zip(missing, planned)})
+        self.plans = {j.name: plans[j.name] for j in self.jobs}
+        for j in self.jobs:
+            if self.plans[j.name].num_tensors != len(j.specs):
+                raise ValueError(
+                    f"plan for {j.name!r} covers "
+                    f"{self.plans[j.name].num_tensors} tensors, "
+                    f"job has {len(j.specs)}")
+        h = hashlib.blake2b(digest_size=16)
+        h.update(str(self.iters).encode())
+        for j in self.jobs:
+            h.update(repr(_job_fingerprint(
+                j, self.plans[j.name], self.models[j.name])).encode())
+        #: telemetry fingerprint — cache keys embed it, so answers can
+        #: never leak across fleet states
+        self.fingerprint = h.hexdigest()
+        self._spans: dict[str, float] | None = None
+
+    @classmethod
+    def from_coplan(cls, jobs: Sequence[CoJob], result: CoPlanResult, *,
+                    iters: int = 8) -> "FleetSnapshot":
+        """Freeze a co-plan's incumbent assignment and fitted models."""
+        return cls(jobs, plans=dict(result.plans),
+                   models=dict(result.models), iters=iters)
+
+    def job(self, name: str) -> CoJob:
+        for j in self.jobs:
+            if j.name == name:
+                return j
+        raise KeyError(f"no job {name!r} in snapshot")
+
+    def warm(self) -> Mapping[str, float]:
+        """Baseline per-job spans, scored once (one device call).
+
+        Jobs are independent under the fitted-model regime, so a query
+        reuses every untouched job's baseline span — only the jobs a
+        query changes are re-scored."""
+        if self._spans is None:
+            cases = [fleet_backend.make_case(
+                j.specs, self.plans[j.name], self.models[j.name],
+                schedule=j.schedule, t_f=j.t_f) for j in self.jobs]
+            res = fleet_backend.evaluate_cases(cases, iters=self.iters)
+            self._spans = {j.name: float(res.span[i, 0])
+                           for i, j in enumerate(self.jobs)}
+        return self._spans
+
+    @property
+    def makespan(self) -> float:
+        """Joint makespan of the incumbent fleet (warms the snapshot)."""
+        return max(self.warm().values())
+
+
+@dataclasses.dataclass(frozen=True)
+class WhatIfQuery:
+    """One hypothetical change (build via the :class:`WhatIfServer`
+    constructors or directly; unused fields stay None)."""
+
+    kind: str                                   # add_job | remove_job |
+                                                # scale_bandwidth |
+                                                # move_job | resize
+    name: str                                   # target job name
+    job: CoJob | None = None                    # add_job: the candidate
+    plan: MergePlan | None = None               # add_job: optional fixed plan
+    model: AllReduceModel | None = None         # move_job: target path model
+    scale: float | None = None                  # scale_bandwidth factor
+    specs: tuple[TensorSpec, ...] | None = None  # resize: new profile
+    t_f: float | None = None                    # resize: new forward time
+
+
+@dataclasses.dataclass(frozen=True)
+class WhatIfAnswer:
+    """Predicted outcome of one query against the snapshot."""
+
+    query: WhatIfQuery
+    makespan: float                 # predicted joint makespan after change
+    baseline: float                 # incumbent joint makespan
+    job_span: float | None          # changed/added job's own span (None
+                                    # for remove_job)
+    plan: MergePlan | None          # the plan the changed job would run
+    cached: bool = False            # served from the result cache
+
+    @property
+    def delta(self) -> float:
+        """Positive = the change worsens the joint makespan."""
+        return self.makespan - self.baseline
+
+
+class WhatIfServer:
+    """Answer what-if queries against one warm :class:`FleetSnapshot`.
+
+    Single-query methods are conveniences over :meth:`ask`, which is
+    the real surface: it plans every touched job in one ``plan_cases``
+    call, scores every touched job in one ``evaluate_cases`` call, and
+    serves repeats from a snapshot-fingerprint-keyed cache.
+    """
+
+    def __init__(self, snapshot: FleetSnapshot, *, cache_size: int = 4096):
+        if cache_size < 1:
+            raise ValueError("cache_size must be >= 1")
+        self.snapshot = snapshot
+        self.cache_size = int(cache_size)
+        self._cache: dict[tuple, WhatIfAnswer] = {}
+
+    # -- query constructors / single-shot conveniences -------------------
+
+    def add_job(self, job: CoJob,
+                plan: MergePlan | None = None) -> WhatIfAnswer:
+        """Admit ``job`` (planned under its own model unless given)."""
+        return self.ask([WhatIfQuery("add_job", job.name, job=job,
+                                     plan=plan)])[0]
+
+    def remove_job(self, name: str) -> WhatIfAnswer:
+        """Drain job ``name``: the survivors' joint makespan."""
+        return self.ask([WhatIfQuery("remove_job", name)])[0]
+
+    def scale_bandwidth(self, name: str, scale: float) -> WhatIfAnswer:
+        """Scale job ``name``'s link bandwidth by ``scale`` (per-byte
+        cost divides by it; startup latency stays), replan, re-score."""
+        return self.ask([WhatIfQuery("scale_bandwidth", name,
+                                     scale=scale)])[0]
+
+    def move_job(self, name: str, model: AllReduceModel) -> WhatIfAnswer:
+        """Place job ``name`` on the path priced by ``model``."""
+        return self.ask([WhatIfQuery("move_job", name, model=model)])[0]
+
+    def resize(self, name: str,
+               specs: Sequence[TensorSpec] | None = None,
+               t_f: float | None = None) -> WhatIfAnswer:
+        """Elastic resize of job ``name``: a new tensor profile and/or
+        forward time (the model stays — pair with ``move_job`` when the
+        resize also changes the fabric share)."""
+        return self.ask([WhatIfQuery(
+            "resize", name,
+            specs=tuple(specs) if specs is not None else None,
+            t_f=t_f)])[0]
+
+    # -- the batched path ------------------------------------------------
+
+    def _query_key(self, q: WhatIfQuery) -> tuple:
+        extra: tuple = ()
+        if q.kind == "add_job":
+            pb, pt = spec_arrays(q.job.specs)
+            extra = (fleet_backend.profile_fingerprint(pb, pt),
+                     _model_key(q.job.model), float(q.job.t_f),
+                     q.job.schedule.label if q.job.schedule is not None
+                     else "bsp",
+                     q.plan.buckets if q.plan is not None else None)
+        elif q.kind == "scale_bandwidth":
+            extra = (float(q.scale),)
+        elif q.kind == "move_job":
+            extra = (_model_key(q.model),)
+        elif q.kind == "resize":
+            if q.specs is not None:
+                pb, pt = spec_arrays(q.specs)
+                extra = (fleet_backend.profile_fingerprint(pb, pt),)
+            extra += (q.t_f,)
+        return (self.snapshot.fingerprint, q.kind, q.name, extra)
+
+    def _validate(self, q: WhatIfQuery) -> None:
+        if q.kind == "add_job":
+            if q.job is None:
+                raise ValueError("add_job needs a CoJob")
+            if any(j.name == q.job.name for j in self.snapshot.jobs):
+                raise ValueError(
+                    f"job {q.job.name!r} already in snapshot")
+            if q.plan is not None and \
+                    q.plan.num_tensors != len(q.job.specs):
+                raise ValueError("add_job plan/specs mismatch")
+            return
+        self.snapshot.job(q.name)       # KeyError -> clean error
+        if q.kind == "remove_job":
+            if len(self.snapshot.jobs) == 1:
+                raise ValueError("cannot drain the last job")
+        elif q.kind == "scale_bandwidth":
+            if q.scale is None or q.scale <= 0:
+                raise ValueError(f"need a positive scale, got {q.scale}")
+        elif q.kind == "move_job":
+            if q.model is None:
+                raise ValueError("move_job needs a cost model")
+        elif q.kind == "resize":
+            if q.specs is None and q.t_f is None:
+                raise ValueError("resize changes nothing")
+        else:
+            raise ValueError(f"unknown query kind {q.kind!r}")
+
+    def ask(self, queries: Sequence[WhatIfQuery]) -> list[WhatIfAnswer]:
+        """Answer a burst of queries: ONE batched plan + ONE batched
+        evaluation for all cache misses together."""
+        t0 = time.perf_counter()
+        snap = self.snapshot
+        baseline_spans = snap.warm()
+        baseline = max(baseline_spans.values())
+        answers: list[WhatIfAnswer | None] = [None] * len(queries)
+        for q in queries:
+            self._validate(q)
+            REGISTRY.counter(
+                "whatif_queries_total",
+                "what-if queries served, by kind").inc(kind=q.kind)
+
+        # cache pass ----------------------------------------------------
+        misses: list[int] = []
+        for qi, q in enumerate(queries):
+            hit = self._cache.get(self._query_key(q))
+            if hit is not None:
+                answers[qi] = dataclasses.replace(hit, cached=True)
+                REGISTRY.counter(
+                    "whatif_cache_hits_total",
+                    "what-if answers served from the snapshot-"
+                    "fingerprint-keyed cache").inc()
+            else:
+                misses.append(qi)
+
+        # plan pass: every touched job of every miss, one kernel call ---
+        # (index into plan_jobs, or None when the query brings/keeps a
+        # plan: add_job with an explicit plan, and remove_job)
+        plan_jobs: list[tuple[CoJob, AllReduceModel]] = []
+        plan_ref: dict[int, int | None] = {}
+        touched: dict[int, tuple[CoJob, AllReduceModel] | None] = {}
+        for qi in misses:
+            q = queries[qi]
+            if q.kind == "add_job":
+                jm = (q.job, q.job.model)
+            elif q.kind == "remove_job":
+                touched[qi] = None
+                plan_ref[qi] = None
+                continue
+            elif q.kind == "scale_bandwidth":
+                job = snap.job(q.name)
+                lin = as_linear(snap.models[q.name])
+                jm = (job, AllReduceModel(a=lin.a, b=lin.b / q.scale,
+                                          name=f"{lin.name}/x{q.scale}"))
+            elif q.kind == "move_job":
+                jm = (snap.job(q.name), q.model)
+            else:                                   # resize
+                job = snap.job(q.name)
+                jm = (dataclasses.replace(
+                    job,
+                    specs=q.specs if q.specs is not None else job.specs,
+                    t_f=q.t_f if q.t_f is not None else job.t_f),
+                    snap.models[q.name])
+            touched[qi] = jm
+            if q.kind == "add_job" and q.plan is not None:
+                plan_ref[qi] = None
+            else:
+                plan_ref[qi] = len(plan_jobs)
+                plan_jobs.append(jm)
+        new_plans = fleet_backend.plan_batched(
+            [(j.specs, m) for j, m in plan_jobs]) if plan_jobs else []
+
+        # score pass: every touched job's case, one kernel call ---------
+        cases = []
+        case_ref: dict[int, int] = {}
+        q_plan: dict[int, MergePlan | None] = {}
+        for qi in misses:
+            q = queries[qi]
+            if touched[qi] is None:                 # remove_job
+                q_plan[qi] = None
+                continue
+            job, model = touched[qi]
+            plan = q.plan if (q.kind == "add_job" and q.plan is not None) \
+                else new_plans[plan_ref[qi]]
+            q_plan[qi] = plan
+            case_ref[qi] = len(cases)
+            cases.append(fleet_backend.make_case(
+                job.specs, plan, model, schedule=job.schedule,
+                t_f=job.t_f))
+        spans = fleet_backend.evaluate_cases(
+            cases, iters=snap.iters).span[:, 0] if cases else []
+
+        # assemble + cache ----------------------------------------------
+        for qi in misses:
+            q = queries[qi]
+            if touched[qi] is None:                 # remove_job
+                mk = max(s for n, s in baseline_spans.items()
+                         if n != q.name)
+                span = None
+            else:
+                span = float(spans[case_ref[qi]])
+                others = (s for n, s in baseline_spans.items()
+                          if n != q.name)
+                mk = max([span, *others])
+            ans = WhatIfAnswer(query=q, makespan=mk, baseline=baseline,
+                               job_span=span, plan=q_plan[qi])
+            answers[qi] = ans
+            if len(self._cache) >= self.cache_size:
+                self._cache.pop(next(iter(self._cache)))
+            self._cache[self._query_key(q)] = ans
+        REGISTRY.histogram(
+            "whatif_latency_seconds",
+            "wall seconds per WhatIfServer.ask call").observe(
+                time.perf_counter() - t0)
+        return answers  # type: ignore[return-value]

@@ -49,11 +49,24 @@ OWN cost model (no cross-job contention — use the engine-backed
 evaluator when contention is the question; this one is for fleet-scale
 seed scoring and placement search, where the model already embeds the
 contention via refit).
+
+**Planning is batched too** (:func:`plan_cases` / :func:`plan_batched`):
+the optimal-bucketing DP of ``core.planner.plan_dp_optimal`` runs as a
+jitted ``lax.scan`` over layers with a leading case axis, so a whole
+batch of (spec prefix-sums, flattened (a, b) model) planning problems —
+a placement search, a co-plan round's responses, a what-if query burst —
+is planned in ONE device call.  The recurrence is the O(L²)-masked
+batched form (each scan step reduces over all L candidate split points),
+which loses to the O(L) incremental ``Planner`` per point but wins on
+throughput from a few dozen cases up (see docs/planner.md "Batched
+planning" for the measured crossover); ``plan_dp_optimal`` and
+``Planner`` stay the per-point oracles.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Mapping, MutableMapping, Sequence
 
 import numpy as np
@@ -63,10 +76,23 @@ from repro.core.coplanner import CoJob, CoObservation, JobObservation
 from repro.core.cost_model import as_linear
 from repro.core.planner import MergePlan, TensorSpec
 from repro.core.simulator import bucket_arrays, spec_arrays
+from repro.obs.metrics import REGISTRY
 from repro.sim.schedules import FleetForm, Schedule
 
 _KIND = {"barrier": 0, "pipelined": 1, "localsgd": 2}
 _BARRIER, _PIPELINED, _LOCALSGD = 0, 1, 2
+
+# the DP's improvement hysteresis — must match plan_dp_optimal's, so a
+# candidate that is smaller only by accumulated-rounding dust does not
+# steal the parent slot from an earlier (bigger-merge) candidate
+_DP_EPS = 1e-15
+
+
+def _kernel_call(kernel: str) -> None:
+    REGISTRY.counter(
+        "fleet_kernel_calls_total",
+        "jitted fleet-kernel invocations, by kernel "
+        "(evaluate = evaluate_cases, plan = plan_cases)").inc(kernel=kernel)
 
 
 def fleet_available() -> bool:
@@ -76,6 +102,71 @@ def fleet_available() -> bool:
     except Exception:  # pragma: no cover - environment-dependent
         return False
     return True
+
+
+def profile_fingerprint(prefix_bytes: np.ndarray,
+                        prefix_t: np.ndarray) -> str:
+    """Content hash of one tensor profile's prefix arrays.
+
+    This is the cache-scoping half of the geometry memo key: two
+    profiles with identical bytes/ready structure may safely share
+    geometry, two that differ never collide — so one cache can span
+    jobs and grids (the old ``plan.buckets``-only key silently returned
+    the wrong geometry if a caller reused a cache across profiles)."""
+    h = hashlib.blake2b(digest_size=16)
+    pb = np.ascontiguousarray(prefix_bytes, dtype=np.float64)
+    pt = np.ascontiguousarray(prefix_t, dtype=np.float64)
+    h.update(len(pb).to_bytes(8, "little"))
+    h.update(pb.tobytes())
+    h.update(pt.tobytes())
+    return h.hexdigest()
+
+
+class GeomCache(MutableMapping):
+    """LRU-bounded geometry memo for :func:`make_case`.
+
+    Keys are ``(profile_fingerprint, plan.buckets)`` so one instance can
+    safely span tensor profiles (jobs, grids, snapshots).  Hits and
+    evictions surface as ``fleet_geom_cache_hits_total`` /
+    ``fleet_geom_cache_evictions_total``."""
+
+    def __init__(self, maxsize: int = 4096):
+        if maxsize < 1:
+            raise ValueError("maxsize must be >= 1")
+        self.maxsize = int(maxsize)
+        self._d: "dict" = {}
+
+    def get(self, key, default=None):
+        try:
+            return self[key]
+        except KeyError:
+            return default
+
+    def __getitem__(self, key):
+        val = self._d.pop(key)         # KeyError propagates on miss
+        self._d[key] = val             # re-insert = move to MRU end
+        REGISTRY.counter(
+            "fleet_geom_cache_hits_total",
+            "make_case geometry-memo hits").inc()
+        return val
+
+    def __setitem__(self, key, val):
+        self._d.pop(key, None)
+        self._d[key] = val
+        while len(self._d) > self.maxsize:
+            self._d.pop(next(iter(self._d)))
+            REGISTRY.counter(
+                "fleet_geom_cache_evictions_total",
+                "make_case geometry-memo LRU evictions").inc()
+
+    def __delitem__(self, key):
+        del self._d[key]
+
+    def __iter__(self):
+        return iter(self._d)
+
+    def __len__(self):
+        return len(self._d)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -109,7 +200,8 @@ def make_case(specs: Sequence[TensorSpec], plan: MergePlan, model, *,
               s_max: np.ndarray | None = None,
               prefix_bytes: np.ndarray | None = None,
               prefix_t: np.ndarray | None = None,
-              cache: MutableMapping | None = None) -> FleetCase:
+              cache: MutableMapping | None = None,
+              profile_key: str | None = None) -> FleetCase:
     """Reduce one scenario to a :class:`FleetCase`.
 
     ``prefix_bytes`` / ``prefix_t`` (``core.simulator.spec_arrays``) can
@@ -119,18 +211,27 @@ def make_case(specs: Sequence[TensorSpec], plan: MergePlan, model, *,
     homogeneous-only (``FleetForm.heterogeneous_ok``).
 
     ``cache`` memoizes the per-plan bucket geometry keyed on
-    ``plan.buckets`` — a grid re-scoring the same few plan structures
-    under many models (every WFBP/single sweep, most DP sweeps) pays the
-    O(num_buckets) Python walk once instead of per point.  The caller
-    must scope one cache to ONE tensor profile (the sweep holds one per
-    grid, :class:`FleetEvaluator` one per job).
+    ``(profile fingerprint, plan.buckets)`` — a grid re-scoring the same
+    few plan structures under many models (every WFBP/single sweep, most
+    DP sweeps) pays the O(num_buckets) Python walk once instead of per
+    point.  One cache may safely span tensor profiles (use
+    :class:`GeomCache` for an LRU-bounded one with hit/eviction
+    counters); ``profile_key`` short-circuits the fingerprint hash when
+    the caller already computed :func:`profile_fingerprint` for this
+    profile — hot loops should.
     """
     form = schedule.fleet_form() if schedule is not None \
         else FleetForm(kind="barrier")
     if form is None:
         raise ValueError(
             f"schedule {schedule!r} has no fleet form — engine only")
-    geom = cache.get(plan.buckets) if cache is not None else None
+    geom = None
+    if cache is not None:
+        if profile_key is None:
+            if prefix_bytes is None or prefix_t is None:
+                prefix_bytes, prefix_t = spec_arrays(specs)
+            profile_key = profile_fingerprint(prefix_bytes, prefix_t)
+        geom = cache.get((profile_key, plan.buckets))
     if geom is None:
         if plan.num_tensors != len(specs):
             raise ValueError(
@@ -140,7 +241,7 @@ def make_case(specs: Sequence[TensorSpec], plan: MergePlan, model, *,
             prefix_bytes, prefix_t = spec_arrays(specs)
         geom = bucket_arrays(prefix_bytes, prefix_t, plan)
         if cache is not None:
-            cache[plan.buckets] = geom
+            cache[(profile_key, plan.buckets)] = geom
     elif prefix_t is None:
         _, prefix_t = spec_arrays(specs)
     bucket_bytes, ready_off = geom
@@ -335,6 +436,7 @@ def evaluate_cases(cases: Sequence[FleetCase],
     import jax.numpy as jnp
     from jax.experimental import enable_x64
     kern = _get_kernel()
+    _kernel_call("evaluate")
     with enable_x64():
         t_iter, span = kern(
             jnp.asarray(bb), jnp.asarray(ro), jnp.asarray(mk),
@@ -346,6 +448,199 @@ def evaluate_cases(cases: Sequence[FleetCase],
             bool((kind == _LOCALSGD).any()))
         return FleetResult(t_iter=np.asarray(t_iter)[:C],
                            span=np.asarray(span)[:C])
+
+
+# ---------------------------------------------------------------------------
+# Batched planning: the optimal-bucketing DP with a leading case axis.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class PlanCase:
+    """One planning problem of the batch: a (spec prefix-sums, flat
+    (a, b) model) pair, reduced to the arrays the plan kernel consumes."""
+
+    pre: np.ndarray                 # [L+1] float64 prefix bytes (exact)
+    ready: np.ndarray               # [L] gradient-ready times (s)
+    a: float                        # flat startup term (s)
+    b: float                        # flat per-byte term (s/B)
+
+    @property
+    def num_tensors(self) -> int:
+        return len(self.ready)
+
+
+def make_plan_case(specs: Sequence[TensorSpec], model, *,
+                   prefix_bytes: np.ndarray | None = None,
+                   prefix_t: np.ndarray | None = None) -> PlanCase:
+    """Reduce one planning problem to a :class:`PlanCase`.
+
+    Any cost model goes through :func:`~repro.core.cost_model.as_linear`
+    (a ``PathModel`` flattens to the (a, b) the DP consumes, exactly like
+    ``plan_dp_optimal``).  ``prefix_bytes`` / ``prefix_t`` from
+    ``core.simulator.spec_arrays`` can be passed when many cases share
+    one tensor profile.
+    """
+    if prefix_bytes is None or prefix_t is None:
+        prefix_bytes, prefix_t = spec_arrays(specs)
+    lin = as_linear(model)
+    return PlanCase(pre=np.asarray(prefix_bytes, dtype=np.float64),
+                    ready=np.asarray(prefix_t, dtype=np.float64),
+                    a=float(lin.a), b=float(lin.b))
+
+
+_PLAN_KERNEL = None
+
+
+def _get_plan_kernel():
+    global _PLAN_KERNEL
+    if _PLAN_KERNEL is not None:
+        return _PLAN_KERNEL
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def kernel(pre, ready, a, b):
+        # pre [Lp+1, C], ready [Lp, C], a/b [C].  One scan step per layer
+        # i; each step reduces over every candidate split point m <= i —
+        # the O(L^2) recurrence of plan_dp_optimal, all cases at once:
+        #
+        #   cand[m] = max(F[m], ready[i]) + T(pre[i+1] - pre[m])
+        #   f[i]    = "first candidate within _DP_EPS of the minimum"
+        #
+        # The winner rule reproduces the host DP's incumbent hysteresis
+        # (`cand < f[i] - 1e-15` keeps the earlier, bigger-merge parent):
+        # mathematically-tied candidates that round differently — the
+        # only near-ties real profiles produce — land inside the window
+        # together, and the earliest index wins on host and device alike.
+        # That also absorbs XLA's fma contraction of a + b*d (~1 ulp vs
+        # the host's separate mul/add), so bucket structure is bit-equal
+        # to plan_dp_optimal even though f may differ in the last ulp.
+        Lp = ready.shape[0]
+        m_idx = jnp.arange(Lp + 1)[:, None]                 # [Lp+1, 1]
+
+        def step(F, xs):
+            r_i, p_i1, i = xs                               # [C], [C], []
+            d = p_i1[None, :] - pre                         # [Lp+1, C]
+            t = jnp.where(d > 0.0, a[None, :] + b[None, :] * d, 0.0)
+            cand = jnp.maximum(F, r_i[None, :]) + t
+            cand = jnp.where(m_idx <= i, cand, jnp.inf)
+            cmin = cand.min(axis=0)                         # [C]
+            win = jnp.argmax(cand < (cmin + _DP_EPS)[None, :], axis=0)
+            f_i = jnp.take_along_axis(cand, win[None, :], axis=0)[0]
+            F = lax.dynamic_update_index_in_dim(F, f_i, i + 1, 0)
+            return F, (f_i, win.astype(jnp.int32))
+
+        F0 = jnp.zeros_like(pre)                            # F[m] = f[m-1]
+        _, (f, win) = lax.scan(step, F0,
+                               (ready, pre[1:], jnp.arange(Lp)))
+        return f, win
+
+    _PLAN_KERNEL = jax.jit(kernel)
+    return _PLAN_KERNEL
+
+
+def _plan_recurrence_numpy(pre: np.ndarray, ready: np.ndarray,
+                           a: np.ndarray, b: np.ndarray):
+    """Portable fallback: the same recurrence, numpy per layer.
+
+    No fma contraction here, so f is bit-identical to the host oracle's
+    arithmetic; the winner rule is the same first-within-eps window."""
+    Lp = ready.shape[0]
+    C = a.shape[0]
+    F = np.zeros((Lp + 1, C), dtype=np.float64)
+    f = np.zeros((Lp, C), dtype=np.float64)
+    win = np.zeros((Lp, C), dtype=np.int32)
+    m_idx = np.arange(Lp + 1)[:, None]
+    for i in range(Lp):
+        d = pre[i + 1][None, :] - pre
+        t = np.where(d > 0.0, a[None, :] + b[None, :] * d, 0.0)
+        cand = np.maximum(F, ready[i][None, :]) + t
+        cand = np.where(m_idx <= i, cand, np.inf)
+        cmin = cand.min(axis=0)
+        w = np.argmax(cand < (cmin + _DP_EPS)[None, :], axis=0)
+        f[i] = cand[w, np.arange(C)]
+        win[i] = w
+        F[i + 1] = f[i]
+    return f, win
+
+
+def plan_cases(cases: Sequence[PlanCase], *,
+               backend: str = "auto") -> list[MergePlan]:
+    """Plan a whole batch of problems in one device call.
+
+    Returns one ``MergePlan`` (strategy ``"dp_batched"``) per case,
+    bucket-for-bucket equal to ``plan_dp_optimal`` on each.  ``L`` and
+    ``C`` are padded to powers of two like :func:`evaluate_cases`
+    (masked candidate rows and benign padding columns, sliced off), so
+    nearby batch shapes reuse one compiled kernel.  ``backend`` is
+    ``"auto"`` (jax when importable), ``"fleet"`` (require jax) or
+    ``"numpy"`` (portable fallback, same recurrence per layer — the
+    right choice for a handful of cases; the device call wins from a
+    few dozen cases up, see docs/planner.md for the crossover).
+    """
+    if backend not in ("auto", "fleet", "numpy"):
+        raise ValueError(f"unknown backend {backend!r}")
+    if backend == "auto":
+        backend = "fleet" if fleet_available() else "numpy"
+    elif backend == "fleet" and not fleet_available():
+        raise RuntimeError(
+            "fleet backend needs jax; use plan_cases(backend='numpy')")
+    cases = list(cases)
+    REGISTRY.counter(
+        "fleet_plan_cases_total",
+        "planning problems solved by the batched DP, by backend").inc(
+            len(cases), backend=backend)
+    live = [(ci, c) for ci, c in enumerate(cases) if c.num_tensors > 0]
+    out: list[MergePlan | None] = [
+        None if c.num_tensors else MergePlan((), "dp_batched")
+        for c in cases]
+    if not live:
+        return [p for p in out if p is not None] if cases else []
+    l_max = max(c.num_tensors for _, c in live)
+    C = len(live)
+    if backend == "fleet":
+        l_pad = 1 << (l_max - 1).bit_length()
+        c_pad = 1 << (C - 1).bit_length()
+    else:
+        l_pad, c_pad = l_max, C
+    pre = np.zeros((l_pad + 1, c_pad), dtype=np.float64)
+    ready = np.zeros((l_pad, c_pad), dtype=np.float64)
+    ab = np.zeros((2, c_pad), dtype=np.float64)
+    for k, (_, c) in enumerate(live):
+        n = c.num_tensors
+        pre[:n + 1, k] = c.pre
+        pre[n + 1:, k] = c.pre[-1]      # padded layers add zero bytes
+        ready[:n, k] = c.ready
+        ab[0, k], ab[1, k] = c.a, c.b
+    if backend == "fleet":
+        import jax.numpy as jnp
+        from jax.experimental import enable_x64
+        kern = _get_plan_kernel()
+        _kernel_call("plan")
+        with enable_x64():
+            _, win = kern(jnp.asarray(pre), jnp.asarray(ready),
+                          jnp.asarray(ab[0]), jnp.asarray(ab[1]))
+        win = np.asarray(win)
+    else:
+        _, win = _plan_recurrence_numpy(pre, ready, ab[0], ab[1])
+    # host-side chain reconstruction: parent[i] = win[i] - 1, NEG = -1
+    for k, (ci, c) in enumerate(live):
+        last, i = [], c.num_tensors - 1
+        while i != -1:
+            last.append(i)
+            i = int(win[i, k]) - 1
+        out[ci] = MergePlan.from_boundaries(c.num_tensors, sorted(last),
+                                            "dp_batched")
+    return out  # type: ignore[return-value]
+
+
+def plan_batched(problems: Sequence[tuple[Sequence[TensorSpec], object]],
+                 *, backend: str = "auto") -> list[MergePlan]:
+    """Convenience face over :func:`plan_cases`: a list of
+    (specs, model) pairs in, one optimal ``MergePlan`` each out, all
+    planned in one device call."""
+    return plan_cases([make_plan_case(s, m) for s, m in problems],
+                      backend=backend)
 
 
 # ---------------------------------------------------------------------------
@@ -378,19 +673,20 @@ class FleetEvaluator:
         self.jobs = tuple(jobs)
         self.iters = int(iters)
         self._static = {}
-        self._geom: dict[str, dict] = {}
+        # one profile-fingerprint-keyed LRU spans every job safely
+        self._geom = GeomCache()
         for j in self.jobs:
             pb, pt = spec_arrays(j.specs)
-            self._static[j.name] = (pb, pt, as_linear(j.model))
-            self._geom[j.name] = {}
+            self._static[j.name] = (pb, pt, as_linear(j.model),
+                                    profile_fingerprint(pb, pt))
         self._sample_cache: dict = {}
 
     def _job_samples(self, job: CoJob, plan: MergePlan):
         key = (job.name, plan.buckets)
         cached = self._sample_cache.get(key)
         if cached is None:
-            pb, pt, lin = self._static[job.name]
-            geom = self._geom[job.name].get(plan.buckets)
+            pb, pt, lin, fp = self._static[job.name]
+            geom = self._geom._d.get((fp, plan.buckets))
             nbytes = geom[0] if geom is not None \
                 else bucket_arrays(pb, pt, plan)
             samples = tuple((int(n), lin.time(n)) for n in nbytes)
@@ -410,11 +706,11 @@ class FleetEvaluator:
         cases = []
         for a in assignments:
             for j in self.jobs:
-                pb, pt, _ = self._static[j.name]
+                pb, pt, _, fp = self._static[j.name]
                 cases.append(make_case(
                     j.specs, a[j.name], j.model, schedule=j.schedule,
                     t_f=j.t_f, prefix_bytes=pb, prefix_t=pt,
-                    cache=self._geom[j.name]))
+                    cache=self._geom, profile_key=fp))
         res = evaluate_cases(cases, iters=self.iters)
         out: list[CoObservation] = []
         nj = len(self.jobs)

@@ -296,7 +296,9 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
     bandwidth, i.e. half the per-byte cost); startup latency ``alpha`` and
     reduction ``gamma`` are unaffected.  Each (N, bandwidth) point gets its
     own merge plan; with the default ``dp_incremental`` strategy all points
-    share one :class:`Planner` and replan incrementally.  ``schedule``
+    share one :class:`Planner` and replan incrementally, and with
+    ``dp_batched`` the WHOLE grid's plans come from one batched DP kernel
+    call (``repro.sim.fleet.plan_cases`` — same optimum, device-side).  ``schedule``
     runs every point under that iteration discipline — through the
     schedule's closed form where exact (see :func:`closed_form_valid`),
     through the engine otherwise.
@@ -360,15 +362,31 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
     plans: dict[tuple[int, float], MergePlan] = {}
     cases: list[fleet_backend.FleetCase] = []
     case_idx: list[tuple[int, int]] = []
-    geom_cache: dict = {}   # plan.buckets -> bucket geometry (one profile)
+    # (profile fingerprint, plan.buckets) -> bucket geometry, LRU-bounded
+    geom_cache = fleet_backend.GeomCache()
+    profile_key = fleet_backend.profile_fingerprint(prefix_bytes, prefix_t)
+
+    def _topo(n, bw):
+        return (topology_factory(n, bw) if topology_factory is not None
+                else FlatTopology(algorithm, n, alpha, beta / bw, gamma))
+
+    batched_plans: dict[tuple[int, float], MergePlan] = {}
+    if strategy == "dp_batched":
+        # plan the WHOLE grid in one batched-DP call: every (N, bandwidth)
+        # point shares this profile's prefix sums, only (a, b) varies
+        points = [(n, bw) for n in grid.n_workers
+                  for bw in grid.bandwidth_scales]
+        pcases = [fleet_backend.make_plan_case(
+                      specs, _topo(n, bw).linear_model(),
+                      prefix_bytes=prefix_bytes, prefix_t=prefix_t)
+                  for n, bw in points]
+        batched_plans = dict(zip(points, fleet_backend.plan_cases(pcases)))
 
     for ni, n in enumerate(grid.n_workers):
         workers = workers_all[:n]
         s_max = scale_table[:, :, n - 1]
         for bi, bw in enumerate(grid.bandwidth_scales):
-            topo = (topology_factory(n, bw) if topology_factory is not None
-                    else FlatTopology(algorithm, n, alpha, beta / bw,
-                                      gamma))
+            topo = _topo(n, bw)
             model = topo.linear_model()
             if strategy == "dp_incremental":
                 if shared is None:
@@ -376,6 +394,8 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
                     plan = shared.plan()
                 else:
                     plan = shared.replan(model)
+            elif strategy == "dp_batched":
+                plan = batched_plans[(n, bw)]
             else:
                 plan = planner.make_plan(strategy, specs, model)
             plans[(n, bw)] = plan
@@ -384,7 +404,8 @@ def run_sweep(specs: Sequence[TensorSpec], t_f: float, grid: SweepGrid, *,
                 cases.append(fleet_backend.make_case(
                     specs, plan, model, schedule=schedule, t_f=t_f,
                     s_max=s_max, prefix_bytes=prefix_bytes,
-                    prefix_t=prefix_t, cache=geom_cache))
+                    prefix_t=prefix_t, cache=geom_cache,
+                    profile_key=profile_key))
                 case_idx.append((ni, bi))
             elif fast:
                 bucket_bytes, ready_off = bucket_arrays(

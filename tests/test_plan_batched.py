@@ -1,0 +1,142 @@
+"""Deterministic batched-planner + geometry-cache tests (no hypothesis;
+the numpy backend keeps most of them alive without jax)."""
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import AllReduceModel
+from repro.core.planner import (MergePlan, Planner, TensorSpec, make_plan,
+                                plan_dp_optimal)
+from repro.core.simulator import spec_arrays
+from repro.obs.metrics import REGISTRY
+from repro.sim import fleet
+
+MODEL = AllReduceModel(a=1e-4, b=5e-10)
+
+
+def _specs(sizes, t_b=1e-4):
+    return [TensorSpec(f"t{i}", s, t_b) for i, s in enumerate(sizes)]
+
+
+def _backends():
+    return ("fleet", "numpy") if fleet.fleet_available() else ("numpy",)
+
+
+def test_plan_cases_empty_batch():
+    assert fleet.plan_cases([]) == []
+
+
+@pytest.mark.parametrize("backend", _backends())
+def test_plan_cases_zero_tensor_job(backend):
+    """An L=0 problem plans host-side to the empty plan; its batch-mates
+    are unaffected."""
+    specs = _specs([100, 200, 300])
+    got = fleet.plan_batched([([], MODEL), (specs, MODEL)],
+                             backend=backend)
+    assert got[0].buckets == ()
+    assert got[0].strategy == "dp_batched"
+    assert got[1].buckets == plan_dp_optimal(specs, MODEL).buckets
+
+
+@pytest.mark.parametrize("backend", _backends())
+def test_plan_cases_single_layer(backend):
+    got = fleet.plan_batched([(_specs([1 << 20]), MODEL)],
+                             backend=backend)[0]
+    assert got.buckets == ((0,),)
+
+
+@pytest.mark.parametrize("backend", _backends())
+def test_plan_cases_all_zero_bytes(backend):
+    """Zero-byte tensors cost nothing to merge — the oracle rides every
+    tie toward bigger merges, and the kernel must follow."""
+    specs = _specs([0, 0, 0, 0])
+    got = fleet.plan_batched([(specs, MODEL)], backend=backend)[0]
+    assert got.buckets == plan_dp_optimal(specs, MODEL).buckets
+
+
+def test_make_plan_dispatches_dp_batched():
+    specs = _specs([1 << 10, 1 << 22, 64, 1 << 18, 1 << 5])
+    got = make_plan("dp_batched", specs, MODEL)
+    assert got.strategy == "dp_batched"
+    assert got.buckets == plan_dp_optimal(specs, MODEL).buckets
+
+
+def test_plan_cases_counts_metrics():
+    before = REGISTRY.snapshot()
+    fleet.plan_batched([(_specs([1, 2, 3]), MODEL)], backend="numpy")
+    delta = REGISTRY.snapshot().delta(before)
+    assert delta.value("fleet_plan_cases_total", backend="numpy") == 1
+
+
+def test_plan_cases_matches_planner_t_iter():
+    """Cross-strategy sanity: dp_batched and the O(L) incremental
+    planner may tie-break differently, but simulate() to the same
+    t_iter (the repo-wide equality idiom)."""
+    from repro.core.simulator import simulate
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        specs = _specs(rng.integers(1, 1 << 22, size=12).tolist(),
+                       t_b=5e-5)
+        batched = fleet.plan_batched([(specs, MODEL)],
+                                     backend="numpy")[0]
+        inc = Planner(specs, MODEL).plan()
+        assert simulate(specs, batched, MODEL).t_iter == \
+            pytest.approx(simulate(specs, inc, MODEL).t_iter, rel=1e-9)
+
+
+# -- geometry cache ------------------------------------------------------
+
+
+def test_profile_fingerprint_distinguishes_profiles():
+    a = spec_arrays(_specs([1, 2, 3]))
+    b = spec_arrays(_specs([1, 2, 4]))
+    assert fleet.profile_fingerprint(*a) == fleet.profile_fingerprint(*a)
+    assert fleet.profile_fingerprint(*a) != fleet.profile_fingerprint(*b)
+
+
+def test_geom_cache_lru_and_counters():
+    cache = fleet.GeomCache(maxsize=2)
+    before = REGISTRY.snapshot()
+    cache["a"] = 1
+    cache["b"] = 2
+    assert cache["a"] == 1            # refresh: "a" is now most recent
+    cache["c"] = 3                    # evicts "b", not "a"
+    assert "b" not in cache
+    assert cache["a"] == 1 and cache["c"] == 3
+    delta = REGISTRY.snapshot().delta(before)
+    assert delta.value("fleet_geom_cache_hits_total") == 3
+    assert delta.value("fleet_geom_cache_evictions_total") == 1
+    assert len(cache) == 2
+
+
+def test_make_case_profile_key_shares_geometry():
+    """Two make_case calls for the same profile+plan share one cache
+    entry under an explicit profile_key — and a DIFFERENT profile with
+    the same plan shape must not collide (the PR-9 footgun)."""
+    specs_a = _specs([100, 200, 300, 400])
+    specs_b = _specs([101, 200, 300, 400])
+    plan = MergePlan(((0, 1), (2, 3)))
+    cache = fleet.GeomCache()
+    ka = fleet.profile_fingerprint(*spec_arrays(specs_a))
+    kb = fleet.profile_fingerprint(*spec_arrays(specs_b))
+    ca1 = fleet.make_case(specs_a, plan, MODEL, cache=cache, profile_key=ka)
+    ca2 = fleet.make_case(specs_a, plan, MODEL, cache=cache, profile_key=ka)
+    cb = fleet.make_case(specs_b, plan, MODEL, cache=cache, profile_key=kb)
+    assert ca1.bucket_bytes is ca2.bucket_bytes
+    assert cb.bucket_bytes is not ca1.bucket_bytes
+    assert float(cb.bucket_bytes[0]) != float(ca1.bucket_bytes[0])
+
+
+def test_make_case_fingerprints_when_key_omitted():
+    """Without an explicit profile_key the key is derived from the
+    prefix arrays — same-shape different-content profiles stay apart."""
+    specs_a = _specs([100, 200])
+    specs_b = _specs([150, 150])
+    plan = MergePlan(((0, 1),))
+    cache = fleet.GeomCache()
+    ca = fleet.make_case(specs_a, plan, MODEL, cache=cache)
+    cb = fleet.make_case(specs_b, plan, MODEL, cache=cache)
+    assert len(cache) == 2              # no collision despite equal shape
+    assert ca.bucket_bytes is not cb.bucket_bytes
+    again = fleet.make_case(specs_a, plan, MODEL, cache=cache)
+    assert again.bucket_bytes is ca.bucket_bytes

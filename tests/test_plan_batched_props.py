@@ -1,0 +1,105 @@
+"""Batched-planner property tests: the jitted DP kernel must be
+bucket-bit-equal to the exact Python oracle on arbitrary problems, and
+its answers must never depend on batch-mates or backend.  Skipped
+without the real hypothesis package (and without jax)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+pytest.importorskip("jax", reason="fleet kernel needs jax")
+
+import hypothesis  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
+
+from repro.core.coplanner import CoPlanner, coplan  # noqa: E402
+from repro.core.cost_model import (AllReduceModel, PathModel,  # noqa: E402
+                                   PathPhase)
+from repro.core.planner import TensorSpec, plan_dp_optimal  # noqa: E402
+from repro.sim.coplan_profiles import make_fleet_jobs  # noqa: E402
+from repro.sim.fleet import (FleetEvaluator, make_plan_case,  # noqa: E402
+                             plan_batched, plan_cases)
+
+
+def _random_problem(rng):
+    """A random planning problem: ragged L (1 included), zero-byte
+    tensors allowed, occasionally a PathModel (flattened by the kernel
+    entry point)."""
+    L = int(rng.integers(1, 24))
+    specs = [TensorSpec(f"t{i}", int(rng.integers(0, 1 << 22)),
+                        float(rng.uniform(0, 5e-3))) for i in range(L)]
+    if rng.integers(0, 4) == 0:
+        model = PathModel((
+            PathPhase("ici", float(rng.uniform(0, 1e-3)),
+                      float(rng.uniform(1e-11, 5e-9))),
+            PathPhase("dcn", float(rng.uniform(0, 1e-3)),
+                      float(rng.uniform(1e-11, 5e-9)))))
+    else:
+        model = AllReduceModel(float(rng.uniform(0, 2e-3)),
+                               float(rng.uniform(1e-11, 1e-8)))
+    return specs, model
+
+
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_plan_batched_matches_dp_oracle(seed):
+    """Bucket-bit-equality with plan_dp_optimal on a random ragged
+    batch, both backends — zero-byte tensors, L=1 problems and
+    PathModel flattening included."""
+    rng = np.random.default_rng(seed)
+    problems = [_random_problem(rng) for _ in range(int(rng.integers(1, 8)))]
+    refs = [plan_dp_optimal(s, m) for s, m in problems]
+    for backend in ("fleet", "numpy"):
+        got = plan_batched(problems, backend=backend)
+        for g, r in zip(got, refs):
+            assert g.buckets == r.buckets, (backend, g.buckets, r.buckets)
+            assert g.strategy == "dp_batched"
+
+
+@hypothesis.given(st.integers(0, 10_000))
+@hypothesis.settings(max_examples=10, deadline=None)
+def test_plan_batched_padding_invariance(seed):
+    """A problem's plan never depends on its batch-mates: planning it
+    alone (small L/C padding) equals planning it beside a much longer
+    filler (large padding)."""
+    rng = np.random.default_rng(seed)
+    problems = [_random_problem(rng) for _ in range(3)]
+    filler_specs = [TensorSpec(f"b{i}", 1 << 12, 1e-4) for i in range(40)]
+    filler = make_plan_case(filler_specs, AllReduceModel(1e-4, 1e-9))
+    cases = [make_plan_case(s, m) for s, m in problems]
+    batched = plan_cases(cases + [filler])
+    for c, together in zip(cases, batched):
+        alone = plan_cases([c])[0]
+        assert together.buckets == alone.buckets
+
+
+@hypothesis.given(st.integers(0, 200))
+@hypothesis.settings(max_examples=5, deadline=None)
+def test_batched_coplanner_matches_sequential(seed):
+    """response_mode='batched' must be bit-equal whether candidates are
+    scored through the evaluator's one-call .batch hook or one at a
+    time (the hook hidden behind a lambda)."""
+    jobs = make_fleet_jobs(6, seed=seed)
+    ev = FleetEvaluator(jobs, iters=4)
+    res_b = coplan(jobs, ev, max_rounds=4, response_mode="batched")
+    res_s = coplan(jobs, lambda p: ev(p), max_rounds=4,
+                   response_mode="batched")
+    assert res_b.makespan == res_s.makespan
+    assert {n: p.buckets for n, p in res_b.plans.items()} == \
+        {n: p.buckets for n, p in res_s.plans.items()}
+
+
+@hypothesis.given(st.integers(0, 200))
+@hypothesis.settings(max_examples=5, deadline=None)
+def test_batched_coplanner_keeps_seed_guarantee(seed):
+    """Batched best-response never loses to the static seed plans, and
+    its round-0 batched-DP plans match the per-job oracle."""
+    jobs = make_fleet_jobs(5, seed=seed)
+    ev = FleetEvaluator(jobs, iters=4)
+    res = CoPlanner(jobs, ev, max_rounds=3, response_mode="batched").run()
+    seed_best = min(r.makespan for r in res.rounds if r.kind == "seed")
+    assert res.makespan <= seed_best + 1e-12
+    round0 = next(r for r in res.rounds if r.kind == "response")
+    for j in jobs:
+        ref = plan_dp_optimal(list(j.specs), j.model)
+        assert round0.plans[j.name].buckets == ref.buckets

@@ -1,0 +1,196 @@
+"""What-if serving tests: snapshot lifecycle, every query kind against
+a hand-computed oracle, cache/fingerprint isolation, obs counters."""
+
+import dataclasses
+
+import pytest
+
+from repro.core.coplanner import CoJob, coplan
+from repro.core.cost_model import AllReduceModel, as_linear
+from repro.core.planner import MergePlan, TensorSpec, plan_dp_optimal
+from repro.core.simulator import simulate
+from repro.obs.metrics import REGISTRY
+from repro.serve.whatif import FleetSnapshot, WhatIfQuery, WhatIfServer
+from repro.sim.fleet import FleetEvaluator
+
+
+def _job(name, sizes, a=1e-4, b=5e-10, t_f=1e-3):
+    specs = tuple(TensorSpec(f"{name}.t{i}", s, 1e-4)
+                  for i, s in enumerate(sizes))
+    return CoJob(name=name, specs=specs, t_f=t_f,
+                 model=AllReduceModel(a=a, b=b, name=f"{name}.link"))
+
+
+def _jobs():
+    return [_job("a", [1 << 20, 1 << 18, 1 << 16]),
+            _job("b", [1 << 22, 1 << 10], a=2e-4, b=1e-9),
+            _job("c", [1 << 12] * 5, a=5e-5, b=2e-10)]
+
+
+def _span(job, model, iters=8, plan=None):
+    """The per-job oracle the server must agree with: DP plan under the
+    model, iters * simulated t_iter."""
+    plan = plan or plan_dp_optimal(list(job.specs), model)
+    return iters * simulate(list(job.specs), plan, model, job.t_f).t_iter
+
+
+def test_snapshot_defaults_and_fingerprint():
+    jobs = _jobs()
+    snap = FleetSnapshot(jobs)
+    for j in jobs:
+        assert snap.plans[j.name].buckets == \
+            plan_dp_optimal(list(j.specs), j.model).buckets
+        assert snap.models[j.name] is j.model
+    assert snap.makespan == pytest.approx(
+        max(_span(j, j.model) for j in jobs), rel=1e-9)
+    # any content change -> a different fingerprint
+    assert FleetSnapshot(jobs).fingerprint == snap.fingerprint
+    assert FleetSnapshot(jobs, iters=4).fingerprint != snap.fingerprint
+    bumped = [dataclasses.replace(jobs[0], t_f=2e-3), *jobs[1:]]
+    assert FleetSnapshot(bumped).fingerprint != snap.fingerprint
+
+
+def test_snapshot_validates():
+    jobs = _jobs()
+    with pytest.raises(ValueError, match=">= 1 job"):
+        FleetSnapshot([])
+    with pytest.raises(ValueError, match="duplicate"):
+        FleetSnapshot([jobs[0], jobs[0]])
+    with pytest.raises(ValueError, match="covers"):
+        FleetSnapshot(jobs, plans={"a": MergePlan(((0, 1),))})
+
+
+def test_snapshot_from_coplan():
+    jobs = _jobs()
+    res = coplan(jobs, FleetEvaluator(jobs, iters=4), max_rounds=2)
+    snap = FleetSnapshot.from_coplan(jobs, res, iters=4)
+    assert snap.plans == dict(res.plans)
+    assert snap.makespan == pytest.approx(res.makespan, rel=1e-9)
+
+
+def test_scale_bandwidth_oracle():
+    jobs = _jobs()
+    server = WhatIfServer(FleetSnapshot(jobs))
+    ans = server.scale_bandwidth("b", 4.0)
+    lin = as_linear(jobs[1].model)
+    faster = AllReduceModel(a=lin.a, b=lin.b / 4.0)
+    want = _span(jobs[1], faster)
+    assert ans.job_span == pytest.approx(want, rel=1e-9)
+    assert ans.plan.buckets == \
+        plan_dp_optimal(list(jobs[1].specs), faster).buckets
+    others = [_span(j, j.model) for j in jobs if j.name != "b"]
+    assert ans.makespan == pytest.approx(max([want, *others]), rel=1e-9)
+    assert ans.baseline == pytest.approx(server.snapshot.makespan)
+    assert ans.delta == ans.makespan - ans.baseline
+
+
+def test_remove_and_add_job():
+    jobs = _jobs()
+    server = WhatIfServer(FleetSnapshot(jobs))
+    gone = server.remove_job("b")
+    assert gone.job_span is None and gone.plan is None
+    assert gone.makespan == pytest.approx(
+        max(_span(j, j.model) for j in jobs if j.name != "b"), rel=1e-9)
+
+    new = _job("d", [1 << 21, 1 << 19], a=3e-4)
+    added = server.add_job(new)
+    assert added.job_span == pytest.approx(_span(new, new.model), rel=1e-9)
+    assert added.makespan >= gone.makespan
+    # an explicit plan is honored verbatim, not re-planned
+    fixed = MergePlan(((0,), (1,)))
+    pinned = server.add_job(new, plan=fixed)
+    assert pinned.plan is fixed
+    assert pinned.job_span == pytest.approx(
+        _span(new, new.model, plan=fixed), rel=1e-9)
+
+
+def test_move_and_resize():
+    jobs = _jobs()
+    server = WhatIfServer(FleetSnapshot(jobs))
+    dest = AllReduceModel(a=5e-5, b=1e-10, name="fastpath")
+    moved = server.move_job("a", dest)
+    assert moved.job_span == pytest.approx(_span(jobs[0], dest), rel=1e-9)
+
+    grown = dataclasses.replace(jobs[2], t_f=5e-3)
+    resized = server.resize("c", t_f=5e-3)
+    assert resized.job_span == pytest.approx(
+        _span(grown, grown.model), rel=1e-9)
+    wider = tuple(TensorSpec(f"w{i}", 1 << 16, 1e-4) for i in range(8))
+    reshaped = server.resize("c", specs=wider)
+    assert reshaped.plan.num_tensors == 8
+
+
+def test_validation_errors():
+    jobs = _jobs()
+    server = WhatIfServer(FleetSnapshot(jobs))
+    with pytest.raises(KeyError):
+        server.remove_job("ghost")
+    with pytest.raises(ValueError, match="already in snapshot"):
+        server.add_job(jobs[0])
+    with pytest.raises(ValueError, match="positive scale"):
+        server.scale_bandwidth("a", 0.0)
+    with pytest.raises(ValueError, match="changes nothing"):
+        server.resize("a")
+    with pytest.raises(ValueError, match="plan/specs mismatch"):
+        server.add_job(_job("d", [1, 2, 3]), plan=MergePlan(((0,),)))
+    with pytest.raises(ValueError, match="unknown query kind"):
+        server.ask([WhatIfQuery("teleport", "a")])
+    solo = WhatIfServer(FleetSnapshot(jobs[:1]))
+    with pytest.raises(ValueError, match="last job"):
+        solo.remove_job("a")
+
+
+def test_cache_hits_and_counters():
+    jobs = _jobs()
+    server = WhatIfServer(FleetSnapshot(jobs))
+    before = REGISTRY.snapshot()
+    first = server.scale_bandwidth("a", 2.0)
+    again = server.scale_bandwidth("a", 2.0)
+    assert not first.cached and again.cached
+    assert again.makespan == first.makespan
+    delta = REGISTRY.snapshot().delta(before)
+    assert delta.value("whatif_queries_total", kind="scale_bandwidth") == 2
+    assert delta.value("whatif_cache_hits_total") == 1
+    assert delta.hist("whatif_latency_seconds")["count"] == 2
+
+
+def test_cache_keys_include_snapshot_fingerprint():
+    """The same server object over a DIFFERENT snapshot must miss: keys
+    embed the fleet fingerprint, so answers never leak across states."""
+    jobs = _jobs()
+    s1 = WhatIfServer(FleetSnapshot(jobs))
+    a1 = s1.scale_bandwidth("a", 2.0)
+    bumped = [dataclasses.replace(jobs[0], t_f=0.5), *jobs[1:]]
+    s2 = WhatIfServer(FleetSnapshot(bumped))
+    s2._cache = s1._cache               # share the physical cache
+    a2 = s2.scale_bandwidth("a", 2.0)
+    assert not a2.cached
+    assert a2.makespan != a1.makespan
+
+
+def test_cache_bound():
+    server = WhatIfServer(FleetSnapshot(_jobs()), cache_size=2)
+    for k in range(4):
+        server.scale_bandwidth("a", 2.0 + k)
+    assert len(server._cache) == 2
+    with pytest.raises(ValueError, match="cache_size"):
+        WhatIfServer(FleetSnapshot(_jobs()), cache_size=0)
+
+
+def test_burst_mixes_kinds():
+    """One ask() with every query kind answers each one exactly as the
+    corresponding single-shot call does."""
+    jobs = _jobs()
+    new = _job("d", [1 << 15])
+    queries = [WhatIfQuery("scale_bandwidth", "a", scale=2.0),
+               WhatIfQuery("remove_job", "b"),
+               WhatIfQuery("move_job", "c",
+                           model=AllReduceModel(a=1e-5, b=1e-10)),
+               WhatIfQuery("resize", "a", t_f=9e-3),
+               WhatIfQuery("add_job", "d", job=new)]
+    burst = WhatIfServer(FleetSnapshot(jobs)).ask(queries)
+    fresh = WhatIfServer(FleetSnapshot(jobs))
+    singles = [fresh.ask([q])[0] for q in queries]
+    for b, s in zip(burst, singles):
+        assert b.makespan == s.makespan
+        assert b.job_span == s.job_span
